@@ -1,0 +1,39 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import csv
+import io
+import time
+from pathlib import Path
+
+import jax
+
+OUT_DIR = Path("experiments/benchmarks")
+
+
+def timed(fn, *args, repeats: int = 1, **kwargs):
+    """Run fn once for compile, then time `repeats` executions."""
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def write_csv(name: str, header, rows):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.csv"
+    with path.open("w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The scaffold's contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.1f},{derived}")

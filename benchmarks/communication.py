@@ -1,0 +1,62 @@
+"""Paper Fig. 6: testing error of DMTL-ELM vs its communication load
+relative to DNSP, over L in {100..300} and k in {25, 50, 100}.
+
+Communication model (paper §IV-C): DMTL-ELM broadcasts U_t (L x r) per
+iteration -> load ratio vs DNSP is 2 k L / ((r + 1) n) where n is the input
+dimension (DNSP sends one n-vector per worker per round, r rounds + final)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import dnsp_fit, sp_predict
+from repro.configs.paper import dmtl_cfg, usps_like
+from repro.core import dmtl_elm_fit, make_feature_map, star
+from repro.data.synthetic import classification_error, multitask_classification
+
+from benchmarks.common import emit, write_csv
+
+
+def run():
+    setup = usps_like()
+    g = star(setup.m)
+    data = multitask_classification(
+        jax.random.PRNGKey(0), m=setup.m, n_train=setup.n_train,
+        n_test=setup.n_test, n_in=setup.n_in, n_cls=setup.n_cls,
+        class_sep=setup.class_sep, noise=setup.noise,
+        latent_r=setup.latent_r,
+    )
+    # DNSP reference point
+    U, A = dnsp_fit(data.X_train, data.Y_train, r=setup.r, lam=setup.mu)
+    err_dnsp = float(classification_error(
+        sp_predict(U, A, data.X_test), data.Y_test))
+
+    from benchmarks.generalization import normalize_features
+
+    rows = []
+    for L in (100, 150, 200, 250, 300):
+        fmap = make_feature_map(jax.random.PRNGKey(100), n_in=setup.n_in,
+                                L=L, activation="sigmoid")
+        H_tr = jax.vmap(fmap)(data.X_train)
+        H_te = jax.vmap(fmap)(data.X_test)
+        H_tr, H_te = normalize_features(H_tr, H_te)
+        for k in (25, 50, 100):
+            cfg = dataclasses.replace(dmtl_cfg(setup), iters=k)
+            st, _ = dmtl_elm_fit(H_tr, data.Y_train, g, cfg)
+            err = float(classification_error(
+                jnp.einsum("mnl,mlr,mrd->mnd", H_te, st.U, st.A),
+                data.Y_test))
+            ratio = 2 * k * L / ((setup.r + 1) * setup.n_in)
+            rows.append([L, k, ratio, err, err_dnsp])
+    write_csv("fig6_communication",
+              ["L", "k", "comm_ratio_vs_dnsp", "dmtl_err_pct",
+               "dnsp_err_pct"], rows)
+    best = min(rows, key=lambda r: r[3])
+    emit("fig6/tradeoff", 0.0,
+         f"dnsp_err={err_dnsp:.2f};best_dmtl_err={best[3]:.2f}"
+         f"@ratio={best[2]:.0f};k25_worse_than_dnsp="
+         f"{all(r[3] >= err_dnsp for r in rows if r[1] == 25)}")

@@ -1,0 +1,146 @@
+"""Paper Table I / Fig. 5: testing error and running time for
+Local ELM, MTFL, GO-MTL, MTL-ELM (centralized), DGSP, DNSP, DMTL-ELM and
+FO-DMTL-ELM on digits-like multi-task classification.
+
+USPS/MNIST are unavailable offline; the synthetic stand-ins preserve the
+structural premise (10 global classes in a shared low-dim subspace, 10 tasks
+x 3 random classes, 90/45 train/test per task; input dim 64 "USPS" / 87
+"MNIST"). Orderings and trends are the validation target, not the paper's
+absolute percentages (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import (
+    dgsp_fit, dnsp_fit, gomtl_fit, gomtl_predict, mtfl_fit, mtfl_predict,
+    sp_predict,
+)
+from repro.configs.paper import dmtl_cfg, mnist_like, mtl_cfg, usps_like
+from repro.core import (
+    dmtl_elm_fit, elm_fit, fo_dmtl_elm_fit, make_feature_map, mtl_elm_fit,
+    star,
+)
+from repro.data.synthetic import classification_error, multitask_classification
+
+from benchmarks.common import emit, timed, write_csv
+
+
+def _features(fmap, X):
+    return jax.vmap(fmap)(X)
+
+
+def normalize_features(H_tr, H_te):
+    """Column-normalize the stacked features (paper §IV-A convention)."""
+    import jax.numpy as jnp
+    m, N, L = H_tr.shape
+    flat = H_tr.reshape(m * N, L)
+    mu, sd = flat.mean(0), flat.std(0) + 1e-6
+    scale = sd * jnp.sqrt(L)
+    return (H_tr - mu) / scale, (H_te - mu) / scale
+
+
+def run_dataset(tag: str, setup, L: int, seeds=(0, 1, 2)):
+    g = star(setup.m)  # paper Fig. 2(b): master-slave for the comparison
+    results = {}
+    for seed in seeds:
+        data = multitask_classification(
+            jax.random.PRNGKey(seed), m=setup.m, n_train=setup.n_train,
+            n_test=setup.n_test, n_in=setup.n_in, n_cls=setup.n_cls,
+            class_sep=setup.class_sep, noise=setup.noise,
+            latent_r=setup.latent_r,
+        )
+        fmap = make_feature_map(
+            jax.random.fold_in(jax.random.PRNGKey(100), seed),
+            n_in=setup.n_in, L=L, activation="sigmoid",
+        )
+        H_tr = _features(fmap, data.X_train)
+        H_te = _features(fmap, data.X_test)
+        H_tr, H_te = normalize_features(H_tr, H_te)
+
+        def record(name, err, dt):
+            results.setdefault(name, []).append((err, dt))
+
+        # Local ELM
+        def local():
+            return jax.vmap(lambda H, T: elm_fit(H, T, setup.mu))(
+                H_tr, data.Y_train)
+        betas, dt = timed(local)
+        err = float(classification_error(
+            jnp.einsum("mnl,mld->mnd", H_te, betas), data.Y_test))
+        record("local_elm", err, dt)
+
+        # MTFL (raw inputs, per the paper's comparison)
+        W, dt = timed(lambda: mtfl_fit(data.X_train, data.Y_train, gamma=10.0))
+        err = float(classification_error(
+            mtfl_predict(W, data.X_test), data.Y_test))
+        record("mtfl", err, dt)
+
+        # GO-MTL
+        (Lm, S), dt = timed(lambda: gomtl_fit(
+            data.X_train, data.Y_train, k=setup.r, lam_s=0.05))
+        err = float(classification_error(
+            gomtl_predict(Lm, S, data.X_test), data.Y_test))
+        record("go_mtl", err, dt)
+
+        # MTL-ELM
+        (st, _), dt = timed(lambda: mtl_elm_fit(H_tr, data.Y_train,
+                                                mtl_cfg(setup)))
+        err = float(classification_error(
+            jnp.einsum("mnl,lr,mrd->mnd", H_te, st.U, st.A), data.Y_test))
+        record("mtl_elm", err, dt)
+
+        # DGSP / DNSP (master-slave subspace pursuit, raw inputs)
+        (U, A), dt = timed(lambda: dgsp_fit(data.X_train, data.Y_train,
+                                            r=setup.r, lam=setup.mu))
+        err = float(classification_error(
+            sp_predict(U, A, data.X_test), data.Y_test))
+        record("dgsp", err, dt)
+        (U, A), dt = timed(lambda: dnsp_fit(data.X_train, data.Y_train,
+                                            r=setup.r, lam=setup.mu))
+        err = float(classification_error(
+            sp_predict(U, A, data.X_test), data.Y_test))
+        record("dnsp", err, dt)
+
+        # DMTL-ELM / FO-DMTL-ELM
+        (st, _), dt = timed(lambda: dmtl_elm_fit(H_tr, data.Y_train, g,
+                                                 dmtl_cfg(setup)))
+        err = float(classification_error(
+            jnp.einsum("mnl,mlr,mrd->mnd", H_te, st.U, st.A), data.Y_test))
+        record("dmtl_elm", err, dt)
+        (st, _), dt = timed(lambda: fo_dmtl_elm_fit(
+            H_tr, data.Y_train, g, dmtl_cfg(setup, first_order=True)))
+        err = float(classification_error(
+            jnp.einsum("mnl,mlr,mrd->mnd", H_te, st.U, st.A), data.Y_test))
+        record("fo_dmtl_elm", err, dt)
+
+    rows = []
+    for name, vals in results.items():
+        errs = [v[0] for v in vals]
+        dts = [v[1] for v in vals]
+        rows.append([tag, name, np.mean(errs), np.std(errs), np.mean(dts)])
+        emit(f"table1/{tag}/{name}", np.mean(dts) * 1e6,
+             f"test_error_pct={np.mean(errs):.2f}+-{np.std(errs):.2f}")
+    return rows
+
+
+def run_fig5(setup, seeds=(0, 1)):
+    """Fig. 5: error vs hidden width L for the ELM-based methods."""
+    rows = []
+    for L in (50, 100, 150, 200, 250, 300):
+        sub = run_dataset(f"usps_L{L}", setup, L, seeds=seeds)
+        for r in sub:  # r = [tag, method, err_mean, err_std, seconds]
+            if r[1] in ("local_elm", "mtl_elm", "dmtl_elm", "fo_dmtl_elm"):
+                rows.append([L] + r[1:])
+    write_csv("fig5_width_sweep",
+              ["L", "method", "err_mean", "err_std", "seconds"], rows)
+
+
+def run():
+    rows = run_dataset("usps", usps_like(), L=300)
+    rows += run_dataset("mnist", mnist_like(), L=300)
+    write_csv("table1_generalization",
+              ["dataset", "method", "err_mean", "err_std", "seconds"], rows)

@@ -1,0 +1,47 @@
+"""Kernel microbench: interpret-mode correctness + host-timing of the
+pure-JAX reference paths (the TPU timings are dry-run territory)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.swa.ops import swa_attention
+from repro.kernels.swa.ref import swa_ref
+
+from benchmarks.common import emit, timed
+
+
+def run():
+    # gram
+    H = jax.random.normal(jax.random.PRNGKey(0), (512, 256))
+    T = jax.random.normal(jax.random.PRNGKey(1), (512, 8))
+    (G, R), dt_ref = timed(lambda: gram_ref(H, T), repeats=5)
+    (Gk, Rk), _ = timed(lambda: gram(H, T, block_l=128, block_n=128))
+    err = float(jnp.max(jnp.abs(G - Gk)))
+    emit("kernels/gram", dt_ref * 1e6, f"interp_vs_ref_maxerr={err:.2e}")
+
+    # swa
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 256, 64))
+    ref, dt_ref = timed(lambda: swa_ref(q, k, v, 128), repeats=5)
+    out, _ = timed(lambda: swa_attention(q, k, v, window=128, block_q=64,
+                                         block_k=64))
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("kernels/swa", dt_ref * 1e6, f"interp_vs_ref_maxerr={err:.2e}")
+
+    # rglru
+    la = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5),
+                                            (4, 512, 256)))
+    b = jax.random.normal(jax.random.PRNGKey(6), (4, 512, 256))
+    h0 = jnp.zeros((4, 256))
+    ref, dt_ref = timed(lambda: rglru_scan_ref(la, b, h0), repeats=5)
+    out, _ = timed(lambda: rglru_scan(la, b, h0, block_s=128, block_d=128))
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("kernels/rglru", dt_ref * 1e6, f"interp_vs_ref_maxerr={err:.2e}")

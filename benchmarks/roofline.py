@@ -1,0 +1,57 @@
+"""Roofline bench: aggregates the dry-run artifacts (deliverable g) into the
+EXPERIMENTS.md tables. Requires experiments/dryrun/*.json from
+``python -m repro.launch.dryrun --all``."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit, write_csv
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_results():
+    out = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def run():
+    results = load_results()
+    if not results:
+        emit("roofline/missing", 0.0, "no dryrun artifacts; run dryrun --all")
+        return
+    rows = []
+    for r in results:
+        rf = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], r["chips"],
+            rf["compute_s"], rf["memory_s"], rf["collective_s"],
+            rf["dominant"],
+            rf.get("useful_flops_ratio"),
+            r["memory"]["peak_estimate_bytes"],
+            r["memory"]["peak_ok_16gb"],
+            r["collectives"]["total"],
+        ])
+        if r["mesh"] == "16x16":
+            emit(
+                f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                f"dom={rf['dominant']};compute_s={rf['compute_s']:.3e};"
+                f"memory_s={rf['memory_s']:.3e};"
+                f"collective_s={rf['collective_s']:.3e};"
+                f"peakGB={r['memory']['peak_estimate_bytes']/1e9:.1f}",
+            )
+    write_csv("roofline",
+              ["arch", "shape", "mesh", "chips", "compute_s", "memory_s",
+               "collective_s", "dominant", "useful_flops_ratio",
+               "peak_bytes", "fits_16gb", "collective_bytes"], rows)
+    assigned = [r for r in results if r["shape"] != "dmtl_4k"]
+    extra = [r for r in results if r["shape"] == "dmtl_4k"]
+    n_single = sum(1 for r in assigned if r["mesh"] == "16x16")
+    n_multi = sum(1 for r in assigned if r["mesh"] == "2x16x16")
+    emit("roofline/coverage", 0.0,
+         f"single_pod={n_single}/40;multi_pod={n_multi}/40;"
+         f"dmtl_technique_extra={len(extra)}")

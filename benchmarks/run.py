@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV lines and writes per-figure CSVs to
+experiments/benchmarks/.
+
+  fig3   convergence curves (MTL-ELM / DMTL-ELM / FO-DMTL-ELM)
+  fig4   consensus / accuracy evolution vs the centralized solution
+  table1 generalization vs Local-ELM / MTFL / GO-MTL / DGSP / DNSP
+  fig5   error vs hidden width L (set BENCH_FIG5=1; slower sweep)
+  fig6   communication-vs-accuracy trade-off
+  roofline  aggregated dry-run roofline table (deliverable g)
+  kernels   Pallas-kernel interpret-mode checks vs oracles
+"""
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        communication, consensus, convergence, generalization, kernels,
+        roofline, topology,
+    )
+
+    suites = [
+        ("fig3", convergence.run),
+        ("fig4", consensus.run),
+        ("table1", generalization.run),
+        ("fig6", communication.run),
+        ("topology", topology.run),
+        ("kernels", kernels.run),
+        ("roofline", roofline.run),
+    ]
+    if os.environ.get("BENCH_FIG5"):
+        from repro.configs.paper import usps_like
+        suites.insert(3, ("fig5", lambda: generalization.run_fig5(usps_like())))
+    failed = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{traceback.format_exc(limit=1)!r}",
+                  file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""End-to-end driver: decentralized multi-task learning over a ~100M frozen
+transformer backbone — the paper's technique at framework scale
+(DESIGN.md §3), on a simulated 8-device mesh.
+
+Pipeline (a few hundred "steps" = feature batches + ADMM rounds):
+  1. build a ~100M-param qwen3-style backbone, randomly initialized and
+     frozen (the ELM philosophy: untrained features + analytic heads);
+  2. 8 agents (mesh data axis), each with a private classification task
+     over its own token streams — data never leaves the agent;
+  3. stream batches through the backbone, accumulate per-agent Gram
+     statistics (Pallas `gram` kernel on TPU; jnp path here);
+  4. fit (U_t, A_t) with sharded DMTL-ELM: ring consensus via ppermute;
+  5. compare against Local-ELM heads (no sharing).
+
+Run:  PYTHONPATH=src python examples/decentralized_mtl_backbone.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dmtl_elm import DMTLELMConfig
+from repro.core.heads import (
+    accumulate_stats, fit_head, init_stats, pooled_features,
+)
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_model, param_count
+
+N_AGENTS = 8
+N_CLASSES = 4
+BATCH, SEQ = 16, 64
+N_BATCHES = 12          # feature-accumulation rounds per agent
+ADMM_ITERS = 300
+
+
+def backbone_config():
+    return ModelConfig(
+        name="backbone-100m", family="dense", n_layers=8, d_model=640,
+        n_heads=10, n_kv_heads=5, d_ff=2560, vocab_size=32000,
+        qk_norm=True, dtype="float32",
+    )
+
+
+def make_task_batch(key, task_id, n=BATCH):
+    """Each task: classify which of its private token-distribution modes
+    generated the sequence. Modes share global structure across tasks
+    (same generator family), so the shared subspace U is learnable."""
+    km, kt = jax.random.split(key)
+    labels = jax.random.randint(km, (n,), 0, N_CLASSES)
+    # mode- and task-dependent token band over a shared 64-token alphabet:
+    # each label draws tokens from a narrow band whose center depends on the
+    # (shared) label structure plus a small task-specific rotation.
+    center = 16 * labels + 3 * (task_id % 4)
+    noise = jax.random.randint(kt, (n, SEQ), 0, 8)
+    tokens = (center[:, None] + noise) % 64
+    return tokens.astype(jnp.int32), jax.nn.one_hot(labels, N_CLASSES)
+
+
+def main():
+    cfg = backbone_config()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    print(f"backbone params: {param_count(params)/1e6:.1f}M (frozen)")
+
+    mesh = jax.make_mesh((N_AGENTS,), ("data",))
+    d = cfg.d_model
+
+    stats = init_stats(N_AGENTS, d, N_CLASSES)
+    for b in range(N_BATCHES):
+        keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(1), b),
+                                N_AGENTS)
+        toks, labs = [], []
+        for t in range(N_AGENTS):
+            tok, lab = make_task_batch(keys[t], t)
+            toks.append(tok)
+            labs.append(lab)
+        toks = jnp.stack(toks)      # (m, B, S)
+        labs = jnp.stack(labs)      # (m, B, C)
+        feats = pooled_features(params, cfg, toks)
+        stats = accumulate_stats(stats, feats, labs)
+        print(f"  batch {b+1}/{N_BATCHES}: accumulated "
+              f"{int(stats.n[0])} samples/agent", end="\r")
+    print()
+
+    cfg_admm = DMTLELMConfig(r=8, mu1=1.0, mu2=1.0, tau=2.0, zeta=1.0,
+                             iters=ADMM_ITERS)
+    head, diags = fit_head(stats, mesh, ("data",), cfg_admm)
+    print(f"ADMM consensus primal residual: "
+          f"{float(diags['primal_sq'][0]):.3e} -> "
+          f"{float(diags['primal_sq'][-1]):.3e}")
+
+    # evaluation on fresh data
+    keys = jax.random.split(jax.random.PRNGKey(99), N_AGENTS)
+    toks, labs = [], []
+    for t in range(N_AGENTS):
+        tok, lab = make_task_batch(keys[t], t, n=64)
+        toks.append(tok)
+        labs.append(lab)
+    toks, labs = jnp.stack(toks), jnp.stack(labs)
+    feats = pooled_features(params, cfg, toks)
+
+    pred = head.predict_all(feats)
+    acc_dmtl = float(jnp.mean(
+        jnp.argmax(pred, -1) == jnp.argmax(labs, -1)))
+
+    # Local-ELM heads: per-agent ridge on its own stats only
+    eye = jnp.eye(d)
+    beta = jnp.linalg.solve(stats.G + 1.0 * eye, stats.R)
+    acc_local = float(jnp.mean(
+        jnp.argmax(jnp.einsum("mbl,mld->mbd", feats, beta), -1)
+        == jnp.argmax(labs, -1)))
+
+    print(f"Local-ELM heads accuracy: {acc_local:.3f}")
+    print(f"DMTL-ELM  heads accuracy: {acc_dmtl:.3f}")
+    print("decentralized shared-subspace heads fitted over the mesh ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: the paper's algorithms on a synthetic multi-task problem.
+
+Builds 8 related tasks sharing a low-rank predictive subspace, then fits
+  * Local ELM          (per-task baseline, eq. 4)
+  * MTL-ELM            (centralized, Algorithm 1)
+  * DMTL-ELM           (decentralized consensus ADMM, Algorithm 2)
+  * FO-DMTL-ELM        (first-order variant, Algorithm 3)
+and prints test errors — multi-task sharing should win by a wide margin.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DMTLELMConfig, MTLELMConfig, dmtl_elm_fit, elm_fit, fo_dmtl_elm_fit,
+    make_feature_map, mtl_elm_fit, ring,
+)
+from repro.data.synthetic import multitask_regression
+
+
+def main():
+    m, r = 8, 2
+    H_tr, T_tr, H_te, T_te = multitask_regression(
+        jax.random.PRNGKey(0), m=m, n_train=16, n_test=300, L=64, r=r,
+        noise=0.1,
+    )
+    mu = 0.1
+
+    def mse(pred):
+        return float(jnp.mean((pred - T_te) ** 2))
+
+    # Local ELM
+    betas = jax.vmap(lambda H, T: elm_fit(H, T, mu))(H_tr, T_tr)
+    err_local = mse(jnp.einsum("mnl,mld->mnd", H_te, betas))
+
+    # Centralized MTL-ELM
+    st, objs = mtl_elm_fit(H_tr, T_tr, MTLELMConfig(r=r, mu1=mu, mu2=mu,
+                                                    iters=150))
+    err_mtl = mse(jnp.einsum("mnl,lr,mrd->mnd", H_te, st.U, st.A))
+
+    # Decentralized on a ring of agents
+    cfg = DMTLELMConfig(r=r, mu1=mu, mu2=mu, tau=1.0, zeta=1.0, iters=2000)
+    std, diag = dmtl_elm_fit(H_tr, T_tr, ring(m), cfg)
+    err_dmtl = mse(jnp.einsum("mnl,mlr,mrd->mnd", H_te, std.U, std.A))
+
+    stf, _ = fo_dmtl_elm_fit(H_tr, T_tr, ring(m), cfg)
+    err_fo = mse(jnp.einsum("mnl,mlr,mrd->mnd", H_te, stf.U, stf.A))
+
+    print(f"Local ELM      test MSE: {err_local:.5f}")
+    print(f"MTL-ELM        test MSE: {err_mtl:.5f}  "
+          f"(objective {float(objs[0]):.2f} -> {float(objs[-1]):.2f})")
+    print(f"DMTL-ELM       test MSE: {err_dmtl:.5f}  "
+          f"(consensus residual {float(diag['consensus'][-1]):.2e})")
+    print(f"FO-DMTL-ELM    test MSE: {err_fo:.5f}")
+    assert err_mtl < err_local and err_dmtl < err_local
+    print("multi-task sharing beats local training ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Serving example: batched prefill + decode with KV / ring-buffer /
+recurrent caches across three architecture families, plus the
+continuous-batching engine serving more requests than slots.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_model
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+from repro.serving.steps import generate
+
+
+def main():
+    for arch in ("qwen3-8b", "recurrentgemma-2b", "xlstm-1.3b"):
+        cfg = get_smoke_config(arch)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        B, S, NEW = 4, 32, 16
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                    cfg.vocab_size)
+        t0 = time.perf_counter()
+        out, cache = generate(params, cfg, prompt, max_new=NEW,
+                              max_len=S + NEW)
+        dt = time.perf_counter() - t0
+        assert out.shape == (B, NEW)
+        assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.vocab_size))
+        pos = int(cache["pos"][0])
+        print(f"{arch:22s} generated {NEW} tokens x {B} seqs "
+              f"in {dt:.2f}s (cache pos {pos})")
+    print("batched serving across dense / hybrid / ssm families ✓")
+
+    # continuous batching: 8 ragged requests through 3 slots
+    cfg = get_smoke_config("qwen3-8b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(params, cfg, batch_slots=3, max_len=64)
+    for rid in range(8):
+        plen = 6 + 3 * (rid % 4)
+        prompt = jax.random.randint(jax.random.PRNGKey(rid), (plen,), 0,
+                                    cfg.vocab_size)
+        eng.submit(Request(rid=rid, prompt=prompt, max_new=4 + rid % 3))
+    t0 = time.perf_counter()
+    stats = eng.run()
+    print(f"continuous batching: {stats.completed} requests "
+          f"({stats.decoded_tokens} tokens) in {stats.steps} engine steps, "
+          f"{time.perf_counter() - t0:.2f}s ✓")
+    assert stats.completed == 8
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""LM pretraining example: train a small decoder for a few hundred steps on
+the deterministic synthetic pipeline, with checkpointing, then reload and
+verify the loss matches.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.transformer import init_model, param_count
+from repro.optim import AdamWConfig, adamw_init, cosine_warmup
+from repro.training.steps import loss_fn, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-8b"), name="lm-example", n_layers=3,
+        d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+    )
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    print(f"params: {param_count(params)/1e6:.2f}M")
+
+    opt_cfg = AdamWConfig(lr=cosine_warmup(3e-3, 20, args.steps))
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+
+    losses = []
+    for step in range(args.steps):
+        batch = make_batch(data, step)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        if step % 25 == 0:
+            print(f"step {step:4d}  loss {losses[-1]:.4f}")
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert losses[-1] < losses[0] - 0.5, "training failed to improve"
+
+    tmp = tempfile.mkdtemp()
+    try:
+        save_checkpoint(tmp, args.steps, params, {"arch": cfg.name})
+        restored, meta = load_checkpoint(tmp, params)
+        batch = make_batch(data, args.steps + 1)
+        l1 = float(loss_fn(params, cfg, batch)[0])
+        l2 = float(loss_fn(restored, cfg, batch)[0])
+        assert abs(l1 - l2) < 1e-5
+        print(f"checkpoint round-trip verified (loss {l2:.4f}) ✓")
+    finally:
+        shutil.rmtree(tmp)
+
+
+if __name__ == "__main__":
+    main()

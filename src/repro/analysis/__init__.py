@@ -1,0 +1,1 @@
+from repro.analysis.flops import analytic_cost

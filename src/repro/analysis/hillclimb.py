@@ -1,0 +1,157 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-hillclimb harness (§Perf): lower one (arch, shape) with knob
+overrides and report the roofline terms + peak memory, for fast
+hypothesis -> change -> re-lower -> measure iterations.
+
+Knobs:
+  --microbatches N       gradient accumulation (train shapes)
+  --serve-bf16           serve-path parameters as bf16 arguments
+  --no-seq-shard         disable Megatron-style activation seq sharding
+  --cfg key=value ...    arbitrary ModelConfig overrides (ints/floats/bools)
+  --unrolled             also compile the unrolled-cost variant
+
+Examples:
+  PYTHONPATH=src python -m repro.analysis.hillclimb \
+      --arch llava-next-34b --shape train_4k --microbatches 2
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.flops import analytic_cost
+from repro.configs import get_config
+from repro.launch import shardings as sh
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.shapes import SHAPES, input_specs, variant_for_shape
+from repro.models.transformer import init_model, prefill
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.serving.steps import serve_step
+from repro.training.steps import make_train_step
+
+
+def lower(arch, shape_name, *, multi_pod=False, unroll=False,
+          microbatches=1, serve_bf16=False, cfg_overrides=None):
+    cfg = variant_for_shape(
+        get_config(arch, unroll_cycles=unroll, **(cfg_overrides or {})),
+        SHAPES[shape_name])
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    def cast_tree(tree, dtype):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, dtype)
+            if x.dtype == jnp.float32 else x, tree)
+
+    params_shape = jax.eval_shape(
+        lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+    if serve_bf16 and shape.kind != "train":
+        params_shape = cast_tree(params_shape, jnp.bfloat16)
+    batch = input_specs(cfg, shape)
+
+    with jax.set_mesh(mesh):
+        fsdp = "data" if shape.kind == "train" else None
+        raw = sh.param_specs(params_shape, fsdp=fsdp, mesh=mesh)
+        pspecs = sh.to_named(raw, mesh, params_shape)
+        if shape.kind == "train":
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            ospecs = sh.to_named(sh.opt_specs(opt_shape, raw), mesh, opt_shape)
+            bspecs = sh.to_named(sh.batch_specs(batch), mesh, batch)
+            step = make_train_step(cfg, AdamWConfig(),
+                                   microbatches=microbatches)
+            lowered = jax.jit(step, in_shardings=(pspecs, ospecs, bspecs),
+                              out_shardings=(pspecs, ospecs, None)
+                              ).lower(params_shape, opt_shape, batch)
+        elif shape.kind == "prefill":
+            bspecs = sh.to_named(sh.batch_specs(batch), mesh, batch)
+
+            def prefill_step(params, batch):
+                kwargs = {k: v for k, v in batch.items() if k != "tokens"}
+                return prefill(params, cfg, batch["tokens"], shape.seq,
+                               **kwargs)
+
+            cache_shape = jax.eval_shape(prefill_step, params_shape, batch)[1]
+            cspecs = sh.to_named(sh.cache_specs(cache_shape, cfg), mesh,
+                                 cache_shape)
+            lowered = jax.jit(prefill_step, in_shardings=(pspecs, bspecs),
+                              out_shardings=(None, cspecs)
+                              ).lower(params_shape, batch)
+        else:
+            cspecs = sh.to_named(sh.cache_specs(batch["cache"], cfg), mesh,
+                                 batch["cache"])
+            tspec = sh.to_named(sh.batch_specs(
+                {"tokens": batch["tokens"]}), mesh,
+                {"tokens": batch["tokens"]})["tokens"]
+            lowered = jax.jit(
+                lambda p, t, c: serve_step(p, cfg, t, c),
+                in_shardings=(pspecs, tspec, cspecs),
+                out_shardings=(None, cspecs),
+            ).lower(params_shape, batch["tokens"], batch["cache"])
+        t0 = time.time()
+        compiled = lowered.compile()
+        dt = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    n_chips = mesh.devices.size
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes)
+    ana = analytic_cost(cfg, shape)
+    return {
+        "compile_s": round(dt, 1),
+        "peak_gb": peak / 1e9,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "arg_gb": mem.argument_size_in_bytes / 1e9,
+        "compute_s": max(float(cost.get("flops", 0)),
+                         ana["flops"] / n_chips) / PEAK_FLOPS_BF16,
+        "memory_s": float(cost.get("bytes accessed", 0)) / HBM_BW,
+        "collective_s": coll["total"] / ICI_BW,
+        "coll_gb": {k: round(v / 1e9, 2) for k, v in coll.items()
+                    if k != "counts" and v},
+        "coll_counts": coll["counts"],
+    }, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--unrolled", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--serve-bf16", action="store_true")
+    ap.add_argument("--cfg", nargs="*", default=[])
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.cfg:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+    result, compiled = lower(
+        args.arch, args.shape, multi_pod=args.multi, unroll=args.unrolled,
+        microbatches=args.microbatches, serve_bf16=args.serve_bf16,
+        cfg_overrides=overrides)
+    if args.save_hlo:
+        with open(args.save_hlo, "w") as f:
+            f.write(compiled.as_text())
+    print(json.dumps(result, indent=2))
+
+
+if __name__ == "__main__":
+    main()

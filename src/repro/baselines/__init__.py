@@ -1,0 +1,12 @@
+"""MTL baselines the paper compares against (Table I / Fig. 5):
+
+  Local ELM — repro.core.elm (per-task, no sharing)
+  MTFL      — convex multi-task feature learning [Argyriou et al., 2008]
+  GO-MTL    — grouping & overlap via sparse latent bases [Kumar & Daume, 2012]
+  DGSP/DNSP — distributed gradient/Newton subspace pursuit
+              [Wang, Kolar & Srebro, 2016], master-slave structure
+"""
+
+from repro.baselines.mtfl import mtfl_fit, mtfl_predict
+from repro.baselines.gomtl import gomtl_fit, gomtl_predict
+from repro.baselines.subspace_pursuit import dgsp_fit, dnsp_fit, sp_predict

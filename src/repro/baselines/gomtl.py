@@ -1,0 +1,58 @@
+"""GO-MTL [8: Kumar & Daume III, ICML 2012] — task grouping and overlap:
+W = L S with shared dictionary L (n x k) and sparse task codes S (k x m).
+
+Alternating optimization:
+  S-step: per-task ISTA (lasso) on fixed L;
+  L-step: ridge least squares on fixed S.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _soft(x, lam):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - lam, 0.0)
+
+
+def gomtl_fit(X, Y, k: int = 4, lam_s: float = 0.1, lam_l: float = 1e-3,
+              iters: int = 40, ista_steps: int = 25, key=None):
+    """X: (m, N, n); Y: (m, N, d). Returns (L (n,k), S (m,k,d))."""
+    m, N, n = X.shape
+    d = Y.shape[-1]
+    key = jax.random.PRNGKey(0) if key is None else key
+    L = jax.random.normal(key, (n, k)) / jnp.sqrt(n)
+    S = jnp.zeros((m, k, d))
+    XtX = jnp.einsum("mni,mnj->mij", X, X)
+    XtY = jnp.einsum("mni,mnd->mid", X, Y)
+
+    def outer(carry, _):
+        L, S = carry
+
+        # S-step: ISTA per task on 1/2||X L s - y||^2 + lam_s ||s||_1
+        G = jnp.einsum("ik,mij,jl->mkl", L, XtX, L)         # (m, k, k)
+        lips = jnp.linalg.eigvalsh(G)[..., -1][:, None, None] + 1e-6
+        R = jnp.einsum("ik,mid->mkd", L, XtY)
+
+        def ista(S, _):
+            grad = jnp.einsum("mkl,mld->mkd", G, S) - R
+            S_new = _soft(S - grad / lips, lam_s / lips)
+            return S_new, None
+
+        S, _ = jax.lax.scan(ista, S, None, length=ista_steps)
+
+        # L-step: vec(L) ridge solve  sum_t (S_t S_t^T kron X_t^T X_t)
+        A = jnp.einsum("mkd,mld->mkl", S, S)                # (m, k, k)
+        K = jnp.einsum("mij,mkl->ikjl", XtX, A).reshape(n * k, n * k)
+        rhs = jnp.einsum("mid,mkd->ik", XtY, S).reshape(-1)
+        K = K + lam_l * jnp.eye(n * k)
+        L_new = jnp.linalg.solve(K, rhs).reshape(n, k)
+        return (L_new, S), None
+
+    (L, S), _ = jax.lax.scan(outer, (L, S), None, length=iters)
+    return L, S
+
+
+def gomtl_predict(L, S, X):
+    return jnp.einsum("mni,ik,mkd->mnd", X, L, S)

@@ -1,0 +1,66 @@
+"""DGSP / DNSP [22: Wang, Kolar, Srebro 2016] — distributed multi-task
+learning with a shared low-dimensional subspace, master-slave structure.
+
+Greedy subspace pursuit: in round j each worker (task) sends the master its
+local descent direction at the current restricted solution (gradient for
+DGSP, Newton for DNSP); the master extracts the dominant left singular
+vector of the stacked directions as the new basis column; workers then
+re-solve their local regression restricted to span(U). r rounds build an
+r-dimensional shared subspace — communication is one n-vector per worker
+per round, the load model used for the paper's Fig. 6 comparison.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _restricted_solve(XU, Y, lam):
+    """Per-task ridge on the projected features. XU: (m, N, j)."""
+    G = jnp.einsum("mnj,mnk->mjk", XU, XU)
+    j = XU.shape[-1]
+    G = G + lam * jnp.eye(j)
+    rhs = jnp.einsum("mnj,mnd->mjd", XU, Y)
+    return jnp.linalg.solve(G, rhs)                      # (m, j, d)
+
+
+def _pursuit(X, Y, r, lam, newton: bool):
+    m, N, n = X.shape
+    d = Y.shape[-1]
+    XtX = jnp.einsum("mni,mnj->mij", X, X)
+    U = jnp.zeros((n, 0))
+    for j in range(r):
+        if j == 0:
+            resid = -Y                                   # w = 0
+        else:
+            XU = jnp.einsum("mni,ij->mnj", X, U)
+            A = _restricted_solve(XU, Y, lam)
+            resid = jnp.einsum("mnj,mjd->mnd", XU, A) - Y
+        grad = jnp.einsum("mni,mnd->mid", X, resid)      # (m, n, d)
+        if newton:
+            H = XtX + lam * jnp.eye(n)[None]
+            grad = jnp.linalg.solve(H, grad)
+        D = grad.transpose(1, 0, 2).reshape(n, m * d)
+        # dominant left singular vector of the stacked directions
+        _, vecs = jnp.linalg.eigh(D @ D.T + 1e-12 * jnp.eye(n))
+        u = vecs[:, -1:][...]
+        if j > 0:
+            u = u - U @ (U.T @ u)                        # re-orthogonalize
+            u = u / jnp.maximum(jnp.linalg.norm(u), 1e-9)
+        U = jnp.concatenate([U, u], axis=1)
+    XU = jnp.einsum("mni,ij->mnj", X, U)
+    A = _restricted_solve(XU, Y, lam)
+    return U, A
+
+
+def dgsp_fit(X, Y, r: int = 10, lam: float = 10.0):
+    return _pursuit(X, Y, r, lam, newton=False)
+
+
+def dnsp_fit(X, Y, r: int = 10, lam: float = 10.0):
+    return _pursuit(X, Y, r, lam, newton=True)
+
+
+def sp_predict(U, A, X):
+    return jnp.einsum("mni,ij,mjd->mnd", X, U, A)

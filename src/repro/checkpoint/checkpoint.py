@@ -1,0 +1,95 @@
+"""Checkpointing: flat path->array .npz archives with pytree-structure and
+step metadata, restoring onto arbitrary shardings.
+
+Layout on disk:
+  <dir>/step_<n>/arrays.npz     flattened leaves keyed by joined tree path
+  <dir>/step_<n>/meta.json      step, keys in order, aux metadata
+
+Restore rebuilds the pytree from a template (``like``) and, when a mesh and
+spec tree are given, ``jax.device_put``s each leaf onto its NamedSharding —
+so a checkpoint written from a single host restores onto the production
+mesh layout without code changes.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> Path:
+    d = Path(directory) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    named = _flatten_with_names(tree)
+    arrays = {name: np.asarray(leaf) for name, leaf in named}
+    np.savez(d / "arrays.npz", **arrays)
+    meta = {"step": step, "keys": [n for n, _ in named],
+            "metadata": metadata or {}}
+    (d / "meta.json").write_text(json.dumps(meta, indent=2))
+    return d
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in d.glob("step_*") if p.is_dir()
+    )
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(directory: str | Path, like: Any, step: Optional[int] = None,
+                    shardings: Optional[Any] = None):
+    """Restore a pytree saved by save_checkpoint.
+
+    like: a pytree (arrays or ShapeDtypeStructs) giving the structure.
+    shardings: optional matching tree of jax.sharding.Sharding to place onto.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = Path(directory) / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    named = _flatten_with_names(like)
+    leaves = []
+    for name, leaf in named:
+        arr = data[name]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {name}: shape {arr.shape} != {leaf.shape}"
+            )
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    )
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    meta = json.loads((d / "meta.json").read_text())
+    return tree, meta

@@ -1,0 +1,32 @@
+"""Architecture registry: the 10 assigned architectures + paper configs."""
+
+from __future__ import annotations
+
+import importlib
+
+_ARCH_MODULES = {
+    "h2o-danube-3-4b": "repro.configs.h2o_danube_3_4b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "gemma-7b": "repro.configs.gemma_7b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str, **overrides):
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.make_config(**overrides)
+
+
+def get_smoke_config(name: str):
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.smoke_config()

@@ -1,0 +1,38 @@
+"""Core: the paper's contribution — (decentralized) multi-task ELM."""
+
+from repro.core.elm import (
+    ELMFeatureMap,
+    elm_fit,
+    elm_objective,
+    elm_predict,
+    make_feature_map,
+)
+from repro.core.graph import Graph, chain, complete, erdos, paper_fig2a, ring, star
+from repro.core.mtl_elm import (
+    MTLELMConfig,
+    MTLELMState,
+    mtl_elm_fit,
+    mtl_elm_predict,
+    mtl_objective,
+)
+from repro.core.dmtl_elm import (
+    DMTLELMConfig,
+    DMTLELMState,
+    augmented_lagrangian,
+    consensus_residual,
+    dmtl_elm_fit,
+    dmtl_elm_predict,
+    dmtl_objective,
+)
+from repro.core.fo_dmtl_elm import fo_dmtl_elm_fit, lipschitz_bound
+from repro.core.sharded_dmtl import dmtl_elm_fit_sharded
+
+__all__ = [
+    "ELMFeatureMap", "elm_fit", "elm_objective", "elm_predict", "make_feature_map",
+    "Graph", "chain", "complete", "erdos", "paper_fig2a", "ring", "star",
+    "MTLELMConfig", "MTLELMState", "mtl_elm_fit", "mtl_elm_predict", "mtl_objective",
+    "DMTLELMConfig", "DMTLELMState", "augmented_lagrangian", "consensus_residual",
+    "dmtl_elm_fit", "dmtl_elm_predict", "dmtl_objective",
+    "fo_dmtl_elm_fit", "lipschitz_bound",
+    "dmtl_elm_fit_sharded",
+]

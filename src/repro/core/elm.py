@@ -1,0 +1,75 @@
+"""Extreme Learning Machine primitives (paper §II-A).
+
+An ELM is a single-hidden-layer feed-forward network whose hidden weights
+``(w_l, b_l)`` are drawn once from a continuous distribution and never
+trained; only the output weights ``beta`` are learned, in closed form
+(eq. 4). ``random_features`` is the map h(X); ``elm_fit`` is Local-ELM,
+the paper's single-task baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvers import ridge_solve
+
+Activation = Callable[[jax.Array], jax.Array]
+
+ACTIVATIONS: dict[str, Activation] = {
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ELMFeatureMap:
+    """Frozen random hidden layer h(X) = g(X W + b), W: (n, L)."""
+
+    W: jax.Array
+    b: jax.Array
+    activation: str = "sigmoid"
+
+    @property
+    def L(self) -> int:
+        return self.W.shape[1]
+
+    def __call__(self, X: jax.Array) -> jax.Array:
+        g = ACTIVATIONS[self.activation]
+        return g(X @ self.W + self.b)
+
+
+def make_feature_map(
+    key: jax.Array, n_in: int, L: int, activation: str = "sigmoid",
+    dist: str = "uniform", dtype=jnp.float32,
+) -> ELMFeatureMap:
+    kw, kb = jax.random.split(key)
+    if dist == "uniform":
+        W = jax.random.uniform(kw, (n_in, L), minval=-1.0, maxval=1.0, dtype=dtype)
+        b = jax.random.uniform(kb, (L,), minval=-1.0, maxval=1.0, dtype=dtype)
+    elif dist == "normal":
+        W = jax.random.normal(kw, (n_in, L), dtype=dtype) / jnp.sqrt(n_in)
+        b = jax.random.normal(kb, (L,), dtype=dtype)
+    else:
+        raise ValueError(f"unknown dist {dist}")
+    return ELMFeatureMap(W=W, b=b, activation=activation)
+
+
+def elm_fit(H: jax.Array, T: jax.Array, mu: float) -> jax.Array:
+    """Local-ELM closed form (eq. 4): beta* = (H^T H + mu I)^-1 H^T T."""
+    return ridge_solve(H, T, mu)
+
+
+def elm_predict(fmap: ELMFeatureMap, beta: jax.Array, X: jax.Array) -> jax.Array:
+    """Paper eq. (5)."""
+    return fmap(X) @ beta
+
+
+def elm_objective(H: jax.Array, T: jax.Array, beta: jax.Array, mu: float) -> jax.Array:
+    """Paper eq. (2)."""
+    return 0.5 * jnp.sum((H @ beta - T) ** 2) + 0.5 * mu * jnp.sum(beta**2)

@@ -1,0 +1,39 @@
+"""FO-DMTL-ELM (paper §III-C, Algorithm 3).
+
+Identical to Algorithm 2 except the U_t-update uses the first-order
+approximation (eq. 23), removing the per-iteration matrix inverse: with
+prox-linear P_t = tau_t I - rho C_t^T C_t the update matrix collapses to
+``tau_t I`` — a scaled gradient step. Convergence needs the stronger
+``tau_t >= L_t + rho m (delta + 1/2) sigma_max - sigma/2`` (Theorem 2).
+
+This module is a thin convenience wrapper over ``dmtl_elm_fit`` with
+``first_order=True``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.dmtl_elm import DMTLELMConfig, DMTLELMState, dmtl_elm_fit
+from repro.core.graph import Graph
+
+
+def fo_dmtl_elm_fit(
+    H: jax.Array, T: jax.Array, g: Graph, cfg: DMTLELMConfig
+) -> tuple[DMTLELMState, dict]:
+    cfg_fo = dataclasses.replace(cfg, first_order=True)
+    return dmtl_elm_fit(H, T, g, cfg_fo)
+
+
+def lipschitz_bound(H: jax.Array, A: jax.Array) -> jax.Array:
+    """Estimate of the block-coordinate Lipschitz constant L_t (Prop. 2):
+    L_t = ||H_t^T H_t|| * ||A_t A_t^T|| (spectral norms), per agent."""
+    import jax.numpy as jnp
+
+    G = jnp.einsum("mnl,mnk->mlk", H, H)
+    M = jnp.einsum("mrd,msd->mrs", A, A)
+    eg = jnp.linalg.eigvalsh(G)[..., -1]
+    em = jnp.linalg.eigvalsh(M)[..., -1]
+    return eg * em

@@ -1,0 +1,125 @@
+"""Consensus graphs for decentralized MTL (paper §III).
+
+The constraint ``sum_t C_t U_t = 0`` is edge-based: for every edge
+``i = (s, e)`` of the undirected connected graph G, ``C_hat_i U = U_s - U_e``.
+``C_t`` is the block-column of agent ``t``; useful identities (used throughout
+the ADMM updates; see DESIGN.md §2):
+
+  C_t^T C_t                  = d_t I            (d_t = degree of agent t)
+  C_t^T sum_{i != t} C_i U_i = -sum_{j in N(t)} U_j
+  C_t^T lambda               = sum_{i: s_i=t} lambda_i - sum_{i: e_i=t} lambda_i
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected connected graph over ``m`` agents with directed edge list."""
+
+    m: int
+    edges: Tuple[Tuple[int, int], ...]  # (s, e) with s != e
+
+    def __post_init__(self):
+        for (s, e) in self.edges:
+            if not (0 <= s < self.m and 0 <= e < self.m and s != e):
+                raise ValueError(f"bad edge {(s, e)} for m={self.m}")
+        if not self._connected():
+            raise ValueError("graph must be connected (Assumption 1)")
+
+    def _connected(self) -> bool:
+        adj = self.adjacency()
+        seen = {0}
+        stack = [0]
+        while stack:
+            u = stack.pop()
+            for v in np.nonzero(adj[u])[0]:
+                if v not in seen:
+                    seen.add(int(v))
+                    stack.append(int(v))
+        return len(seen) == self.m
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    def adjacency(self) -> np.ndarray:
+        a = np.zeros((self.m, self.m), dtype=np.float32)
+        for (s, e) in self.edges:
+            a[s, e] = 1.0
+            a[e, s] = 1.0
+        return a
+
+    def degrees(self) -> np.ndarray:
+        return self.adjacency().sum(axis=1)
+
+    def incidence(self) -> np.ndarray:
+        """Signed incidence S in R^{|E| x m}: S[i, s_i]=+1, S[i, e_i]=-1.
+
+        The constraint operator is ``(C U)_i = sum_m S[i, m] U_m``.
+        """
+        s = np.zeros((self.n_edges, self.m), dtype=np.float32)
+        for i, (a, b) in enumerate(self.edges):
+            s[i, a] = 1.0
+            s[i, b] = -1.0
+        return s
+
+    def sigma_max(self) -> np.ndarray:
+        """Per-agent largest eigenvalue of C_t^T C_t = d_t I, i.e. d_t."""
+        return self.degrees()
+
+
+def ring(m: int) -> Graph:
+    """Ring graph — embeds natively in a TPU ICI torus (neighbor ppermute)."""
+    if m < 2:
+        raise ValueError("ring needs m >= 2")
+    edges = tuple((t, (t + 1) % m) for t in range(m)) if m > 2 else ((0, 1),)
+    return Graph(m=m, edges=edges)
+
+
+def chain(m: int) -> Graph:
+    return Graph(m=m, edges=tuple((t, t + 1) for t in range(m - 1)))
+
+
+def star(m: int) -> Graph:
+    """Master-slave structure (paper Fig. 2b): agent 0 is the hub."""
+    return Graph(m=m, edges=tuple((0, t) for t in range(1, m)))
+
+
+def complete(m: int) -> Graph:
+    return Graph(m=m, edges=tuple((i, j) for i in range(m) for j in range(i + 1, m)))
+
+
+def paper_fig2a() -> Graph:
+    """The 5-agent decentralized structure of paper Fig. 2(a).
+
+    The figure shows a connected 5-agent network; we use a ring plus one
+    chord, a standard rendering of the pictured topology.
+    """
+    return Graph(m=5, edges=((0, 1), (1, 2), (2, 3), (3, 4), (4, 0), (1, 4)))
+
+
+def erdos(m: int, p: float, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    while True:
+        edges = [
+            (i, j)
+            for i in range(m)
+            for j in range(i + 1, m)
+            if rng.uniform() < p
+        ]
+        # ensure connectivity by adding a chain fallback
+        have = set(edges)
+        for t in range(m - 1):
+            if (t, t + 1) not in have and (t + 1, t) not in have:
+                if rng.uniform() < 0.3:
+                    edges.append((t, t + 1))
+        try:
+            return Graph(m=m, edges=tuple(edges))
+        except ValueError:
+            continue

@@ -1,0 +1,124 @@
+"""Dense linear-algebra solvers shared by the MTL/DMTL algorithms.
+
+Three solve strategies for the U-update family of equations:
+
+1. ``kron_ridge_solve`` — the paper's own formulation (eq. 9 / eq. 19):
+   vectorize and invert the ``(L r, L r)`` Kronecker system. Faithful but
+   O(L^3 r^3); kept as the reference implementation.
+2. ``sylvester_ridge_solve`` — the same equation ``G U M + c U = R`` solved by
+   double eigendecomposition in O(L^3 + r^3). Exact (both G, M symmetric PSD);
+   this is a beyond-paper optimization recorded in EXPERIMENTS.md.
+3. ``cg_solve`` — matrix-free conjugate gradients on the operator, matmul-only
+   (MXU-friendly); used at backbone scale where even L^3 is undesirable.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def ridge_solve(H: jax.Array, T: jax.Array, mu: float) -> jax.Array:
+    """Closed-form regularized ELM solve (paper eq. 4): (H^T H + mu I)^-1 H^T T.
+
+    Uses Cholesky; G = H^T H + mu I is SPD for mu > 0.
+    """
+    L = H.shape[-1]
+    G = H.T @ H + mu * jnp.eye(L, dtype=H.dtype)
+    rhs = H.T @ T
+    cho = jax.scipy.linalg.cho_factor(G)
+    return jax.scipy.linalg.cho_solve(cho, rhs)
+
+
+def _vec_cm(x: jax.Array) -> jax.Array:
+    """Column-major vectorization, matching vec(AXB) = (B^T kron A) vec(X)."""
+    return x.T.reshape(-1)
+
+
+def _unvec_cm(v: jax.Array, rows: int, cols: int) -> jax.Array:
+    return v.reshape(cols, rows).T
+
+
+def kron_ridge_solve(
+    Gs: jax.Array, Ms: jax.Array, R: jax.Array, c: jax.Array | float
+) -> jax.Array:
+    """Solve sum_t G_t U M_t + c U = R via the vectorized Kronecker system.
+
+    Gs: (m, L, L) symmetric; Ms: (m, r, r) symmetric; R: (L, r); c scalar.
+    This is the paper's eq. (9); eq. (19) is the m=1 case with modified c.
+    """
+    if Gs.ndim == 2:
+        Gs = Gs[None]
+        Ms = Ms[None]
+    L, r = R.shape
+    # vec(G U M) = (M^T kron G) vec(U); M symmetric.
+    K = jnp.einsum("tij,tkl->ikjl", Ms, Gs).reshape(L * r, L * r)
+    K = K + c * jnp.eye(L * r, dtype=R.dtype)
+    v = jnp.linalg.solve(K, _vec_cm(R))
+    return _unvec_cm(v, L, r)
+
+
+def sylvester_ridge_solve(
+    G: jax.Array, M: jax.Array, R: jax.Array, c: jax.Array | float
+) -> jax.Array:
+    """Solve G U M + c U = R for symmetric PSD G (L,L), M (r,r) exactly.
+
+    Eigendecompose G = Qg Dg Qg^T, M = Qm Dm Qm^T; in the eigenbasis the
+    operator is diagonal with entries Dg_i Dm_j + c.
+    """
+    dg, qg = jnp.linalg.eigh(G)
+    dm, qm = jnp.linalg.eigh(M)
+    Rt = qg.T @ R @ qm
+    denom = dg[:, None] * dm[None, :] + c
+    return qg @ (Rt / denom) @ qm.T
+
+
+def cg_solve(
+    matvec: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    x0: jax.Array | None = None,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+) -> jax.Array:
+    """Conjugate gradients for SPD operator, jittable (lax.while_loop)."""
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    r0 = b - matvec(x0)
+    p0 = r0
+    rs0 = jnp.vdot(r0, r0).real
+    b2 = jnp.maximum(jnp.vdot(b, b).real, 1e-30)
+
+    def cond(state):
+        _, _, _, rs, it = state
+        return jnp.logical_and(rs / b2 > tol * tol, it < maxiter)
+
+    def body(state):
+        x, r, p, rs, it = state
+        ap = matvec(p)
+        alpha = rs / jnp.maximum(jnp.vdot(p, ap).real, 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.vdot(r, r).real
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        return x, r, p, rs_new, it + 1
+
+    x, _, _, _, _ = jax.lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
+    return x
+
+
+def sum_sylvester_cg(
+    Gs: jax.Array, Ms: jax.Array, R: jax.Array, c: jax.Array | float,
+    tol: float = 1e-8, maxiter: int = 500,
+) -> jax.Array:
+    """Matrix-free solve of sum_t G_t U M_t + c U = R with CG."""
+    if Gs.ndim == 2:
+        Gs = Gs[None]
+        Ms = Ms[None]
+
+    def matvec(u):
+        return jnp.einsum("tij,jk,tkl->il", Gs, u, Ms) + c * u
+
+    return cg_solve(matvec, R, tol=tol, maxiter=maxiter)

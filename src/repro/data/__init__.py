@@ -1,0 +1,5 @@
+from repro.data.synthetic import (
+    multitask_classification,
+    multitask_regression,
+    paper_uniform,
+)

@@ -1,0 +1,114 @@
+"""Synthetic data generators for the paper's experiments.
+
+USPS/MNIST are not downloadable in the offline container (DESIGN.md §7), so
+the generalization benchmarks use ``multitask_classification``: a digits-like
+generator that preserves the paper's structural premise — tasks share an
+r-dimensional predictive subspace; each task classifies 3 of 10 classes —
+with PCA-matched input dims (64 for "USPS", 87 for "MNIST").
+
+``paper_uniform`` reproduces the paper's §IV-A convergence setup exactly
+(H, T ~ U(0,1), stacked-H columns normalized).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def paper_uniform(key, m=5, N=10, L=5, d=1):
+    """§IV-A: H_t, T_t ~ U(0,1); columns of stacked H normalized."""
+    k1, k2 = jax.random.split(key)
+    H = jax.random.uniform(k1, (m, N, L))
+    Hs = H.reshape(m * N, L)
+    Hs = Hs / jnp.linalg.norm(Hs, axis=0, keepdims=True)
+    return Hs.reshape(m, N, L), jax.random.uniform(k2, (m, N, d))
+
+
+def multitask_regression(
+    key, m=8, n_train=16, n_test=200, L=40, r=3, d=1, noise=0.1
+):
+    """Tasks share a ground-truth subspace: T = H U* A*_t + eps.
+
+    Returns (H_train, T_train, H_test, T_test) with task-leading axes.
+    """
+    ku, ka, kh1, kh2, kn1, kn2 = jax.random.split(key, 6)
+    U_star = jax.random.normal(ku, (L, r)) / jnp.sqrt(L)
+    A_star = jax.random.normal(ka, (m, r, d))
+    H_tr = jax.random.normal(kh1, (m, n_train, L)) / jnp.sqrt(L)
+    H_te = jax.random.normal(kh2, (m, n_test, L)) / jnp.sqrt(L)
+    T_tr = jnp.einsum("mnl,lr,mrd->mnd", H_tr, U_star, A_star)
+    T_te = jnp.einsum("mnl,lr,mrd->mnd", H_te, U_star, A_star)
+    T_tr = T_tr + noise * jax.random.normal(kn1, T_tr.shape) * jnp.std(T_tr)
+    T_te = T_te + noise * jax.random.normal(kn2, T_te.shape) * jnp.std(T_te)
+    return H_tr, T_tr, H_te, T_te
+
+
+class MultitaskClassification(NamedTuple):
+    X_train: jax.Array   # (m, n_train, n_in)
+    Y_train: jax.Array   # (m, n_train, n_cls) one-hot
+    X_test: jax.Array    # (m, n_test, n_in)
+    Y_test: jax.Array    # (m, n_test, n_cls)
+    task_classes: jax.Array  # (m, n_cls) global class ids per task
+
+
+def multitask_classification(
+    key,
+    m: int = 10,
+    n_train: int = 90,
+    n_test: int = 45,
+    n_in: int = 64,
+    n_global_classes: int = 10,
+    n_cls: int = 3,
+    latent_r: int = 8,
+    class_sep: float = 2.0,
+    noise: float = 1.0,
+):
+    """Digits-like multi-task classification (paper §IV-B shape).
+
+    Global class prototypes live in a shared ``latent_r``-dim subspace of the
+    input space (the "shared predictive structure"); each task classifies
+    ``n_cls`` randomly chosen global classes (paper: 3 random digit classes
+    per task, 90 train / 45 test samples per task).
+    """
+    kp, kb, kt, *krest = jax.random.split(key, 3 + m)
+    basis = jax.random.normal(kb, (latent_r, n_in)) / jnp.sqrt(latent_r)
+    protos_latent = class_sep * jax.random.normal(kp, (n_global_classes, latent_r))
+    protos = protos_latent @ basis  # (n_global_classes, n_in)
+
+    task_classes = jax.vmap(
+        lambda k: jax.random.choice(
+            k, n_global_classes, shape=(n_cls,), replace=False
+        )
+    )(jax.random.split(kt, m))
+
+    def make_task(k, classes):
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        y_tr = jax.random.randint(k1, (n_train,), 0, n_cls)
+        y_te = jax.random.randint(k2, (n_test,), 0, n_cls)
+        x_tr = protos[classes[y_tr]] + noise * jax.random.normal(
+            k3, (n_train, n_in)
+        )
+        x_te = protos[classes[y_te]] + noise * jax.random.normal(
+            k4, (n_test, n_in)
+        )
+        return (
+            x_tr,
+            jax.nn.one_hot(y_tr, n_cls),
+            x_te,
+            jax.nn.one_hot(y_te, n_cls),
+        )
+
+    X_tr, Y_tr, X_te, Y_te = jax.vmap(make_task)(
+        jnp.stack(jax.random.split(krest[0], m)), task_classes
+    )
+    return MultitaskClassification(X_tr, Y_tr, X_te, Y_te, task_classes)
+
+
+def classification_error(pred_logits: jax.Array, one_hot: jax.Array) -> jax.Array:
+    """Mean test error (%) as in Table I."""
+    pred = jnp.argmax(pred_logits, axis=-1)
+    true = jnp.argmax(one_hot, axis=-1)
+    return 100.0 * jnp.mean((pred != true).astype(jnp.float32))

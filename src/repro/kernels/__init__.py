@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §9).
+
+Each kernel package provides:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, dtype policy, interpret fallback)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  gram  — fused G = H^T H, R = H^T T single-pass Gram accumulation
+          (the paper's ELM-solve hot-spot at backbone scale)
+  swa   — sliding-window flash attention (long_500k enabler)
+  rglru — RG-LRU diagonal recurrence, blocked time scan
+  mlstm — chunkwise-parallel mLSTM with VMEM-resident (D,D) state
+"""
+
+from repro.kernels.gram.ops import gram
+from repro.kernels.mlstm.ops import mlstm_chunkwise
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.swa.ops import swa_attention
+
+__all__ = ["gram", "mlstm_chunkwise", "rglru_scan", "swa_attention"]

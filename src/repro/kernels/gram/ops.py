@@ -1,0 +1,34 @@
+"""Public fused-Gram op: padding, block-size policy, CPU interpret fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.ref import gram_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_n", "force_ref"))
+def gram(H: jax.Array, T: jax.Array, *, block_l: int = 128,
+         block_n: int = 512, force_ref: bool = False):
+    """Fused (H^T H, H^T T). Pads N and L to block multiples (zero rows/cols
+    contribute nothing to either product, so padding is exact)."""
+    if force_ref:
+        return gram_ref(H, T)
+    N, L = H.shape
+    block_n = min(block_n, max(8, N))
+    pad_n = (-N) % block_n
+    pad_l = (-L) % block_l
+    Hp = jnp.pad(H, ((0, pad_n), (0, pad_l)))
+    Tp = jnp.pad(T, ((0, pad_n), (0, 0)))
+    G, R = gram_pallas(
+        Hp, Tp, block_l=block_l, block_n=block_n, interpret=not _on_tpu()
+    )
+    return G[:L, :L], R[:L]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused Gram kernel."""
+
+import jax.numpy as jnp
+
+
+def gram_ref(H, T):
+    """H: (N, L); T: (N, d). Returns (G = H^T H (L,L), R = H^T T (L,d))."""
+    Hf = H.astype(jnp.float32)
+    Tf = T.astype(jnp.float32)
+    return Hf.T @ Hf, Hf.T @ Tf

@@ -1,0 +1,1 @@
+from repro.kernels.mlstm.ops import mlstm_chunkwise

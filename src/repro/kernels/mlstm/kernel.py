@@ -1,0 +1,119 @@
+"""Chunkwise-parallel mLSTM kernel (the xlstm-1.3b hot-spot).
+
+The matrix-memory recurrence is evaluated chunk-by-chunk: within a chunk
+all interactions are (c x c) / (c x D) matmuls on the MXU; the carried
+state (C: (D, D), n: (D,), m: scalar) lives in VMEM scratch across the
+sequential chunk axis — the HBM traffic is exactly one pass over q/k/v
+and the h output, with zero state round-trips (the XLA scan path spills
+the (D, D) carry per chunk).
+
+Grid: (B, H, S/c) — chunk axis innermost/sequential. Stabilizer algebra in
+log space mirrors repro/models/xlstm.py (cumsum via tril-ones matmul so it
+runs on the MXU; running max via lax.cummax).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, f_ref, i_ref, o_ref,
+                  c_scr, n_scr, m_scr, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+
+    D = q_ref.shape[-1]
+    scale = D ** -0.5
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (c, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    fi = f_ref[0, 0].astype(jnp.float32)             # (c,)
+    ii = i_ref[0, 0].astype(jnp.float32)
+
+    C_prev = c_scr[...]
+    n_prev = n_scr[...]
+    m_prev = m_scr[0]
+
+    # inclusive cumsum of log-forgets via tril matmul (MXU-friendly)
+    tril = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    A = tril @ fi                                    # (c,)
+    gmax = jax.lax.cummax(ii - A, axis=0)
+    m_i = A + jnp.maximum(m_prev, gmax)              # (c,)
+
+    # intra-chunk scores
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c,c)
+    logw = A[:, None] - A[None, :] + ii[None, :] - m_i[:, None]
+    w = jnp.where(jnp.tril(jnp.ones((chunk, chunk), bool)),
+                  jnp.exp(logw), 0.0)
+    Sij = qk * w
+    num = jax.lax.dot_general(Sij, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    den = jnp.sum(Sij, axis=1)
+
+    # inter-chunk contribution from the carried state
+    decay_q = jnp.exp(m_prev + A - m_i)              # (c,)
+    Cq = jax.lax.dot_general(q, C_prev, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, D)
+    nq = q @ n_prev                                  # (c,)
+    num = num + decay_q[:, None] * Cq
+    den = den + decay_q * nq
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[:, None]
+    o_ref[0, 0] = h.astype(o_ref.dtype)
+
+    # state update at chunk end
+    A_c = A[-1]
+    m_new = m_i[-1]
+    w_state = jnp.exp(A_c - A + ii - m_new)          # (c,)
+    kv = jax.lax.dot_general(
+        v * w_state[:, None], k, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (D, D): sum_j v_j k_j^T
+    decay_C = jnp.exp(m_prev + A_c - m_new)
+    c_scr[...] = decay_C * C_prev + kv
+    n_scr[...] = decay_C * n_prev + w_state @ k
+    m_scr[0] = m_new
+
+
+def mlstm_pallas(q, k, v, log_f, i_gate, *, chunk: int = 64,
+                 interpret: bool = False):
+    """q,k,v: (B,H,S,D); log_f,i_gate: (B,H,S); S % chunk == 0."""
+    B, H, S, D = q.shape
+    grid = (B, H, S // chunk)
+
+    def qkv_index(b, h, ci):
+        return (b, h, ci, 0)
+
+    def gate_index(b, h, ci):
+        return (b, h, ci)
+
+    return pl.pallas_call(
+        functools.partial(_mlstm_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, D), qkv_index),
+            pl.BlockSpec((1, 1, chunk, D), qkv_index),
+            pl.BlockSpec((1, 1, chunk, D), qkv_index),
+            pl.BlockSpec((1, 1, chunk), gate_index),
+            pl.BlockSpec((1, 1, chunk), gate_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, D), qkv_index),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, log_f, i_gate)

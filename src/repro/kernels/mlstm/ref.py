@@ -1,0 +1,50 @@
+"""Oracle: the mLSTM recurrence evaluated step-by-step (xLSTM eqs.),
+independent of the chunkwise algebra — validates both the Pallas kernel and
+the pure-jnp chunkwise path in repro.models.xlstm."""
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_sequential_ref(q, k, v, log_f, i_gate):
+    """q,k,v: (B,H,S,D); log_f (log-sigmoid forget), i_gate: (B,H,S).
+
+    Stabilized matrix-memory recurrence:
+      m_t = max(m_{t-1} + log_f_t, i_t)
+      C_t = e^{m_{t-1}+log_f_t-m_t} C_{t-1} + e^{i_t-m_t} v_t k_t^T
+      n_t likewise with k_t
+      h_t = C_t q~_t / max(|n_t^T q~_t|, e^{-m_t}),  q~ = q / sqrt(D)
+    Returns h: (B,H,S,D) fp32."""
+    B, H, S, D = q.shape
+    scale = D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, ft, it = xs
+        m_new = jnp.maximum(m + ft, it)
+        fp = jnp.exp(m + ft - m_new)
+        ip = jnp.exp(it - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])          # (B,H,D,D) v k^T
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhde,bhe->bhd", C, qt)
+        den = jnp.einsum("bhd,bhd->bh", n, qt)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    init = (
+        jnp.zeros((B, H, D, D), jnp.float32),
+        jnp.zeros((B, H, D), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    xs = (
+        qf.transpose(2, 0, 1, 3), kf.transpose(2, 0, 1, 3),
+        vf.transpose(2, 0, 1, 3),
+        log_f.astype(jnp.float32).transpose(2, 0, 1),
+        i_gate.astype(jnp.float32).transpose(2, 0, 1),
+    )
+    _, hs = jax.lax.scan(step, init, xs)
+    return hs.transpose(1, 2, 0, 3)

@@ -1,0 +1,64 @@
+"""RG-LRU blocked time-scan kernel.
+
+The recurrence ``h_t = a_t * h_{t-1} + b_t`` is diagonal (elementwise), so
+there is no MXU work — the kernel's job is *memory locality*: stream
+(BS, BD) tiles of (log_a, b) through VMEM once, keep the (BD,) carry
+resident in VMEM scratch across time blocks, and never round-trip the
+hidden state to HBM. The XLA alternative (associative_scan) materializes
+O(log S) intermediate full-sequence tensors; this kernel is single-pass.
+
+Grid: (B, D/BD, S/BS) — time innermost (sequential on TPU), so the carry
+scratch persists across the time sweep of each (batch, channel-block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(log_a_ref, b_ref, h0_ref, o_ref, h_scr, *, block_s):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = jnp.exp(log_a_ref[0].astype(jnp.float32))   # (BS, BD)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+
+
+def rglru_pallas(log_a, b, h0, *, block_s: int = 256, block_d: int = 512,
+                 interpret: bool = False):
+    """log_a, b: (B, S, D); h0: (B, D); S % block_s == 0, D % block_d == 0."""
+    B, S, D = log_a.shape
+    block_s = min(block_s, S)
+    block_d = min(block_d, D)
+    grid = (B, D // block_d, S // block_s)
+
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_d), lambda bi, di, ti: (bi, di)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_s, block_d), lambda bi, di, ti: (bi, ti, di)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b, h0)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RG-LRU diagonal linear recurrence."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a, b, h0):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t.
+
+    log_a, b: (B, S, D); h0: (B, D). Returns h: (B, S, D) (fp32)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.transpose(1, 0, 2), bf.transpose(1, 0, 2)),
+    )
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,115 @@
+"""Sliding-window flash attention kernel (the long_500k enabler).
+
+Flash-style online softmax with the kv-iteration space RESTRICTED to the
+window: for query block qi only the kv blocks overlapping
+``[qi*BQ - W + 1, qi*BQ + BQ)`` are visited — compute is O(S * W) instead of
+O(S^2). The kv grid axis is the innermost (sequential on TPU), so the
+running (m, l, acc) statistics live in VMEM scratch across kv steps.
+
+Grid: (B, H, S/BQ, NKV) where NKV = ceil(W/BK) + 1 window blocks.
+BlockSpecs map the kv step to the absolute block index
+``qi*BQ//BK - NKV + 1 + kj`` (clamped at 0; out-of-range steps are fully
+masked and skipped via @pl.when). K/V are laid out (B, KV, S, D); GQA maps
+query head h to kv head ``h // G`` in the index_map — no K/V duplication is
+ever materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                block_q, block_k, window, n_kv, seq_len):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute kv block this step covers (mirrors the BlockSpec index_map)
+    raw_block = qi * block_q // block_k - (n_kv - 1) + kj
+    kv_block = jnp.maximum(raw_block, 0)
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)[:, None]
+    k_pos = kv_block * block_k + jax.lax.iota(jnp.int32, block_k)[None, :]
+    in_window = (k_pos <= q_pos) & (q_pos - k_pos < window) & (k_pos < seq_len)
+    # raw_block < 0 steps alias block 0 (clamped index_map) — skip them so
+    # block 0 is processed exactly once, by the kj with raw_block == 0.
+    any_live = jnp.any(in_window) & (raw_block >= 0)
+
+    @pl.when(any_live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * (q.shape[-1] ** -0.5)                    # (BQ, BK)
+        s = jnp.where(in_window, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + p.sum(axis=-1)
+        acc_scr[...] = corr[:, None] * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def swa_pallas(q, k, v, *, window: int, block_q: int = 256,
+               block_k: int = 256, interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, KV, S, D); S % block_q == 0 (pre-padded)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    n_kv = -(-window // block_k) + 1  # window blocks + 1 for straddle
+    grid = (B, H, S // block_q, n_kv)
+
+    def q_index(b, h, qi, kj):
+        return (b, h, qi, 0)
+
+    def kv_index(b, h, qi, kj):
+        blk = jnp.maximum(qi * block_q // block_k - (n_kv - 1) + kj, 0)
+        return (b, h // G, blk, 0)
+
+    return pl.pallas_call(
+        functools.partial(
+            _swa_kernel, block_q=block_q, block_k=block_k, window=window,
+            n_kv=n_kv, seq_len=S,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), q_index),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), q_index),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: causal sliding-window attention (naive full-score)."""
+
+import jax.numpy as jnp
+
+
+def swa_ref(q, k, v, window):
+    """q: (B, H, S, D); k, v: (B, KV, S, D); GQA via head grouping.
+
+    Returns (B, H, S, D). Window w: position i attends j in (i-w, i]."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgid,bkjd->bkgij", qg, kf) * (D ** -0.5)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = (j <= i) & (i - j < window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgij,bkjd->bkgid", p, vf)
+    return out.reshape(B, H, S, D).astype(q.dtype)

@@ -1,0 +1,373 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) on the production meshes, proving the sharding
+configuration is coherent without real hardware, and extract the roofline
+terms (deliverable g) from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.flops import analytic_cost
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.mesh import (
+    HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh,
+)
+from repro.launch.shapes import SHAPES, input_specs, variant_for_shape
+from repro.launch import shardings as sh
+from repro.models.transformer import encode, init_model, prefill
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.serving.steps import serve_step
+from repro.training.steps import make_train_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\(?\s*)?(?:\w+\[[\d,]*\][^\s]*(?:,\s*)?)+\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective in the partitioned
+    module (the -done halves of paired start/done ops are skipped)."""
+    per_op = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+              "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(per_op, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in line.split("=")[-1][:40]:
+            continue
+        result_types, op = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(result_types):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        per_op[op] += total
+        counts[op] += 1
+    per_op["total"] = sum(per_op.values())
+    per_op["counts"] = counts
+    return per_op
+
+
+def model_flops_per_step(cfg, shape, n_params, n_active):
+    """6 N D (dense) / 6 N_active D (MoE); decode: D = batch tokens."""
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.batch  # decode: one token per sequence
+
+
+def _lower_one(arch: str, shape_name: str, multi_pod: bool,
+               unroll: bool):
+    """Lower+compile one variant. Scanned (deployment form) is used for the
+    memory analysis and the lowering proof; unrolled for exact
+    cost/collective totals (XLA's HloCostAnalysis counts while bodies once)."""
+    cfg = variant_for_shape(
+        get_config(arch, unroll_cycles=unroll), SHAPES[shape_name]
+    )
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    params_shape = jax.eval_shape(
+        lambda k: init_model(k, cfg), jax.random.PRNGKey(0)
+    )
+    n_params = sum(x.size for x in jax.tree.leaves(params_shape))
+    moe_layers = sum(1 for k in cfg.layer_kinds() if k == "moe")
+    moe_total = moe_layers * cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
+    moe_active = moe_layers * cfg.n_experts_active * 3 * cfg.d_model * cfg.moe_d_ff
+    n_active = n_params - moe_total + moe_active
+
+    batch = input_specs(cfg, shape)
+
+    with jax.set_mesh(mesh):
+        fsdp = "data" if shape.kind == "train" else None
+        raw_pspecs = sh.param_specs(params_shape, fsdp=fsdp, mesh=mesh)
+        pspecs = sh.to_named(raw_pspecs, mesh, params_shape)
+        if shape.kind == "train":
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            ospecs = sh.to_named(
+                sh.opt_specs(opt_shape, raw_pspecs), mesh, opt_shape)
+            bspecs = sh.to_named(sh.batch_specs(batch), mesh, batch)
+            step = make_train_step(cfg, AdamWConfig())
+            jitted = jax.jit(
+                step,
+                in_shardings=(pspecs, ospecs, bspecs),
+                out_shardings=(pspecs, ospecs, None),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+        elif shape.kind == "prefill":
+            bspecs = sh.to_named(sh.batch_specs(batch), mesh, batch)
+
+            def prefill_step(params, batch):
+                kwargs = {k: v for k, v in batch.items() if k != "tokens"}
+                return prefill(params, cfg, batch["tokens"], shape.seq,
+                               **kwargs)
+
+            cache_shape = jax.eval_shape(prefill_step, params_shape, batch)[1]
+            cspecs = sh.to_named(sh.cache_specs(cache_shape, cfg), mesh,
+                                 cache_shape)
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(pspecs, bspecs),
+                out_shardings=(None, cspecs),
+            )
+            lowered = jitted.lower(params_shape, batch)
+        else:  # decode
+            cspecs = sh.to_named(sh.cache_specs(batch["cache"], cfg), mesh,
+                                 batch["cache"])
+            tspec = sh.to_named(
+                sh.batch_specs({"tokens": batch["tokens"]}), mesh,
+                {"tokens": batch["tokens"]})["tokens"]
+
+            def decode(params, tokens, cache):
+                return serve_step(params, cfg, tokens, cache)
+
+            jitted = jax.jit(
+                decode,
+                in_shardings=(pspecs, tspec, cspecs),
+                out_shardings=(None, cspecs),
+            )
+            lowered = jitted.lower(params_shape, batch["tokens"],
+                                   batch["cache"])
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    return compiled, mesh, cfg, shape, n_params, n_active, compile_s
+
+
+def _lower_dmtl(arch: str, multi_pod: bool, unroll: bool,
+                admm_iters: int = 10, first_order: bool = False,
+                u_solver: str = "sylvester"):
+    """Lower the paper's technique as a mesh-wide step: frozen-backbone
+    feature extraction + per-agent Gram stats + `admm_iters` rounds of
+    ring-consensus DMTL-ELM (agents = the data axes)."""
+    from repro.core.dmtl_elm import DMTLELMConfig
+    from repro.core.sharded_dmtl import dmtl_fit_from_stats
+
+    cfg = get_config(arch, unroll_cycles=unroll)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    agent_axes = ("pod", "data") if multi_pod else ("data",)
+    m_agents = 1
+    for ax in agent_axes:
+        m_agents *= mesh.shape[ax]
+    B, S, r, d_out = 256, 4096, 16, 16
+    d = cfg.d_model
+
+    params_shape = jax.eval_shape(
+        lambda k: init_model(k, cfg), jax.random.PRNGKey(0)
+    )
+    n_params = sum(x.size for x in jax.tree.leaves(params_shape))
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, d_out), jnp.float32),
+    }
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    admm_cfg = DMTLELMConfig(
+        r=r, iters=admm_iters, tau=2.0, zeta=1.0,
+        first_order=first_order, u_solver=u_solver,
+    )
+
+    def dmtl_step(params, batch):
+        kwargs = {k: v for k, v in batch.items()
+                  if k not in ("tokens", "targets")}
+        h = encode(params, cfg, batch["tokens"], **kwargs)
+        feats = jax.lax.stop_gradient(h.astype(jnp.float32).mean(axis=1))
+        fg = feats.reshape(m_agents, B // m_agents, d)
+        tg = batch["targets"].reshape(m_agents, B // m_agents, d_out)
+        G = jnp.einsum("mbl,mbk->mlk", fg, fg)
+        R = jnp.einsum("mbl,mbd->mld", fg, tg)
+        return dmtl_fit_from_stats(G, R, mesh, agent_axes, admm_cfg)
+
+    with jax.set_mesh(mesh):
+        raw_pspecs = sh.param_specs(params_shape, fsdp=None, mesh=mesh)
+        pspecs = sh.to_named(raw_pspecs, mesh, params_shape)
+        bspecs = sh.to_named(sh.batch_specs(batch), mesh, batch)
+        jitted = jax.jit(dmtl_step, in_shardings=(pspecs, bspecs))
+        lowered = jitted.lower(params_shape, batch)
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    class _Shape:
+        kind = "prefill"  # feature extraction = forward pass accounting
+        batch, seq = B, S
+        name = "dmtl_4k"
+
+    return compiled, mesh, cfg, _Shape(), n_params, n_params, compile_s
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                skip_unrolled: bool = False):
+    if shape_name == "dmtl_4k":
+        compiled_scan, mesh, cfg, shape, n_params, n_active, t_scan = \
+            _lower_dmtl(arch, multi_pod, unroll=False)
+        mem = compiled_scan.memory_analysis()
+        if skip_unrolled:
+            compiled_cost, t_unroll = compiled_scan, 0.0
+        else:
+            compiled_cost, _, _, _, _, _, t_unroll = _lower_dmtl(
+                arch, multi_pod, unroll=True)
+        return _assemble(arch, shape_name, multi_pod, compiled_scan,
+                         compiled_cost, mesh, cfg, shape, n_params, n_active,
+                         t_scan + t_unroll, skip_unrolled), compiled_scan
+    return _lower_combo_std(arch, shape_name, multi_pod, skip_unrolled)
+
+
+def _lower_combo_std(arch: str, shape_name: str, multi_pod: bool,
+                skip_unrolled: bool = False):
+    # scanned = deployment artifact: memory + lowering proof
+    compiled_scan, mesh, cfg, shape, n_params, n_active, t_scan = _lower_one(
+        arch, shape_name, multi_pod, unroll=False
+    )
+    if skip_unrolled:
+        compiled_cost, t_unroll = compiled_scan, 0.0
+    else:
+        compiled_cost, _, _, _, _, _, t_unroll = _lower_one(
+            arch, shape_name, multi_pod, unroll=True
+        )
+    return _assemble(arch, shape_name, multi_pod, compiled_scan,
+                     compiled_cost, mesh, cfg, shape, n_params, n_active,
+                     t_scan + t_unroll, skip_unrolled), compiled_scan
+
+
+def _assemble(arch, shape_name, multi_pod, compiled_scan, compiled_cost,
+              mesh, cfg, shape, n_params, n_active, compile_s,
+              skip_unrolled):
+    mem = compiled_scan.memory_analysis()
+    cost = compiled_cost.cost_analysis()
+    coll = collective_bytes(compiled_cost.as_text())
+    n_chips = mesh.devices.size
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    model_fl = model_flops_per_step(cfg, shape, n_params, n_active)
+    ana = analytic_cost(cfg, shape)
+    ana_flops_dev = ana["flops"] / n_chips
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(n_chips),
+        "compile_seconds": round(compile_s, 1),
+        "cost_source": "scanned" if skip_unrolled else "unrolled",
+        "params": int(n_params),
+        "params_active": int(n_active),
+        "memory": {
+            "argument_bytes_per_device": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes_per_device": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_ok_16gb": None,  # filled below
+        },
+        "cost": {
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+        },
+        "collectives": coll,
+        "roofline": {
+            "compute_s": max(flops_dev, ana_flops_dev) / PEAK_FLOPS_BF16,
+            "compute_s_hlo": flops_dev / PEAK_FLOPS_BF16,
+            "compute_s_analytic": ana_flops_dev / PEAK_FLOPS_BF16,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": coll["total"] / ICI_BW,
+            "model_flops_total": model_fl,
+            "useful_flops_ratio": (
+                model_fl / (flops_dev * n_chips) if flops_dev else None
+            ),
+            "analytic_flops_total": ana["flops"],
+        },
+    }
+    m = result["memory"]
+    peak = (m["argument_bytes_per_device"] + m["output_bytes_per_device"]
+            + m["temp_bytes_per_device"])
+    m["peak_estimate_bytes"] = peak
+    m["peak_ok_16gb"] = bool(peak < 16e9)
+    r = result["roofline"]
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: r[k])
+    r["dominant"] = dom
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES) + ["dmtl_4k"])
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-unrolled", action="store_true",
+                    help="cost/collectives from the scanned artifact "
+                         "(fast, under-counts loop bodies)")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    combos = (
+        [(a, s, m) for a in ARCH_NAMES for s in SHAPES
+         for m in ("single", "multi")]
+        if args.all else [(args.arch, args.shape, args.mesh)]
+    )
+    failures = 0
+    for arch, shape, mesh_kind in combos:
+        tag = f"{arch}__{shape}__{mesh_kind}"
+        path = out_dir / f"{tag}.json"
+        if path.exists() and args.all:
+            print(f"[skip] {tag}")
+            continue
+        try:
+            result, compiled = lower_combo(arch, shape, mesh_kind == "multi",
+                                           skip_unrolled=args.skip_unrolled)
+            path.write_text(json.dumps(result, indent=2))
+            if args.save_hlo:
+                (out_dir / f"{tag}.hlo.txt").write_text(compiled.as_text())
+            r = result["roofline"]
+            print(f"[ok] {tag}: compile={result['compile_seconds']}s "
+                  f"peak={result['memory']['peak_estimate_bytes']/1e9:.2f}GB "
+                  f"dom={r['dominant']} "
+                  f"(c={r['compute_s']:.3e} m={r['memory_s']:.3e} "
+                  f"x={r['collective_s']:.3e})", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+            (out_dir / f"{tag}.error.txt").write_text(traceback.format_exc())
+    if failures:
+        raise SystemExit(f"{failures} combo(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production meshes (DESIGN.md §8).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run forces 512 host devices (launch/dryrun.py sets XLA_FLAGS
+before any jax import); the single-pod mesh then uses the first 256.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+SINGLE_POD = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+# TPU v5e hardware constants (roofline; benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh for tests/examples on however many devices exist."""
+    devices = jax.devices()[: data * model]
+    return Mesh(np.asarray(devices).reshape(data, model), SINGLE_POD_AXES)

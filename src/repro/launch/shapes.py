@@ -1,0 +1,96 @@
+"""Assigned input shapes and per-(arch, shape) input ShapeDtypeStructs.
+
+The four assigned shapes (deliverable f):
+  train_4k     seq=4096    global_batch=256   -> train_step
+  prefill_32k  seq=32768   global_batch=32    -> prefill (prompt ingest)
+  decode_32k   seq=32768   global_batch=128   -> serve_step (1 token + cache)
+  long_500k    seq=524288  global_batch=1     -> serve_step, sub-quadratic only
+
+``long_500k`` substitutes sliding-window attention for any full-attention
+blocks (``variant_for_shape``) — see DESIGN.md §5 for the per-arch coverage
+decisions. VLM prefix patches count toward the sequence budget in train_4k;
+audio encoder frames are additional encoder-side inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import init_cache
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k requires sub-quadratic attention: swap attn -> swa (w=4096).
+
+    Native sub-quadratic archs (xlstm, recurrentgemma, danube's SWA) are
+    unchanged. Training uses remat."""
+    overrides = {}
+    if shape.name == "long_500k" and "attn" in cfg.block_pattern:
+        overrides["block_pattern"] = tuple(
+            "swa" if k == "attn" else k for k in cfg.block_pattern
+        )
+        overrides["sliding_window"] = 4096
+    if shape.kind == "train":
+        overrides["remat"] = True
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.batch, shape.seq
+    act_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.kind == "train":
+        s_text = S
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            p = cfg.n_prefix_embeddings
+            s_text = S - p
+            batch["prefix_embeds"] = _sds((B, p, cfg.d_model), act_dtype)
+        if cfg.family == "audio":
+            batch["enc_embeds"] = _sds((B, cfg.enc_seq, cfg.d_model), act_dtype)
+        batch["tokens"] = _sds((B, s_text), jnp.int32)
+        batch["labels"] = _sds((B, s_text), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        s_text = S
+        batch = {}
+        if cfg.family == "vlm":
+            p = cfg.n_prefix_embeddings
+            s_text = S - p
+            batch["prefix_embeds"] = _sds((B, p, cfg.d_model), act_dtype)
+        if cfg.family == "audio":
+            batch["enc_embeds"] = _sds((B, cfg.enc_seq, cfg.d_model), act_dtype)
+        batch["tokens"] = _sds((B, s_text), jnp.int32)
+        return batch
+    # decode: ONE new token + a cache of length seq
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, jnp.bfloat16)
+    )
+    return {"tokens": _sds((B, 1), jnp.int32), "cache": cache}

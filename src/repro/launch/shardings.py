@@ -1,0 +1,205 @@
+"""Weight / optimizer / batch / cache sharding rules (DESIGN.md §8).
+
+Param specs are assigned by path-pattern rules over the param pytree:
+  - projection "in" weights  (d, f)  -> P(fsdp, "model")
+  - projection "out" weights (f, d)  -> P("model", fsdp)
+  - embeddings (vocab, d)            -> P("model", fsdp)
+  - MoE experts (E, d, f)            -> P("model", fsdp, None)  (expert par.)
+  - 1-D scales/biases                -> replicated
+Stacked scan-cycle leaves carry a leading (n_cycles,) axis -> a leading None
+is prepended when the leaf rank exceeds the rule's base rank.
+
+``fsdp`` is "data" for training (ZeRO-style: params, grads and optimizer
+state all shard over the data axis; replicated across pods so the cross-pod
+traffic is one gradient all-reduce) and None for serving (weights replicated
+over data, tensor-parallel over model).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+
+# (regex over "/".join(path), base_rank, spec_builder(fsdp))
+_RULES = [
+    (r"(embed|lm_head)/table$", 2, lambda f: P("model", f)),
+    (r"attn/w[qkv]/w$", 2, lambda f: P(f, "model")),
+    (r"attn/wo/w$", 2, lambda f: P("model", f)),
+    (r"cross/w[qkv]/w$", 2, lambda f: P(f, "model")),
+    (r"cross/wo/w$", 2, lambda f: P("model", f)),
+    (r"moe/router/w$", 2, lambda f: P(f, None)),
+    (r"moe/w_(gate|up)/w$", 3, lambda f: P("model", f, None)),
+    (r"moe/w_down/w$", 3, lambda f: P("model", None, f)),
+    (r"mlp/w_(gate|up)/w$", 2, lambda f: P(f, "model")),
+    (r"mlp/w_down/w$", 2, lambda f: P("model", f)),
+    (r"mlstm/w_(up|gate|q|k|v)/w$", 2, lambda f: P(f, "model")),
+    (r"mlstm/w_down/w$", 2, lambda f: P("model", f)),
+    (r"mlstm/w_if/(w|b)$", None, lambda f: P()),
+    (r"slstm/w_x/w$", 2, lambda f: P(f, "model")),
+    (r"slstm/r/w$", 3, lambda f: P(None, None, "model")),
+    (r"slstm/b/b$", 2, lambda f: P()),
+    (r"slstm/ffn_up/w$", 2, lambda f: P(f, "model")),
+    (r"slstm/ffn_down/w$", 2, lambda f: P("model", f)),
+    (r"rglru/w_(gate|rnn)/w$", 2, lambda f: P(f, "model")),
+    (r"rglru/w_[ri]/w$", 2, lambda f: P(f, "model")),
+    (r"rglru/w_out/w$", 2, lambda f: P("model", f)),
+    (r"rglru/conv/w$", 2, lambda f: P(None, "model")),
+    (r"rglru/(lam/lam|b_[ri]/b)$", 1, lambda f: P("model")),
+    (r"elm_head/U$", 2, lambda f: P(f, None)),
+    (r"elm_head/A$", 3, lambda f: P()),
+    (r"(ln\d?|ln_cross|final_norm|enc_norm|out_norm|q_norm|k_norm)/(scale|bias)$",
+     1, lambda f: P()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):        # GetAttrKey (NamedTuple fields)
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_leaf(path, leaf, fsdp: Optional[str], mesh=None) -> P:
+    s = _path_str(path)
+    rank = len(leaf.shape)
+    # MoE experts: expert-parallel over "model" when the expert count divides
+    # the axis; otherwise fall back to sharding the expert-FF dimension
+    # (granite's 40 experts vs model=16).
+    m = re.search(r"moe/w_(gate|up|down)/w$", s)
+    if m is not None:
+        model_n = mesh.shape.get("model", 1) if mesh is not None else 1
+        e_dim = leaf.shape[-3]
+        expert_par = model_n <= 1 or (e_dim % model_n == 0)
+        if m.group(1) == "down":  # (E, f, d)
+            spec = P("model", None, fsdp) if expert_par else P(None, "model", fsdp)
+        else:                      # (E, d, f)
+            spec = P("model", fsdp, None) if expert_par else P(None, fsdp, "model")
+        extra = rank - 3
+        return P(*([None] * extra), *spec) if extra > 0 else spec
+    for pat, base_rank, builder in _RULES:
+        if re.search(pat, s):
+            spec = builder(fsdp)
+            if base_rank is None:
+                return P()
+            extra = rank - base_rank
+            if extra > 0:
+                spec = P(*([None] * extra), *spec)
+            return spec
+    # default: replicate (scalars, counters, anything unmatched)
+    return P()
+
+
+def param_specs(params_tree, fsdp: Optional[str] = "data", mesh=None):
+    """PartitionSpec tree mirroring the params pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_leaf(path, leaf, fsdp, mesh), params_tree
+    )
+
+
+def opt_specs(opt_state_shape, pspecs):
+    """AdamW state mirrors params: (count, m, v)."""
+    return type(opt_state_shape)(
+        count=P(),
+        m=pspecs,
+        v=jax.tree_util.tree_map(lambda s: s, pspecs),
+    )
+
+
+def batch_specs(batch_tree, batch_axes=BATCH_AXES):
+    def leaf_spec(path, leaf):
+        rest = (None,) * (len(leaf.shape) - 1)
+        if leaf.shape[0] == 1:
+            return P(None, *rest)  # long_500k batch=1: replicate
+        return P(batch_axes, *rest)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+def cache_specs(cache_tree, cfg, batch_axes=BATCH_AXES):
+    """Decode caches: batch over data axes; the cache SEQUENCE dim over
+    "model" (always evenly divisible — KV-head counts often are not, and jit
+    arguments must shard evenly); recurrent-state channel dims over "model".
+
+    Leaf layouts (see repro.models.cache):
+      stacked KV:  (n_cycles, B, S, KV, hd)   rem KV: (B, S, KV, hd)
+      mLSTM C:     (.., B, H, D, D);   n: (.., B, H, D);  m: (.., B, H)
+      sLSTM c/n/h/m: (.., B, H, D)
+      rglru h:     (.., B, d_rnn);     conv: (.., B, w-1, d_rnn)
+      pos:         (B,)
+    """
+
+    def leaf_spec(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        if s.endswith("pos"):
+            return P()
+        stacked = s.startswith("cycles")
+        off = 1 if stacked else 0
+        spec = [None] * len(shape)
+        if len(shape) > off:
+            spec[off] = batch_axes
+        if re.search(r"/(k|v|ck|cv)(/(q|scale))?$", s) and len(shape) == 4 + off:
+            spec[off + 1] = "model"          # cache sequence dim
+        elif re.search(r"/C$", s) and len(shape) == 4 + off:
+            spec[-1] = "model"               # mLSTM memory column dim
+        elif re.search(r"/(n|h|c|conv)$", s) and len(shape) >= 2 + off:
+            spec[-1] = "model"               # state channel dim
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def to_named(tree_specs, mesh, tree_shapes=None):
+    """PartitionSpec trees -> NamedSharding trees, dropping axes that are
+    absent from the mesh and (when shapes are given) axes that do not divide
+    the corresponding dimension evenly (a jit-argument requirement)."""
+    if tree_shapes is None:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, _filter(s, mesh)), tree_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return jax.tree_util.tree_map(
+        lambda s, leaf: NamedSharding(mesh, _filter(s, mesh, leaf.shape)),
+        tree_specs, tree_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _axis_size(mesh, entry) -> int:
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _filter(spec: P, mesh, shape=None):
+    axis_names = mesh.axis_names
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in axis_names)
+            entry = kept if kept else None
+        else:
+            entry = entry if entry in axis_names else None
+        if entry is not None and shape is not None:
+            if i >= len(shape) or shape[i] % _axis_size(mesh, entry) != 0:
+                entry = None
+        out.append(entry)
+    return P(*out)

@@ -1,0 +1,1 @@
+"""Model zoo substrate: composable JAX transformer / SSM / hybrid blocks."""

@@ -1,0 +1,198 @@
+"""Attention: GQA/MQA, chunked flash-style causal, sliding-window, cross,
+and single-token decode against (ring-buffer) KV caches.
+
+The training/prefill path is a **double-blocked online-softmax scan** (outer
+scan over query blocks, inner scan over KV blocks) so that no (S x S) score
+matrix is ever materialized — this is what lets prefill_32k lower with
+bounded memory on the production mesh. The Pallas ``swa`` kernel
+(repro.kernels.swa) is the TPU-optimized equivalent; this file is the
+pure-JAX path used for dry-runs and as the kernel oracle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init, softcap
+from repro.models.sharding import shard_heads
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg: ModelConfig, cross: bool = False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd),
+        "wo": dense_init(ko, cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def _qkv(params, cfg: ModelConfig, x, positions, *, rope: bool = True,
+         x_kv=None, positions_kv=None):
+    """Project to (q, k, v) with optional qk-norm and RoPE."""
+    x_kv = x if x_kv is None else x_kv
+    positions_kv = positions if positions_kv is None else positions_kv
+    q = _split_heads(dense(params["wq"], x), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(dense(params["wk"], x_kv), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(params["wv"], x_kv), cfg.n_kv_heads, cfg.head_dim)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions_kv, cfg.rope_theta)
+    return shard_heads(q), shard_heads(k), shard_heads(v)
+
+
+class AttnMode(NamedTuple):
+    causal: bool
+    window: Optional[int]  # None -> full
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, KV, D)
+    v: jax.Array,            # (B, Sk, KV, D)
+    pos_q: jax.Array,        # (B, Sq) absolute positions (-1 = padding)
+    pos_k: jax.Array,        # (B, Sk)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    attn_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Blocked online-softmax attention; O(q_block * kv_block) live scores."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    # pad seq dims to block multiples
+    pq = (-Sq) % q_block
+    pk = (-Sk) % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        pos_q = jnp.pad(pos_q, ((0, 0), (0, pq)), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pk)), constant_values=-1)
+    nq, nk = (Sq + pq) // q_block, (Sk + pk) // kv_block
+
+    qb = q.reshape(B, nq, q_block, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    pqb = pos_q.reshape(B, nq, q_block).transpose(1, 0, 2)
+    kb = k.reshape(B, nk, kv_block, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_block, KV, D).transpose(1, 0, 2, 3, 4)
+    pkb = pos_k.reshape(B, nk, kv_block).transpose(1, 0, 2)
+    scale = D ** -0.5
+
+    @jax.checkpoint
+    def q_step(_, q_in):
+        # checkpointed: autodiff through the kv scan would otherwise save
+        # every (BQ, BK) probability block — the full S x S attention matrix.
+        # Recomputing the inner scan in backward keeps live memory O(S * BK).
+        qi, pqi = q_in  # (B, qb, KV, G, D), (B, qb)
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kj, vj, pkj = kv_in
+            s = jnp.einsum(
+                "bqkgd,bckd->bqkgc", qi, kj, preferred_element_type=jnp.float32
+            ) * scale
+            s = softcap(s, attn_softcap)
+            valid = (pkj[:, None, :] >= 0) & (pqi[:, :, None] >= 0)
+            if causal:
+                valid &= pkj[:, None, :] <= pqi[:, :, None]
+            if window is not None:
+                valid &= pqi[:, :, None] - pkj[:, None, :] < window
+            s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + p.sum(axis=-1)
+            acc_new = corr[..., None] * acc + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_block, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_block, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, q_block, KV, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, pkb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, pqb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq + pq, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, D)
+    k_cache: jax.Array,      # (B, S, KV, D)  (RoPE already applied)
+    v_cache: jax.Array,
+    valid: jax.Array,        # (B, S) bool — slot holds a real key
+    attn_softcap: Optional[float] = None,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (D ** -0.5)
+    s = softcap(s, attn_softcap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def self_attention_block(
+    params, cfg: ModelConfig, x, positions, *, window: Optional[int],
+) -> jax.Array:
+    """Training/prefill self-attention (causal)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    out = flash_attention(
+        q, k, v, positions, positions, causal=True, window=window,
+        attn_softcap=cfg.attn_softcap,
+    )
+    b, s, _, _ = out.shape
+    return dense(params["wo"], out.reshape(b, s, -1))
+
+
+def cross_attention_block(params, cfg: ModelConfig, x, memory, mem_valid):
+    """Decoder cross-attention over encoder memory (no mask, no RoPE)."""
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos_k = jnp.where(mem_valid, jnp.arange(sm)[None], -1)
+    q, k, v = _qkv(
+        params, cfg, x, pos_q, rope=False, x_kv=memory, positions_kv=pos_k
+    )
+    out = flash_attention(
+        q, k, v, pos_q, pos_k, causal=False, window=None,
+        attn_softcap=cfg.attn_softcap,
+    )
+    return dense(params["wo"], out.reshape(b, s, -1))

@@ -1,0 +1,120 @@
+"""Decode-time state: KV caches (full + sliding-window ring buffer) and
+recurrent states, laid out for scan-over-layers models.
+
+Cache layout mirrors the block layout of the model: per-cycle stacked leaves
+(leading ``n_cycles`` axis) plus unrolled remainder blocks. A single global
+position counter ``pos`` (B,) is shared by all layers. RoPE is applied to
+keys *before* caching, so ring-buffer slots need no position bookkeeping
+beyond validity.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.xlstm import MLSTMState, SLSTMState
+from repro.models.rglru import RGLRUState
+
+
+def _attn_entry(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.kv_quant:
+        from repro.models.kvquant import quant_entry
+        return quant_entry(cfg, batch, max_len)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def _swa_entry(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    w = min(cfg.sliding_window, max_len)
+    return _attn_entry(cfg, batch, w, dtype)
+
+
+def _mlstm_entry(cfg: ModelConfig, batch: int, dtype):
+    H = cfg.n_heads
+    D = int(cfg.mlstm_proj_factor * cfg.d_model) // H
+    return MLSTMState(
+        C=jnp.zeros((batch, H, D, D), jnp.float32),
+        n=jnp.zeros((batch, H, D), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def _slstm_entry(cfg: ModelConfig, batch: int, dtype):
+    H = cfg.n_heads
+    D = cfg.d_model // H
+    z = jnp.zeros((batch, H, D), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((batch, H, D), -1e30, jnp.float32))
+
+
+def _rglru_entry(cfg: ModelConfig, batch: int, dtype):
+    return RGLRUState(
+        h=jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, cfg.d_rnn), jnp.float32),
+    )
+
+
+def block_cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    if kind in ("attn", "moe"):
+        entry = _attn_entry(cfg, batch, max_len, dtype)
+    elif kind == "swa":
+        entry = _swa_entry(cfg, batch, max_len, dtype)
+    elif kind == "mlstm":
+        entry = _mlstm_entry(cfg, batch, dtype)
+    elif kind == "slstm":
+        entry = _slstm_entry(cfg, batch, dtype)
+    elif kind == "rglru":
+        entry = _rglru_entry(cfg, batch, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    if cfg.is_encdec and kind in ("attn", "moe", "swa"):
+        # precomputed cross-attention K/V over the encoder memory
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        entry = dict(entry)
+        entry["ck"] = jnp.zeros((batch, cfg.enc_seq, kv, hd), dtype)
+        entry["cv"] = jnp.zeros((batch, cfg.enc_seq, kv, hd), dtype)
+    return entry
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Build the full decode cache matching the model's block layout."""
+    pattern = cfg.block_pattern
+    cl = len(pattern)
+    n_cycles, rem = divmod(cfg.n_layers, cl)
+
+    def cycle_entry(_):
+        return tuple(
+            block_cache_entry(cfg, kind, batch, max_len, dtype)
+            for kind in pattern
+        )
+
+    if n_cycles > 0:
+        cycles = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[cycle_entry(i) for i in range(n_cycles)]
+        ) if n_cycles > 1 else jax.tree.map(
+            lambda x: x[None], cycle_entry(0)
+        )
+    else:
+        cycles = None
+    rem_entries = tuple(
+        block_cache_entry(cfg, pattern[i % cl], batch, max_len, dtype)
+        for i in range(n_cycles * cl, cfg.n_layers)
+    )
+    return {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "cycles": cycles,
+        "rem": rem_entries,
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree of the cache (for dry-run lowering)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))

@@ -1,0 +1,146 @@
+"""Unified model configuration covering all six assigned families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+
+    # --- block layout ----------------------------------------------------
+    # The layer stack cycles through `block_pattern`; n_layers need not be a
+    # multiple of the cycle (the remainder is unrolled). Block kinds:
+    #   "attn"       global causal attention + MLP
+    #   "swa"        sliding-window causal attention + MLP
+    #   "moe"        attention + MoE FFN
+    #   "mlstm"      xLSTM matrix-memory block
+    #   "slstm"      xLSTM scalar-memory block
+    #   "rglru"      Griffin RG-LRU recurrent block + MLP
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # --- attention ---------------------------------------------------------
+    sliding_window: int = 4096
+    kv_quant: bool = False       # int8 KV caches (decode-memory lever)
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    logits_softcap: Optional[float] = None
+    attn_softcap: Optional[float] = None
+
+    # --- mlp -----------------------------------------------------------
+    mlp_type: str = "swiglu"    # swiglu | geglu | gelu
+
+    # --- moe ------------------------------------------------------------
+    n_experts: int = 0
+    n_experts_active: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.5
+    router_aux_weight: float = 0.01
+    # "gspmd": einsum + sharding constraints, partitioner chooses collectives.
+    # "shardmap": explicit per-model-shard schedule with psum_scatter
+    # (reduce-scatter) instead of the partitioner's (B,E,C,d) all-reduce —
+    # see EXPERIMENTS.md §Perf (granite hillclimb). Falls back to gspmd when
+    # no mesh is active (single-device tests).
+    moe_impl: str = "gspmd"
+
+    # --- recurrent families ----------------------------------------------
+    d_rnn: int = 0              # rglru width (defaults to d_model)
+    conv1d_width: int = 4
+    rglru_c: float = 8.0
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    chunk_size: int = 64        # mlstm chunkwise-parallel chunk
+
+    # --- encoder-decoder (audio) ------------------------------------------
+    n_enc_layers: int = 0       # >0 => encoder-decoder
+    enc_seq: int = 0            # encoder memory length (frames)
+
+    # --- multimodal stub frontends -----------------------------------------
+    n_prefix_embeddings: int = 0   # vision patches prepended to the sequence
+
+    # --- misc ----------------------------------------------------------
+    remat: bool = False          # activation checkpointing per layer cycle
+    # Unroll the layer-cycle scan into straight-line HLO. Used by the
+    # dry-run: XLA's HloCostAnalysis counts while-loop bodies ONCE
+    # (verified empirically), so scanned models under-report FLOPs/bytes/
+    # collectives by ~n_cycles. Unrolling makes the compiled-artifact
+    # roofline exact at the cost of larger HLO.
+    unroll_cycles: bool = False
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    # ELM multi-task head (the paper's technique; attached when r > 0)
+    elm_rank: int = 0
+    elm_n_tasks: int = 0
+    elm_d_out: int = 0
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.d_rnn == 0:
+            object.__setattr__(self, "d_rnn", self.d_model)
+        if self.n_heads % self.n_kv_heads != 0:
+            raise ValueError("n_heads must be a multiple of n_kv_heads")
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for rooflines."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d * (1 if self.tie_embeddings else 2)
+        hd = self.head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        dense_mlp = 3 * d * self.d_ff if self.mlp_type in ("swiglu", "geglu") else 2 * d * self.d_ff
+        moe_mlp = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+        dr = self.d_rnn
+        rglru = 2 * d * dr + dr * d + self.conv1d_width * dr + 2 * dr + dense_mlp
+        dm = int(self.mlstm_proj_factor * d)
+        mlstm = 2 * d * dm + dm * d + 3 * dm * (dm // max(self.n_heads, 1)) // max(dm // max(self.n_heads, 1), 1) * dm  # approx
+        mlstm = 2 * d * dm + dm * d + 4 * dm * dm // max(self.n_heads, 1)
+        slstm = 4 * d * d // max(self.n_heads, 1) * self.n_heads + int(self.slstm_proj_factor * d) * d * 2
+        for kind in self.layer_kinds():
+            if kind in ("attn", "swa"):
+                total += attn + dense_mlp
+            elif kind == "moe":
+                total += attn + moe_mlp
+            elif kind == "rglru":
+                total += rglru
+            elif kind == "mlstm":
+                total += mlstm
+            elif kind == "slstm":
+                total += slstm
+        if self.is_encdec:
+            # encoder blocks + decoder cross-attention
+            total += self.n_enc_layers * (attn + dense_mlp)
+            total += self.n_layers * attn  # cross-attn per decoder layer
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE uses n_experts_active)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        moe_total = len([k for k in self.layer_kinds() if k == "moe"]) * (
+            self.n_experts * 3 * d * self.moe_d_ff
+        )
+        moe_active = len([k for k in self.layer_kinds() if k == "moe"]) * (
+            self.n_experts_active * 3 * d * self.moe_d_ff
+        )
+        return full - moe_total + moe_active

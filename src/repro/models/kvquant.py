@@ -1,0 +1,66 @@
+"""Int8 KV-cache quantization — the §Roofline lever for memory-bound decode.
+
+Every decode shape in the matrix is HBM-bound on weights + cache reads
+(EXPERIMENTS.md §Roofline); halving cache bytes moves the dominant term
+directly. Scheme: per-(position, head) symmetric int8 with an fp16-range
+scale stored alongside (amortized 1/head_dim overhead ≈ 0.8%):
+
+    k_q = round(k / s), s = max|k| / 127        (per written row)
+
+Dequantization happens inside the attention read, fused by XLA into the
+score matmul's operand load. Enabled via ``ModelConfig.kv_quant = True``
+(decode caches only — prefill/training activations stay bf16).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedKV(NamedTuple):
+    q: jax.Array       # int8, same shape as the original cache line
+    scale: jax.Array   # bf16, shape[..., 1] per-row scale
+
+
+def quantize(x: jax.Array) -> QuantizedKV:
+    """x: (..., head_dim) -> int8 values + per-row scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return QuantizedKV(q.astype(jnp.int8), scale.astype(jnp.bfloat16))
+
+
+def dequantize(qkv: QuantizedKV, dtype=jnp.bfloat16) -> jax.Array:
+    return (qkv.q.astype(jnp.float32)
+            * qkv.scale.astype(jnp.float32)).astype(dtype)
+
+
+def quant_entry(cfg, batch: int, max_len: int):
+    """Cache-entry layout for a quantized KV line."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": QuantizedKV(
+            q=jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+            scale=jnp.zeros((batch, max_len, kv, 1), jnp.bfloat16),
+        ),
+        "v": QuantizedKV(
+            q=jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+            scale=jnp.zeros((batch, max_len, kv, 1), jnp.bfloat16),
+        ),
+    }
+
+
+def write_row(entry_kv: QuantizedKV, bidx, slot, new_row) -> QuantizedKV:
+    """Insert one (B, kv, hd) row at per-batch slots."""
+    qn = quantize(new_row)
+    return QuantizedKV(
+        q=entry_kv.q.at[bidx, slot].set(qn.q),
+        scale=entry_kv.scale.at[bidx, slot].set(qn.scale),
+    )
+
+
+def read_all(entry_kv: QuantizedKV, dtype=jnp.bfloat16) -> jax.Array:
+    return dequantize(entry_kv, dtype)

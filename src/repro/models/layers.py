@@ -1,0 +1,84 @@
+"""Basic layers: norms, dense, embeddings, rotary embeddings.
+
+Functional style: ``*_init(key, ...) -> params`` pytrees of jnp arrays and
+pure ``apply`` functions. Compute dtype follows the input; params are stored
+in float32 (master) and cast at use (standard mixed-precision layout).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return {"w": scale * jax.random.normal(key, (d_in, d_out), jnp.float32)}
+
+
+def dense(params, x):
+    return x @ params["w"].astype(x.dtype)
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int):
+    scale = d ** -0.5
+    return {"table": scale * jax.random.normal(key, (vocab, d), jnp.float32)}
+
+
+def embed(params, tokens, dtype=jnp.bfloat16):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    """Tied read-out: logits = x @ table^T (fp32 accumulation)."""
+    table = params["table"].astype(x.dtype)
+    return jnp.einsum(
+        "...d,vd->...v", x, table, preferred_element_type=jnp.float32
+    )
+
+
+# --- rotary position embeddings -------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) absolute positions."""
+    freqs = rope_frequencies(x.shape[-1], theta)                 # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,35 @@
+"""Dense MLPs: SwiGLU (llama/qwen), GeGLU (gemma), plain GELU (seamless)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, dense_init
+from repro.models.sharding import shard_ff
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = cfg.d_ff if d_ff is None else d_ff
+    d = cfg.d_model
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, d, d_ff),
+            "w_up": dense_init(k2, d, d_ff),
+            "w_down": dense_init(k3, d_ff, d),
+        }
+    k1, k2 = jax.random.split(key)
+    return {"w_up": dense_init(k1, d, d_ff), "w_down": dense_init(k2, d_ff, d)}
+
+
+def mlp(params, cfg: ModelConfig, x):
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(dense(params["w_gate"], x)) * dense(params["w_up"], x)
+        h = shard_ff(h)
+        return dense(params["w_down"], h)
+    h = jax.nn.gelu(dense(params["w_up"], x))
+    h = shard_ff(h)
+    return dense(params["w_down"], h)

@@ -1,0 +1,103 @@
+"""Griffin / RecurrentGemma recurrent block (arXiv:2402.19427).
+
+Structure per block:  x -> [gate branch: Dense -> GeLU]
+                        -> [rnn branch: Dense -> causal Conv1D(w=4) -> RG-LRU]
+                      out = Dense(gate * rnn)
+
+RG-LRU:  r_t = sigmoid(W_r u_t + b_r)          (recurrence gate)
+         i_t = sigmoid(W_i u_t + b_i)          (input gate)
+         log a_t = -c * softplus(Lambda) * r_t (per-channel decay, log space)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+A diagonal *linear* recurrence -> evaluated with ``jax.lax.associative_scan``
+in O(log S) depth (the TPU-friendly form; the Pallas ``rglru`` kernel is the
+blocked-time-scan variant for real hardware). Decode is a single fused
+elementwise update with carried (h, conv window) state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, dense_init
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, d_rnn) recurrent state
+    conv: jax.Array       # (B, w-1, d_rnn) trailing conv inputs
+
+
+def rglru_init(key, cfg: ModelConfig):
+    d, dr, w = cfg.d_model, cfg.d_rnn, cfg.conv1d_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(Lambda)) spans ~(0.9, 0.999)
+    lam = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.0, 1.0)
+    return {
+        "w_gate": dense_init(ks[1], d, dr),
+        "w_rnn": dense_init(ks[2], d, dr),
+        "conv": {"w": 0.1 * jax.random.normal(ks[3], (w, dr), jnp.float32),
+                 "b": jnp.zeros((dr,), jnp.float32)},
+        "w_r": dense_init(ks[4], dr, dr),
+        "w_i": dense_init(ks[5], dr, dr),
+        "b_r": {"b": jnp.zeros((dr,), jnp.float32)},
+        "b_i": {"b": jnp.zeros((dr,), jnp.float32)},
+        "lam": {"lam": lam},
+        "w_out": dense_init(jax.random.fold_in(key, 7), dr, d),
+    }
+
+
+def _causal_conv1d(params, x, state_conv):
+    """Depthwise causal conv. x: (B,S,D); state_conv: (B,w-1,D) or None."""
+    w = params["w"].shape[0]
+    if state_conv is None:
+        x_pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state_conv.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + x_pad[:, i : i + x.shape[1]] * params["w"][i].astype(x.dtype)
+    out = out + params["b"].astype(x.dtype)
+    new_state = x_pad[:, -(w - 1):]
+    return out, new_state
+
+
+def _rglru_scan(u, r, i, lam, c, h0):
+    """u,r,i: (B,S,D) float32. Linear scan h_t = a_t h_{t-1} + b_t."""
+    log_a = -c * jax.nn.softplus(lam) * r                   # (B,S,D) <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = beta * (i * u)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    # fold the initial state into the first step
+    b = b.at[:, 0].add(a[:, 0] * h0)
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(params, cfg: ModelConfig, x, state: RGLRUState | None):
+    """x: (B, S, d). Returns (out, new_state)."""
+    B, S, d = x.shape
+    dr = cfg.d_rnn
+    gate = jax.nn.gelu(dense(params["w_gate"], x))
+    u = dense(params["w_rnn"], x)
+    u, conv_state = _causal_conv1d(
+        params["conv"], u, state.conv if state is not None else None
+    )
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(params["w_r"], uf) + params["b_r"]["b"])
+    i = jax.nn.sigmoid(dense(params["w_i"], uf) + params["b_i"]["b"])
+    h0 = state.h if state is not None else jnp.zeros((B, dr), jnp.float32)
+    h = _rglru_scan(uf, r, i, params["lam"]["lam"], cfg.rglru_c, h0)
+    out = dense(params["w_out"], h.astype(x.dtype) * gate)
+    new_state = RGLRUState(h=h[:, -1], conv=conv_state)
+    return out, new_state

@@ -1,0 +1,578 @@
+"""Model assembly: block zoo, scan-over-layers stacks, forward / prefill /
+decode entry points for all six architecture families.
+
+Layer layout: ``cfg.block_pattern`` repeats over ``n_layers``; full cycles
+are stacked and driven by ``lax.scan`` (keeps HLO size O(cycle) instead of
+O(n_layers) — essential for 60-layer dry-run compiles), the remainder is
+unrolled. Three execution modes share one block implementation:
+
+  train   — full-sequence, no cache I/O;
+  prefill — full-sequence, additionally returns per-block cache entries;
+  decode  — single token, reads + updates cache entries.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attention_init,
+    cross_attention_block,
+    decode_attention,
+    self_attention_block,
+    _qkv,
+)
+from repro.models.cache import init_cache
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense,
+    embed,
+    embedding_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+    unembed,
+)
+from repro.models.mlp import mlp, mlp_init
+from repro.models.moe import moe_ffn, moe_init
+from repro.models.rglru import rglru_block, rglru_init
+from repro.models.sharding import shard_batch_seq
+from repro.models.xlstm import mlstm_block, mlstm_init, slstm_block, slstm_init
+
+
+def _norm_init(cfg: ModelConfig, d=None):
+    d = cfg.d_model if d is None else d
+    return layernorm_init(d) if cfg.family == "audio" else rmsnorm_init(d)
+
+
+def _norm(cfg: ModelConfig, params, x):
+    fn = layernorm if cfg.family == "audio" else rmsnorm
+    return fn(params, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, kind: str, with_cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": _norm_init(cfg)}
+    if kind in ("attn", "swa", "moe"):
+        p["attn"] = attention_init(ks[0], cfg)
+        p["ln2"] = _norm_init(cfg)
+        if kind == "moe":
+            p["moe"] = moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg)
+        if with_cross:
+            p["ln_cross"] = _norm_init(cfg)
+            p["cross"] = attention_init(ks[2], cfg, cross=True)
+    elif kind == "mlstm":
+        p["mlstm"] = mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = slstm_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["rglru"] = rglru_init(ks[0], cfg)
+        p["ln2"] = _norm_init(cfg)
+        p["mlp"] = mlp_init(ks[1], cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p
+
+
+def _decode_self_attention(params, cfg: ModelConfig, x, entry, pos, window):
+    """Single-token attention against the (ring, optionally int8) KV cache."""
+    from repro.models.kvquant import QuantizedKV, read_all, write_row
+
+    B = x.shape[0]
+    positions = pos[:, None]                                  # (B,1)
+    q, k_new, v_new = _qkv(params, cfg, x, positions)
+    quant = isinstance(entry["k"], QuantizedKV)
+    S = (entry["k"].q if quant else entry["k"]).shape[1]
+    if window is None:
+        slot = pos
+        valid = jnp.arange(S)[None] <= pos[:, None]
+    else:
+        slot = pos % S
+        n_valid = jnp.minimum(pos + 1, S)
+        valid = jnp.arange(S)[None] < n_valid[:, None]
+    bidx = jnp.arange(B)
+    if quant:
+        k_entry = write_row(entry["k"], bidx, slot, k_new[:, 0])
+        v_entry = write_row(entry["v"], bidx, slot, v_new[:, 0])
+        k_all = read_all(k_entry, q.dtype)
+        v_all = read_all(v_entry, q.dtype)
+    else:
+        k_entry = k_all = entry["k"].at[bidx, slot].set(
+            k_new[:, 0].astype(entry["k"].dtype))
+        v_entry = v_all = entry["v"].at[bidx, slot].set(
+            v_new[:, 0].astype(entry["v"].dtype))
+    out = decode_attention(q, k_all, v_all, valid, cfg.attn_softcap)
+    out = dense(params["wo"], out.reshape(B, 1, -1))
+    return out, {"k": k_entry, "v": v_entry}
+
+
+def _prefill_cache_kv(cfg, k, v, positions, max_len, window):
+    """Pack prompt K/V into a fresh (ring, optionally int8) cache buffer."""
+    from repro.models.kvquant import QuantizedKV, quantize
+
+    B, S = k.shape[0], k.shape[1]
+    if cfg.kv_quant:
+        kq, vq = quantize(k), quantize(v)
+        ke = _prefill_cache_kv_raw(kq.q, vq.q, max_len, window,
+                                   jnp.int8)
+        se = _prefill_cache_kv_raw(kq.scale, vq.scale, max_len, window,
+                                   jnp.bfloat16)
+        return {
+            "k": QuantizedKV(q=ke["k"], scale=se["k"]),
+            "v": QuantizedKV(q=ke["v"], scale=se["v"]),
+        }
+    return _prefill_cache_kv_raw(k, v, max_len, window, k.dtype)
+
+
+def _prefill_cache_kv_raw(k, v, max_len, window, dtype):
+    B, S = k.shape[0], k.shape[1]
+    k = k.astype(dtype)
+    v = v.astype(dtype)
+    if window is None:
+        buf_k = jnp.zeros((B, max_len, *k.shape[2:]), k.dtype)
+        buf_v = jnp.zeros((B, max_len, *v.shape[2:]), v.dtype)
+        buf_k = jax.lax.dynamic_update_slice(buf_k, k, (0, 0, 0, 0))
+        buf_v = jax.lax.dynamic_update_slice(buf_v, v, (0, 0, 0, 0))
+        return {"k": buf_k, "v": buf_v}
+    W = min(window, max_len)
+    Wp = min(S, W)
+    p0 = S - Wp + jnp.arange(Wp)
+    slots = p0 % W
+    buf_k = jnp.zeros((B, W, *k.shape[2:]), k.dtype).at[:, slots].set(k[:, p0])
+    buf_v = jnp.zeros((B, W, *v.shape[2:]), v.dtype).at[:, slots].set(v[:, p0])
+    return {"k": buf_k, "v": buf_v}
+
+
+def block_apply(
+    params,
+    cfg: ModelConfig,
+    kind: str,
+    x,
+    *,
+    mode: str = "train",            # train | prefill | decode
+    positions=None,                  # (B,S) train/prefill
+    entry=None,                      # cache entry (prefill: template, decode: live)
+    pos=None,                        # (B,) decode position
+    memory=None,                     # encoder memory (B,F,d)
+    mem_valid=None,
+    causal: bool = True,
+):
+    """Returns (x, new_entry, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_entry = entry
+    window = cfg.sliding_window if kind == "swa" else None
+
+    if kind in ("attn", "swa", "moe"):
+        h = _norm(cfg, params["ln1"], x)
+        if mode == "decode":
+            a, kv_entry = _decode_self_attention(
+                params["attn"], cfg, h, entry, pos, window
+            )
+            new_entry = dict(entry)
+            new_entry.update(kv_entry)
+        else:
+            if mode == "prefill":
+                q, k, v = _qkv(params["attn"], cfg, h, positions)
+                from repro.models.attention import flash_attention
+                o = flash_attention(
+                    q, k, v, positions, positions, causal=causal,
+                    window=window, attn_softcap=cfg.attn_softcap,
+                )
+                a = dense(params["attn"]["wo"], o.reshape(*x.shape[:2], -1))
+                from repro.models.kvquant import QuantizedKV
+                if isinstance(entry["k"], QuantizedKV):
+                    max_len = entry["k"].q.shape[1]
+                else:
+                    max_len = entry["k"].shape[1]
+                    k = k.astype(entry["k"].dtype)
+                    v = v.astype(entry["v"].dtype)
+                kv_entry = _prefill_cache_kv(
+                    cfg, k, v, positions,
+                    max_len if window is None else window,
+                    window,
+                )
+                new_entry = dict(entry)
+                new_entry.update(kv_entry)
+            else:
+                a = self_attention_block(
+                    params["attn"], cfg, h, positions, window=window
+                ) if causal else cross_free_self_attention(
+                    params["attn"], cfg, h, positions
+                )
+        x = x + a
+        if "cross" in params:
+            hc = _norm(cfg, params["ln_cross"], x)
+            if mode == "decode":
+                B = x.shape[0]
+                qc, _, _ = _qkv(
+                    params["cross"], cfg, hc, pos[:, None], rope=False,
+                    x_kv=hc, positions_kv=pos[:, None],
+                )
+                valid = jnp.ones(
+                    (B, entry["ck"].shape[1]), bool
+                ) if mem_valid is None else mem_valid
+                oc = decode_attention(
+                    qc, entry["ck"], entry["cv"], valid, cfg.attn_softcap
+                )
+                c = dense(params["cross"]["wo"], oc.reshape(B, 1, -1))
+            else:
+                mv = (
+                    jnp.ones((x.shape[0], memory.shape[1]), bool)
+                    if mem_valid is None else mem_valid
+                )
+                c = cross_attention_block(params["cross"], cfg, hc, memory, mv)
+                if mode == "prefill":
+                    _, ck, cv = _qkv(
+                        params["cross"], cfg, memory,
+                        jnp.zeros(memory.shape[:2], jnp.int32), rope=False,
+                    )
+                    new_entry = dict(new_entry)
+                    new_entry["ck"] = ck.astype(entry["ck"].dtype)
+                    new_entry["cv"] = cv.astype(entry["cv"].dtype)
+            x = x + c
+        h2 = _norm(cfg, params["ln2"], x)
+        if kind == "moe":
+            f, aux = moe_ffn(params["moe"], cfg, h2)
+        else:
+            f = mlp(params["mlp"], cfg, h2)
+        x = x + f
+    elif kind == "mlstm":
+        h = _norm(cfg, params["ln1"], x)
+        state = entry if mode == "decode" else None
+        o, new_state = mlstm_block(params["mlstm"], cfg, h, state)
+        x = x + o
+        if mode in ("decode", "prefill"):
+            new_entry = new_state
+    elif kind == "slstm":
+        h = _norm(cfg, params["ln1"], x)
+        state = entry if mode == "decode" else None
+        o, new_state = slstm_block(params["slstm"], cfg, h, state)
+        x = x + o
+        if mode in ("decode", "prefill"):
+            new_entry = new_state
+    elif kind == "rglru":
+        h = _norm(cfg, params["ln1"], x)
+        state = entry if mode == "decode" else None
+        o, new_state = rglru_block(params["rglru"], cfg, h, state)
+        x = x + o
+        x = x + mlp(params["mlp"], cfg, _norm(cfg, params["ln2"], x))
+        if mode in ("decode", "prefill"):
+            new_entry = new_state
+    else:
+        raise ValueError(kind)
+    return shard_batch_seq(x), new_entry, aux
+
+
+def cross_free_self_attention(params, cfg, h, positions):
+    """Bidirectional (encoder) self-attention."""
+    from repro.models.attention import flash_attention
+    q, k, v = _qkv(params, cfg, h, positions)
+    o = flash_attention(
+        q, k, v, positions, positions, causal=False, window=None,
+        attn_softcap=cfg.attn_softcap,
+    )
+    return dense(params["wo"], o.reshape(*h.shape[:2], -1))
+
+
+# ---------------------------------------------------------------------------
+# whole-model init / apply
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig):
+    pattern = cfg.block_pattern
+    cl = len(pattern)
+    n_cycles, rem = divmod(cfg.n_layers, cl)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": embedding_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": _norm_init(cfg),
+    }
+    with_cross = cfg.is_encdec
+
+    def cycle_init(k):
+        kk = jax.random.split(k, cl)
+        return tuple(
+            block_init(kk[j], cfg, pattern[j], with_cross) for j in range(cl)
+        )
+
+    if n_cycles > 0:
+        cycle_keys = jax.random.split(keys[1], n_cycles)
+        params["cycles"] = jax.vmap(cycle_init)(cycle_keys)
+    else:
+        params["cycles"] = None
+    rem_keys = jax.random.split(keys[2], max(rem, 1))
+    params["rem"] = tuple(
+        block_init(rem_keys[i], cfg, pattern[(n_cycles * cl + i) % cl], with_cross)
+        for i in range(rem)
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embedding_init(keys[3], cfg.vocab_size, cfg.d_model)
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[4], cfg.n_enc_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: block_init(k, cfg, "attn", False)
+        )(enc_keys)
+        params["enc_norm"] = _norm_init(cfg)
+    if cfg.elm_rank > 0:
+        params["elm_head"] = {
+            "U": jax.random.normal(keys[5], (cfg.d_model, cfg.elm_rank),
+                                   jnp.float32) / (cfg.d_model ** 0.5),
+            "A": jnp.ones((cfg.elm_n_tasks, cfg.elm_rank, cfg.elm_d_out),
+                          jnp.float32),
+        }
+    return params
+
+
+def _run_encoder(params, cfg: ModelConfig, enc_embeds):
+    x = enc_embeds
+    B, F, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def enc_step(x, layer_params):
+        x, _, _ = block_apply(
+            layer_params, cfg, "attn", x, mode="train", positions=positions,
+            causal=False,
+        )
+        return x, None
+
+    if cfg.unroll_cycles:
+        for li in range(cfg.n_enc_layers):
+            layer = jax.tree.map(lambda p: p[li], params["encoder"])
+            x, _ = enc_step(x, layer)
+    else:
+        x, _ = jax.lax.scan(enc_step, x, params["encoder"])
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def _stack_apply(params, cfg: ModelConfig, x, *, mode, positions=None,
+                 cache=None, pos=None, memory=None):
+    """Run the cycle-scan + remainder; threads cache entries and aux."""
+    pattern = cfg.block_pattern
+    cl = len(pattern)
+    n_cycles, rem = divmod(cfg.n_layers, cl)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {"pos": None, "cycles": None, "rem": ()} if cache is not None else None
+
+    if n_cycles > 0:
+        if cache is None:
+            def cycle_fn(h, aux, cyc_params):
+                for j, kind in enumerate(pattern):
+                    h, _, a = block_apply(
+                        cyc_params[j], cfg, kind, h, mode="train",
+                        positions=positions, memory=memory,
+                    )
+                    aux = aux + a
+                return h, aux
+
+            if cfg.remat:
+                # full remat: save only the cycle-boundary carry (which is
+                # seq-sharded — see shard_batch_seq); recompute everything
+                # else in backward. The dots-saveable policy costs
+                # ~0.7 GB/layer at qwen3-8b scale (measured, DESIGN.md §10).
+                cycle_fn = jax.checkpoint(cycle_fn)
+
+            if cfg.unroll_cycles:
+                for ci in range(n_cycles):
+                    cyc = jax.tree.map(lambda p: p[ci], params["cycles"])
+                    x, aux_total = cycle_fn(x, aux_total, cyc)
+            else:
+                def body(carry, cyc_params):
+                    h, aux = cycle_fn(*carry, cyc_params)
+                    return (h, aux), None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    body, (x, aux_total), params["cycles"]
+                )
+        else:
+            def body(carry, xs):
+                h, aux = carry
+                cyc_params, cyc_cache = xs
+                new_entries = []
+                for j, kind in enumerate(pattern):
+                    h, ne, a = block_apply(
+                        cyc_params[j], cfg, kind, h, mode=mode,
+                        positions=positions, entry=cyc_cache[j], pos=pos,
+                        memory=memory,
+                    )
+                    aux = aux + a
+                    new_entries.append(ne)
+                return (h, aux), tuple(new_entries)
+
+            if cfg.unroll_cycles:
+                entries = []
+                for ci in range(n_cycles):
+                    xs = jax.tree.map(
+                        lambda p: p[ci], (params["cycles"], cache["cycles"])
+                    )
+                    (x, aux_total), ne = body((x, aux_total), xs)
+                    entries.append(ne)
+                new_cycles = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *entries
+                ) if n_cycles > 1 else jax.tree.map(
+                    lambda e: e[None], entries[0]
+                )
+            else:
+                (x, aux_total), new_cycles = jax.lax.scan(
+                    body, (x, aux_total), (params["cycles"], cache["cycles"])
+                )
+            new_cache["cycles"] = new_cycles
+
+    for i in range(rem):
+        kind = pattern[(n_cycles * cl + i) % cl]
+        entry = cache["rem"][i] if cache is not None else None
+        x, ne, a = block_apply(
+            params["rem"][i], cfg, kind, x, mode=mode, positions=positions,
+            entry=entry, pos=pos, memory=memory,
+        )
+        aux_total = aux_total + a
+        if cache is not None:
+            new_cache["rem"] = new_cache["rem"] + (ne,)
+    return x, new_cache, aux_total
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = _norm(cfg, params["final_norm"], x)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x)
+    return softcap(logits, cfg.logits_softcap)
+
+
+def forward_features(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+    enc_embeds: Optional[jax.Array] = None,
+):
+    """Training forward pass up to the final norm: ((B,S,d) hidden, aux)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed(params["embed"], tokens, dtype)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    B, S, _ = x.shape
+    x = shard_batch_seq(x)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    memory = None
+    if cfg.is_encdec:
+        memory = _run_encoder(params, cfg, enc_embeds.astype(dtype))
+    x, _, aux = _stack_apply(
+        params, cfg, x, mode="train", positions=positions, memory=memory
+    )
+    return _norm(cfg, params["final_norm"], x), aux
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S_text)
+    *,
+    prefix_embeds: Optional[jax.Array] = None,   # (B, P, d) vlm patches
+    enc_embeds: Optional[jax.Array] = None,      # (B, F, d) audio frames
+):
+    """Training forward pass. Returns (logits, aux_loss)."""
+    x, aux = forward_features(
+        params, cfg, tokens, prefix_embeds=prefix_embeds,
+        enc_embeds=enc_embeds,
+    )
+    head = params.get("lm_head", params["embed"])
+    logits = softcap(unembed(head, x), cfg.logits_softcap)
+    return logits, aux
+
+
+def encode(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+    enc_embeds: Optional[jax.Array] = None,
+):
+    """Backbone features: final-norm hidden states (B, S, d), no unembed.
+
+    This is the feature map ``h(X)`` of the paper's technique at scale
+    (DESIGN.md §3): the backbone acts as the ELM's frozen random hidden
+    layer, and the multi-task head learns (U, A_t) on top of these features.
+    """
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed(params["embed"], tokens, dtype)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    B, S, _ = x.shape
+    x = shard_batch_seq(x)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    memory = None
+    if cfg.is_encdec:
+        memory = _run_encoder(params, cfg, enc_embeds.astype(dtype))
+    x, _, _ = _stack_apply(
+        params, cfg, x, mode="train", positions=positions, memory=memory
+    )
+    return _norm(cfg, params["final_norm"], x)
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    max_len: int,
+    *,
+    prefix_embeds=None,
+    enc_embeds=None,
+    cache_dtype=jnp.bfloat16,
+):
+    """Process the prompt, returning (last_logits, cache)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed(params["embed"], tokens, dtype)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cache = init_cache(cfg, B, max_len, cache_dtype)
+    memory = None
+    if cfg.is_encdec:
+        memory = _run_encoder(params, cfg, enc_embeds.astype(dtype))
+    x, new_cache, _ = _stack_apply(
+        params, cfg, x, mode="prefill", positions=positions, cache=cache,
+        memory=memory,
+    )
+    new_cache["pos"] = jnp.full((B,), S, jnp.int32)
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache):
+    """One decode step. tokens: (B, 1). Returns (logits, new_cache)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed(params["embed"], tokens, dtype)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    pos = cache["pos"]
+    x, new_cache, _ = _stack_apply(
+        params, cfg, x, mode="decode", cache=cache, pos=pos
+    )
+    new_cache["pos"] = pos + 1
+    return _logits(params, cfg, x), new_cache
+
+
+def param_count(params) -> int:
+    return sum(
+        x.size for x in jax.tree.leaves(params) if hasattr(x, "size")
+    )

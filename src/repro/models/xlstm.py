@@ -1,0 +1,243 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory), both with stabilized exponential gating.
+
+TPU adaptation (DESIGN.md §2): the mLSTM recurrence
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_t q_t) / max(|n_t^T q_t|, e^{-m_t})
+is evaluated in **chunkwise-parallel form**: the sequence is split into
+chunks of ``cfg.chunk_size``; within a chunk all interactions are dense
+matmuls (MXU-shaped), and only the chunk-boundary states (C, n, m) are
+carried through a ``lax.scan`` — O(S/c) sequential steps instead of O(S).
+Stabilizer bookkeeping (m) follows the xLSTM paper's max-trick in log space.
+
+The sLSTM has a genuine nonlinear recurrence (h_{t-1} feeds the gates through
+a block-diagonal recurrent matrix), so it scans timestep-by-timestep; xLSTM
+uses it sparsely (1 in 8 blocks here) for exactly this reason.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+from repro.models.sharding import BATCH_AXES, MODEL_AXIS, maybe_shard
+
+
+# =====================  mLSTM  =============================================
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, D, D) matrix memory
+    n: jax.Array  # (B, H, D)    normalizer
+    m: jax.Array  # (B, H)       stabilizer (log space)
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dm = int(cfg.mlstm_proj_factor * d)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, dm),
+        "w_gate": dense_init(ks[1], d, dm),
+        "w_q": dense_init(ks[2], dm, dm),
+        "w_k": dense_init(ks[3], dm, dm),
+        "w_v": dense_init(ks[4], dm, dm),
+        "w_if": {"w": 0.01 * jax.random.normal(ks[5], (dm, 2 * H), jnp.float32),
+                 "b": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))])},
+        "out_norm": rmsnorm_init(dm),
+        "w_down": dense_init(ks[6], dm, d),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, i_gate, state: MLSTMState, chunk: int):
+    """q,k,v: (B, H, S, D); log_f, i_gate: (B, H, S). Returns (h, state)."""
+    B, H, S, D = q.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+    nc = (S + pad) // c
+    qc = q.reshape(B, H, nc, c, D).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nc, c, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, c, D).transpose(2, 0, 1, 3, 4)
+    fc = log_f.reshape(B, H, nc, c).transpose(2, 0, 1, 3)
+    ic = i_gate.reshape(B, H, nc, c).transpose(2, 0, 1, 3)
+    scale = D ** -0.5
+
+    @jax.checkpoint
+    def chunk_step(carry: MLSTMState, xs):
+        # checkpointed: scan's VJP would otherwise save every per-chunk
+        # intermediate (~4x the carry); with remat it saves only the carry.
+        qi, ki, vi, fi, ii = xs          # (B,H,c,D) / (B,H,c)
+        C_prev, n_prev, m_prev = carry
+        A = jnp.cumsum(fi, axis=-1)                       # (B,H,c) inclusive
+        # cumulative max of (b_j - A_j) within the chunk
+        bmA = ii - A
+        gmax = jax.lax.cummax(bmA, axis=2)
+        m_i = A + jnp.maximum(m_prev[..., None], gmax)    # (B,H,c)
+
+        # intra-chunk: S_ij = (q_i k_j / sqrt(D)) exp(A_i - A_j + b_j - m_i)
+        qk = jnp.einsum("bhid,bhjd->bhij", qi, ki,
+                        preferred_element_type=jnp.float32) * scale
+        logw = (A[..., :, None] - A[..., None, :] + ii[..., None, :]
+                - m_i[..., :, None])
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(causal, jnp.exp(logw), 0.0)
+        Sij = qk * w
+        num_intra = jnp.einsum("bhij,bhjd->bhid", Sij.astype(vi.dtype), vi,
+                               preferred_element_type=jnp.float32)
+        den_intra = Sij.sum(axis=-1)                       # (B,H,c)
+
+        # inter-chunk contribution from carried state
+        decay_q = jnp.exp(m_prev[..., None] + A - m_i)     # (B,H,c)
+        Cq = jnp.einsum("bhde,bhie->bhid", C_prev, qi.astype(jnp.float32) * scale)
+        nq = jnp.einsum("bhd,bhid->bhi", n_prev, qi.astype(jnp.float32) * scale)
+        num = num_intra + decay_q[..., None] * Cq
+        den = den_intra + decay_q * nq
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+        # chunk-end state update
+        A_c = A[..., -1:]                                  # (B,H,1)
+        m_new = m_i[..., -1]
+        w_state = jnp.exp(A_c - A + ii - m_new[..., None])  # (B,H,c)
+        # C[d, e] = sum_j w_j v_j[d] k_j[e]  (v-major, matching C q~ = sum
+        # (k.q~) v — validated against the sequential oracle in
+        # tests/test_kernels_mlstm.py)
+        kv = jnp.einsum("bhjd,bhje->bhde",
+                        (w_state[..., None] * vi.astype(jnp.float32)),
+                        ki.astype(jnp.float32))
+        decay_C = jnp.exp(m_prev + A_c[..., 0] - m_new)    # (B,H)
+        C_new = decay_C[..., None, None] * C_prev + kv
+        n_new = decay_C[..., None] * n_prev + jnp.einsum(
+            "bhj,bhjd->bhd", w_state, ki.astype(jnp.float32))
+        # the carry is saved per chunk for the backward pass: keep the
+        # (B, H, D, D) matrix memory sharded over "model" (its column dim)
+        # so those saves cost D/16 per device, not D.
+        C_new = maybe_shard(C_new, P(BATCH_AXES, None, None, MODEL_AXIS))
+        n_new = maybe_shard(n_new, P(BATCH_AXES, None, MODEL_AXIS))
+        return MLSTMState(C_new, n_new, m_new), h.astype(q.dtype)
+
+    final, hs = jax.lax.scan(chunk_step, state, (qc, kc, vc, fc, ic))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S + pad, D)[:, :, :S]
+    return h, final
+
+
+def mlstm_block(params, cfg: ModelConfig, x, state: MLSTMState | None):
+    """x: (B, S, d). Returns (out, new_state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dm = int(cfg.mlstm_proj_factor * d)
+    D = dm // H
+    up = dense(params["w_up"], x)                 # (B,S,dm)
+    gate = dense(params["w_gate"], x)
+    q = dense(params["w_q"], up).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    k = dense(params["w_k"], up).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    v = dense(params["w_v"], up).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    if_pre = (up @ params["w_if"]["w"].astype(up.dtype)
+              + params["w_if"]["b"].astype(up.dtype))
+    i_gate = if_pre[..., :H].astype(jnp.float32).transpose(0, 2, 1)   # (B,H,S)
+    log_f = jax.nn.log_sigmoid(
+        if_pre[..., H:].astype(jnp.float32)
+    ).transpose(0, 2, 1)
+
+    if state is None:
+        state = MLSTMState(
+            C=jnp.zeros((B, H, D, D), jnp.float32),
+            n=jnp.zeros((B, H, D), jnp.float32),
+            m=jnp.full((B, H), -1e30, jnp.float32),
+        )
+    h, new_state = _mlstm_chunk_scan(q, k, v, log_f, i_gate, state,
+                                     cfg.chunk_size)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, dm)
+    h = rmsnorm(params["out_norm"], h, cfg.norm_eps)
+    out = dense(params["w_down"], h * jax.nn.silu(gate))
+    return out, new_state
+
+
+# =====================  sLSTM  =============================================
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, D) cell
+    n: jax.Array  # (B, H, D) normalizer
+    h: jax.Array  # (B, H, D) hidden (feeds back)
+    m: jax.Array  # (B, H, D) stabilizer
+
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    D = d // H
+    df = int(cfg.slstm_proj_factor * d)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_x": dense_init(ks[0], d, 4 * d),    # i, f, z, o pre-activations
+        "r": {"w": (1.0 / D) ** 0.5
+              * jax.random.normal(ks[1], (H, D, 4 * D), jnp.float32)},
+        "b": {"b": jnp.tile(
+            jnp.concatenate([jnp.zeros((D,)), 3.0 * jnp.ones((D,)),
+                             jnp.zeros((2 * D,))]), (H,)).reshape(H, 4 * D)},
+        "out_norm": rmsnorm_init(d),
+        "ffn_up": dense_init(ks[2], d, 2 * df),
+        "ffn_down": dense_init(ks[3], df, d),
+    }
+
+
+def slstm_scan(params, cfg: ModelConfig, x_pre, state: SLSTMState):
+    """x_pre: (B, S, H, 4D) input pre-activations; sequential over S."""
+    B, S, H, D4 = x_pre.shape
+    D = D4 // 4
+    R = params["r"]["w"]                       # (H, D, 4D)
+    b = params["b"]["b"]                       # (H, 4D)
+
+    @jax.checkpoint
+    def step(carry: SLSTMState, xt):
+        # checkpointed: only the (small) carry is saved per timestep; the
+        # 4D-gate pre-activations are recomputed in backward. Carries are
+        # sharded over "model" on the head-dim so the 4096 saved steps cost
+        # D/16 per device.
+        c, n, h, m = carry
+        pre = xt.astype(jnp.float32) + jnp.einsum("bhd,hde->bhe", h, R) + b
+        i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(z_t)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+        spec = P(BATCH_AXES, None, MODEL_AXIS)
+        new = SLSTMState(
+            maybe_shard(c_new, spec), maybe_shard(n_new, spec),
+            maybe_shard(h_new, spec), maybe_shard(m_new, spec),
+        )
+        return new, new.h
+
+    xs = x_pre.transpose(1, 0, 2, 3)           # (S, B, H, 4D)
+    final, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), final     # (B, S, H, D)
+
+
+def slstm_block(params, cfg: ModelConfig, x, state: SLSTMState | None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    D = d // H
+    if state is None:
+        z = jnp.zeros((B, H, D), jnp.float32)
+        state = SLSTMState(z, z, z, jnp.full((B, H, D), -1e30, jnp.float32))
+    x_pre = dense(params["w_x"], x).reshape(B, S, H, 4 * D)
+    h, new_state = slstm_scan(params, cfg, x_pre, state)
+    h = rmsnorm(params["out_norm"], h.reshape(B, S, d).astype(x.dtype),
+                cfg.norm_eps)
+    # post-up GeGLU FFN (proj factor 4/3), part of the sLSTM block
+    up = dense(params["ffn_up"], h)
+    u1, u2 = jnp.split(up, 2, axis=-1)
+    out = dense(params["ffn_down"], jax.nn.gelu(u1) * u2)
+    return out, new_state

@@ -1,0 +1,1 @@
+from repro.serving.steps import make_serve_step, serve_step

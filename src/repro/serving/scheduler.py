@@ -1,0 +1,140 @@
+"""Continuous-batching request scheduler for the serving path.
+
+A minimal but real scheduler of the vLLM family: a fixed pool of B cache
+slots; requests join a FIFO queue, get admitted into free slots (their
+prompt is prefilled into that slot's cache lines), and each engine step
+decodes one token for every active slot. Finished requests (EOS or
+max-new-tokens) free their slot immediately for the next queued request.
+
+Implementation notes:
+  * the decode step is a single jitted (B, 1) `decode_step` over the shared
+    batched cache — admission writes a prefilled slot into the batch cache
+    via `jax.tree.map(lambda c, p: c.at[slot].set(...))`-style updates;
+  * per-slot positions live in the cache's ``pos`` vector, so ragged
+    sequence lengths are native (attention masks derive from pos);
+  * prompts are prefilled one request at a time (batch-1 prefill) — the
+    standard prefill/decode split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jax.Array           # (S,)
+    max_new: int
+    eos_id: Optional[int] = None
+    # filled during serving
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    prefills: int = 0
+    completed: int = 0
+    decoded_tokens: int = 0
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 max_len: int, cache_dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, batch_slots, max_len, cache_dtype)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.next_tok = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.queue: List[Request] = []
+        self.stats = EngineStats()
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c))
+        self._cache_dtype = cache_dtype
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, req_cache = prefill(
+                self.params, self.cfg, req.prompt[None], self.max_len,
+                cache_dtype=self._cache_dtype,
+            )
+            self.stats.prefills += 1
+            # copy the single-request cache into this slot of the batch cache
+            self.cache = jax.tree.map(self._write_slot(slot), self.cache,
+                                      req_cache)
+            tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            self.next_tok = self.next_tok.at[slot, 0].set(tok)
+            self.slot_req[slot] = req
+
+    def _write_slot(self, slot: int) -> Callable:
+        """Cache leaves have batch at dim 0 ('rem'/pos) or dim 1 (stacked
+        cycles, leading n_cycles); detect by path-free shape matching."""
+
+        def write(batch_leaf, req_leaf):
+            if batch_leaf.ndim == 0:
+                return batch_leaf
+            if batch_leaf.shape == req_leaf.shape:
+                return batch_leaf  # shared scalar-ish leaves
+            # find the axis where batch_leaf has B and req_leaf has 1
+            for ax in range(batch_leaf.ndim):
+                if (batch_leaf.shape[ax] == self.B
+                        and req_leaf.shape[ax] == 1):
+                    idx = [slice(None)] * batch_leaf.ndim
+                    idx[ax] = slot
+                    src = jnp.take(req_leaf, 0, axis=ax)
+                    return batch_leaf.at[tuple(idx)].set(
+                        src.astype(batch_leaf.dtype))
+            return batch_leaf
+
+        return write
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """One engine step; returns {rid: token} emitted this step."""
+        self._admit()
+        if all(r is None for r in self.slot_req):
+            return {}
+        logits, self.cache = self._decode(self.params, self.next_tok,
+                                          self.cache)
+        self.stats.steps += 1
+        emitted: Dict[int, int] = {}
+        new_toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(self.next_tok[slot, 0])
+            req.output.append(tok)
+            emitted[req.rid] = tok
+            self.stats.decoded_tokens += 1
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if hit_eos or len(req.output) >= req.max_new:
+                req.done = True
+                self.slot_req[slot] = None
+                self.stats.completed += 1
+        self.next_tok = new_toks[:, None]
+        return emitted
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return self.stats

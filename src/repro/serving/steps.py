@@ -1,0 +1,45 @@
+"""Serving: single-token decode step over a batched KV/recurrent cache,
+plus a greedy generation loop for the examples."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, prefill
+
+
+def serve_step(params, cfg: ModelConfig, tokens, cache):
+    """One decode step: tokens (B, 1) -> (logits (B,1,V), new cache).
+
+    This is what the decode_32k / long_500k dry-run shapes lower."""
+    return decode_step(params, cfg, tokens, cache)
+
+
+def make_serve_step(cfg: ModelConfig):
+    def step(params, tokens, cache):
+        return decode_step(params, cfg, tokens, cache)
+
+    return step
+
+
+def generate(params, cfg: ModelConfig, prompt, max_new: int, max_len: int,
+             temperature: float = 0.0, key=None, **frontend_kwargs):
+    """Greedy/temperature sampling loop (host-side; examples/serving)."""
+    logits, cache = prefill(params, cfg, prompt, max_len, **frontend_kwargs)
+    B = prompt.shape[0]
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    step_fn = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    for i in range(max_new - 1):
+        logits, cache = step_fn(params, tok, cache)
+        if temperature > 0 and key is not None:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / temperature
+            )[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), cache

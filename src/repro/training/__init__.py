@@ -1,0 +1,1 @@
+from repro.training.steps import loss_fn, make_train_step, train_step

@@ -1,0 +1,150 @@
+"""Training step: next-token cross-entropy + AdamW, family-aware batches.
+
+Batch layouts (matching ``repro.launch.shapes.input_specs``):
+  dense/moe/ssm/hybrid: {tokens (B,S), labels (B,S)}
+  vlm:   + prefix_embeds (B,P,d); labels cover only the text positions
+  audio: + enc_embeds (B,F,d); tokens/labels are decoder text
+Labels < 0 are ignored (padding).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import softcap, unembed
+from repro.models.sharding import BATCH_AXES, MODEL_AXIS, maybe_shard
+from repro.models.transformer import forward_features
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def _frontend_kwargs(batch: Dict[str, Any]) -> Dict[str, Any]:
+    kw = {}
+    if "prefix_embeds" in batch:
+        kw["prefix_embeds"] = batch["prefix_embeds"]
+    if "enc_embeds" in batch:
+        kw["enc_embeds"] = batch["enc_embeds"]
+    return kw
+
+
+def _ce_chunk(head, cfg, h_c, labels_c):
+    """CE terms for one sequence chunk. h_c: (B, c, d); labels_c: (B, c).
+
+    The (B, c, V) logits exist only inside this (checkpointed) chunk, fp32
+    and VOCAB-SHARDED over "model"; lse and the label logit are reductions
+    over the sharded axis and the label pick is an iota-compare, so nothing
+    vocab-sized is ever gathered or saved for backward."""
+    logits = softcap(unembed(head, h_c), cfg.logits_softcap)
+    logits = maybe_shard(logits, P(BATCH_AXES, None, MODEL_AXIS))
+    valid = labels_c >= 0
+    labels_safe = jnp.maximum(labels_c, 0)
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    vocab_iota = jnp.arange(lf.shape[-1], dtype=labels_safe.dtype)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota[None, None, :] == labels_safe[..., None], lf, 0.0),
+        axis=-1,
+    )
+    nll = jnp.where(valid, lse - label_logit, 0.0)
+    return nll.sum(), valid.sum()
+
+
+def chunked_cross_entropy(head, cfg, hidden, labels, chunk: int = 512):
+    """Unembed + CE fused per sequence chunk (never materializes (B,S,V))."""
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (S + pad) // chunk
+    h_ch = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    l_ch = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    ce_fn = jax.checkpoint(lambda h, l: _ce_chunk(head, cfg, h, l))
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h_c, l_c = xs
+        s, c = ce_fn(h_c, l_c)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (h_ch, l_ch),
+    )
+    return tot, cnt
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> tuple[jax.Array, dict]:
+    hidden, aux = forward_features(
+        params, cfg, batch["tokens"], **_frontend_kwargs(batch)
+    )
+    labels = batch["labels"]
+    if "prefix_embeds" in batch:
+        # hidden spans [prefix, text]; supervise only text positions
+        p = batch["prefix_embeds"].shape[1]
+        hidden = hidden[:, p:]
+    head = params.get("lm_head", params["embed"])
+    nll_sum, n_valid = chunked_cross_entropy(head, cfg, hidden, labels)
+    denom = jnp.maximum(n_valid, 1)
+    ce = nll_sum / denom
+    total = ce + aux
+    return total, {"ce": ce, "aux": aux, "tokens": denom}
+
+
+def train_step(params, opt_state, batch, cfg: ModelConfig,
+               opt_cfg: AdamWConfig, microbatches: int = 1):
+    """One optimizer step; with microbatches > 1, gradients are accumulated
+    over sequential micro-batches (activation memory / microbatches)."""
+    if microbatches == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+    else:
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0, (B, microbatches)
+        mb = B // microbatches
+        split = jax.tree.map(
+            lambda x: x.reshape(microbatches, mb, *x.shape[1:]), batch
+        )
+
+        def acc_step(carry, micro):
+            g_acc, l_acc, ce_acc = carry
+            (loss, m), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, micro)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / microbatches,
+                g_acc, g)
+            return (g_acc, l_acc + loss / microbatches,
+                    ce_acc + m["ce"] / microbatches), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss, ce), _ = jax.lax.scan(
+            acc_step, (zeros, jnp.zeros(()), jnp.zeros(())), split)
+        metrics = {"ce": ce, "aux": loss - ce,
+                   "tokens": jnp.asarray(batch["tokens"].size)}
+    new_params, new_opt, opt_metrics = adamw_update(
+        grads, opt_state, params, opt_cfg
+    )
+    metrics = dict(metrics)
+    metrics.update(opt_metrics)
+    metrics["loss"] = loss
+    return new_params, new_opt, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    """Bind static configs; the returned fn is jit/pjit-able."""
+
+    def step(params, opt_state, batch):
+        return train_step(params, opt_state, batch, cfg, opt_cfg,
+                          microbatches=microbatches)
+
+    return step

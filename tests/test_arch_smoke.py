@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and finiteness (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.models.transformer import decode_step, forward, init_model, prefill
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.training.steps import train_step
+
+B, S = 2, 24
+
+
+def _batch(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(
+            k2, (B, cfg.n_prefix_embeddings, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(
+            k3, (B, cfg.enc_seq, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 3 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    kwargs = {k: v for k, v in batch.items()
+              if k in ("prefix_embeds", "enc_embeds")}
+    logits, aux = forward(params, cfg, batch["tokens"], **kwargs)
+    S_total = S + (cfg.n_prefix_embeddings if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    opt_state = adamw_init(params)
+    new_params, new_opt, metrics = train_step(
+        params, opt_state, batch, cfg, AdamWConfig(lr=1e-3)
+    )
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(
+            lambda p, q: bool(jnp.any(p != q)), params, new_params
+        ),
+    )
+    assert moved, f"{arch}: train step did not update parameters"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    kwargs = {k: v for k, v in batch.items()
+              if k in ("prefix_embeds", "enc_embeds")}
+    prefix = cfg.n_prefix_embeddings if cfg.family == "vlm" else 0
+    lg_pre, cache = prefill(
+        params, cfg, batch["tokens"], max_len=S + prefix + 8,
+        cache_dtype=jnp.float32, **kwargs
+    )
+    nt = jnp.argmax(lg_pre, -1).astype(jnp.int32)
+    lg_dec, cache = decode_step(params, cfg, nt, cache)
+    ext = jnp.concatenate([batch["tokens"], nt], axis=1)
+    lg_full, _ = forward(params, cfg, ext, **kwargs)
+    np.testing.assert_allclose(
+        np.asarray(lg_dec[:, 0]), np.asarray(lg_full[:, -1]),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_full_config_shapes(arch):
+    """Full configs instantiate (metadata only, no allocation)."""
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.layer_kinds()[0] in ("attn", "swa", "moe", "mlstm", "rglru")
+    assert len(cfg.layer_kinds()) == cfg.n_layers
+    # exact assigned dimensions
+    expected = {
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "seamless-m4t-large-v2": (12, 1024, 16, 16, 8192, 256206),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 0, 151936),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 0, 49155),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+    }
+    L, d, h, kv, ff, v = expected[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v)
+    if arch == "seamless-m4t-large-v2":
+        assert cfg.n_enc_layers == 12  # 24 total
+    if arch == "qwen3-moe-30b-a3b":
+        assert (cfg.n_experts, cfg.n_experts_active, cfg.moe_d_ff) == (128, 8, 768)
+    if arch == "granite-moe-3b-a800m":
+        assert (cfg.n_experts, cfg.n_experts_active, cfg.moe_d_ff) == (40, 8, 512)

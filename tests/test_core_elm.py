@@ -1,0 +1,52 @@
+"""Unit tests for ELM primitives (paper §II-A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import elm_fit, elm_objective, elm_predict, make_feature_map
+
+
+def test_elm_closed_form_minimizes_objective():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    H = jax.random.normal(k1, (50, 20))
+    T = jax.random.normal(k2, (50, 3))
+    mu = 0.5
+    beta = elm_fit(H, T, mu)
+    base = elm_objective(H, T, beta, mu)
+    # random perturbations never improve the closed-form solution
+    for i in range(5):
+        pert = 1e-2 * jax.random.normal(jax.random.fold_in(k3, i), beta.shape)
+        assert elm_objective(H, T, beta + pert, mu) > base
+
+
+def test_elm_matches_normal_equations():
+    rng = np.random.default_rng(1)
+    H = rng.normal(size=(40, 15)).astype(np.float32)
+    T = rng.normal(size=(40, 2)).astype(np.float32)
+    mu = 2.0
+    beta = np.asarray(elm_fit(jnp.asarray(H), jnp.asarray(T), mu))
+    expect = np.linalg.solve(H.T @ H + mu * np.eye(15), H.T @ T)
+    np.testing.assert_allclose(beta, expect, rtol=2e-4, atol=2e-5)
+
+
+def test_feature_map_shapes_and_predict():
+    key = jax.random.PRNGKey(2)
+    fmap = make_feature_map(key, n_in=8, L=32, activation="sigmoid")
+    X = jax.random.normal(jax.random.PRNGKey(3), (10, 8))
+    H = fmap(X)
+    assert H.shape == (10, 32)
+    assert jnp.all((H >= 0) & (H <= 1))  # sigmoid range
+    beta = elm_fit(H, jnp.ones((10, 1)), 1.0)
+    y = elm_predict(fmap, beta, X)
+    assert y.shape == (10, 1)
+    assert jnp.all(jnp.isfinite(y))
+
+
+@pytest.mark.parametrize("activation", ["sigmoid", "tanh", "relu", "gelu"])
+def test_activations_finite(activation):
+    fmap = make_feature_map(jax.random.PRNGKey(0), 4, 16, activation=activation)
+    H = fmap(jax.random.normal(jax.random.PRNGKey(1), (6, 4)))
+    assert jnp.all(jnp.isfinite(H))

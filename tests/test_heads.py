@@ -1,0 +1,106 @@
+"""Tests for the MultiTaskELMHead integration (the paper's technique over a
+backbone, DESIGN.md §3)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.heads import HeadStats, accumulate_stats, init_stats, pooled_features
+from repro.models.transformer import init_model
+
+
+def test_pooled_features_shapes_and_stopgrad():
+    cfg = get_smoke_config("qwen3-8b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (3, 4, 16), 0,
+                                cfg.vocab_size)
+    feats = pooled_features(params, cfg, tokens)
+    assert feats.shape == (3, 4, cfg.d_model)
+    assert bool(jnp.isfinite(feats).all())
+
+    # gradient through the head must not touch the backbone
+    def loss(p):
+        f = pooled_features(p, cfg, tokens)
+        return jnp.sum(f ** 2)
+
+    g = jax.grad(loss)(params)
+    assert all(float(jnp.abs(x).max()) == 0.0 for x in jax.tree.leaves(g))
+
+
+def test_accumulate_stats_additive_and_matches_batch():
+    m, B, L, d = 2, 5, 8, 3
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    H1 = jax.random.normal(k1, (m, B, L))
+    T1 = jax.random.normal(k2, (m, B, d))
+    H2, T2 = H1[:, ::-1] * 0.5, T1[:, ::-1] * 2.0
+    s = init_stats(m, L, d)
+    s = accumulate_stats(s, H1, T1)
+    s = accumulate_stats(s, H2, T2)
+    H_all = jnp.concatenate([H1, H2], axis=1)
+    T_all = jnp.concatenate([T1, T2], axis=1)
+    np.testing.assert_allclose(
+        np.asarray(s.G), np.asarray(jnp.einsum("mbl,mbk->mlk", H_all, H_all)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(s.R), np.asarray(jnp.einsum("mbl,mbd->mld", H_all, T_all)),
+        rtol=1e-5, atol=1e-5)
+    assert int(s.n[0]) == 2 * B
+
+
+def test_accumulate_stats_pallas_matches_jnp():
+    m, B, L, d = 2, 16, 12, 2
+    H = jax.random.normal(jax.random.PRNGKey(0), (m, B, L))
+    T = jax.random.normal(jax.random.PRNGKey(1), (m, B, d))
+    s_ref = accumulate_stats(init_stats(m, L, d), H, T, use_pallas=False)
+    s_pl = accumulate_stats(init_stats(m, L, d), H, T, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(s_ref.G), np.asarray(s_pl.G),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_ref.R), np.asarray(s_pl.R),
+                               rtol=2e-4, atol=2e-4)
+
+
+_FIT_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.dmtl_elm import DMTLELMConfig
+    from repro.core.heads import HeadStats, fit_head
+
+    m, L, d, r = 4, 12, 3, 2
+    key = jax.random.PRNGKey(0)
+    U_star = jax.random.normal(key, (L, r)) / jnp.sqrt(L)
+    A_star = jax.random.normal(jax.random.fold_in(key, 1), (m, r, d))
+    H = jax.random.normal(jax.random.fold_in(key, 2), (m, 64, L))
+    T = jnp.einsum("mnl,lr,mrd->mnd", H, U_star, A_star)
+    stats = HeadStats(
+        G=jnp.einsum("mnl,mnk->mlk", H, H),
+        R=jnp.einsum("mnl,mnd->mld", H, T),
+        n=jnp.full((m,), 64.0),
+    )
+    mesh = jax.make_mesh((4,), ("data",))
+    cfg = DMTLELMConfig(r=r, mu1=1e-3, mu2=1e-3, tau=1.0, zeta=0.5,
+                        iters=800)
+    head, diags = fit_head(stats, mesh, ("data",), cfg)
+    pred = head.predict_all(H)
+    rel = float(jnp.linalg.norm(pred - T) / jnp.linalg.norm(T))
+    assert rel < 0.05, rel
+    print("FIT_HEAD_RECOVERS", rel)
+    """
+)
+
+
+def test_fit_head_recovers_planted_subspace():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _FIT_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "FIT_HEAD_RECOVERS" in proc.stdout

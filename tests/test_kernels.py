@@ -1,0 +1,98 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+executed in interpret mode on CPU (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.swa.ops import swa_attention
+from repro.kernels.swa.ref import swa_ref
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# ----------------------------- gram ---------------------------------------
+
+@pytest.mark.parametrize("N,L,D", [(64, 32, 1), (100, 70, 3), (256, 128, 8),
+                                   (33, 129, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_sweep(N, L, D, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(N * L + D))
+    H = jax.random.normal(k1, (N, L), dtype)
+    T = jax.random.normal(k2, (N, D), dtype)
+    G, R = gram(H, T, block_l=32, block_n=32)
+    Gr, Rr = gram_ref(H, T)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Gr), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(R), np.asarray(Rr), **TOL[dtype])
+
+
+def test_gram_symmetry_and_psd():
+    H = jax.random.normal(jax.random.PRNGKey(0), (80, 40))
+    G, _ = gram(H, jnp.zeros((80, 1)), block_l=32, block_n=16)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(G.T), atol=1e-4)
+    eig = np.linalg.eigvalsh(np.asarray(G))
+    assert eig.min() > -1e-3
+
+
+# ----------------------------- swa -----------------------------------------
+
+@pytest.mark.parametrize("S,window,bq", [(64, 16, 16), (128, 33, 32),
+                                         (128, 128, 32), (96, 200, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_sweep(S, window, bq, dtype):
+    B, H, KV, D = 2, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(S + window), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, D), dtype)
+    out = swa_attention(q, k, v, window=window, block_q=bq, block_k=bq)
+    ref = swa_ref(q, k, v, window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+def test_swa_mqa():
+    """KV=1 (MQA, recurrentgemma's local attention)."""
+    B, H, S, D = 1, 4, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, 1, S, D))
+    v = jax.random.normal(ks[2], (B, 1, S, D))
+    out = swa_attention(q, k, v, window=24, block_q=16, block_k=16)
+    ref = swa_ref(q, k, v, 24)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ----------------------------- rglru ---------------------------------------
+
+@pytest.mark.parametrize("S,D,bs,bd", [(64, 32, 16, 16), (100, 48, 32, 32),
+                                       (17, 130, 8, 64)])
+def test_rglru_sweep(S, D, bs, bd):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(S * D), 3)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[0], (B, S, D)))
+    b = jax.random.normal(ks[1], (B, S, D))
+    h0 = jax.random.normal(ks[2], (B, D))
+    out = rglru_scan(log_a, b, h0, block_s=bs, block_d=bd)
+    ref = rglru_scan_ref(log_a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_rglru_identity_decay():
+    """log_a = 0 => pure cumulative sum of b plus h0."""
+    B, S, D = 1, 20, 8
+    b = jax.random.normal(jax.random.PRNGKey(1), (B, S, D))
+    h0 = jnp.ones((B, D))
+    out = rglru_scan(jnp.zeros((B, S, D)), b, h0, block_s=8, block_d=8)
+    expect = jnp.cumsum(b, axis=1) + h0[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5,
+                               atol=1e-5)

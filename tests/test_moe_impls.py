@@ -1,0 +1,58 @@
+"""Equivalence of the GSPMD and explicit-shardmap MoE schedules
+(EXPERIMENTS.md §Perf, granite hillclimb) — run on a subprocess mesh."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_smoke_config
+    from repro.models.moe import moe_ffn_gspmd, moe_ffn_shardmap, moe_init
+
+    for arch in ("granite-moe-3b-a800m", "qwen3-moe-30b-a3b"):
+        cfg = dataclasses.replace(
+            get_smoke_config(arch), d_model=64, moe_d_ff=32, n_experts=4,
+            n_experts_active=2,
+        )
+        params = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+        ref, aux_ref = moe_ffn_gspmd(params, cfg, x)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with jax.set_mesh(mesh):
+            out, aux = jax.jit(
+                lambda p, xx: moe_ffn_shardmap(p, cfg, xx))(params, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+        assert abs(float(aux) - float(aux_ref)) < 1e-6
+
+        # gradients agree too
+        def loss(fn):
+            def f(p):
+                o, a = fn(p, cfg, x)
+                return jnp.sum(o.astype(jnp.float32) ** 2) + a
+            return f
+        g_ref = jax.grad(loss(moe_ffn_gspmd))(params)
+        with jax.set_mesh(mesh):
+            g_sm = jax.jit(jax.grad(loss(moe_ffn_shardmap)))(params)
+        for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_sm)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-3, atol=5e-4)
+    print("MOE_IMPLS_MATCH")
+    """
+)
+
+
+def test_shardmap_moe_matches_gspmd():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MOE_IMPLS_MATCH" in proc.stdout

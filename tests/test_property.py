@@ -1,0 +1,106 @@
+"""Hypothesis property-based tests on system invariants (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DMTLELMConfig,
+    MTLELMConfig,
+    dmtl_elm_fit,
+    elm_fit,
+    elm_objective,
+    mtl_elm_fit,
+    ring,
+)
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.swa.ops import swa_attention
+from repro.kernels.swa.ref import swa_ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(8, 60), st.integers(4, 30),
+       st.floats(0.01, 10.0))
+def test_elm_closed_form_is_optimal(seed, n, l, mu):
+    """Property: the eq.(4) solution minimizes eq.(2) vs random perturbations."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    H = jax.random.normal(k1, (n, l))
+    T = jax.random.normal(k2, (n, 2))
+    beta = elm_fit(H, T, mu)
+    base = float(elm_objective(H, T, beta, mu))
+    pert = 1e-2 * jax.random.normal(k3, beta.shape)
+    assert float(elm_objective(H, T, beta + pert, mu)) >= base - 1e-4 * abs(base)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(1, 3))
+def test_mtl_elm_objective_never_increases(seed, m, r):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    H = jax.random.uniform(k1, (m, 12, 6))
+    T = jax.random.uniform(k2, (m, 12, 2))
+    _, objs = mtl_elm_fit(H, T, MTLELMConfig(r=r, iters=25))
+    objs = np.asarray(objs)
+    assert np.all(np.diff(objs) <= 1e-4 * np.abs(objs[:-1]) + 1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(3, 6))
+def test_dmtl_consensus_decreases(seed, m):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    H = jax.random.uniform(k1, (m, 10, 5))
+    T = jax.random.uniform(k2, (m, 10, 1))
+    cfg = DMTLELMConfig(r=2, iters=150, tau=2.0, zeta=1.0)
+    _, diags = dmtl_elm_fit(H, T, ring(m), cfg)
+    cons = np.asarray(diags["consensus"])
+    assert cons[-1] < cons[0]
+    assert np.isfinite(cons).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(5, 80), st.integers(5, 80))
+def test_gram_kernel_matches_ref(seed, n, l):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    H = jax.random.normal(k1, (n, l))
+    T = jax.random.normal(k2, (n, 2))
+    G, R = gram(H, T, block_l=32, block_n=32)
+    Gr, Rr = gram_ref(H, T)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Gr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(R), np.asarray(Rr), rtol=2e-4,
+                               atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(17, 90), st.integers(1, 100))
+def test_swa_kernel_matches_ref(seed, s, window):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 2, s, 16))
+    k = jax.random.normal(ks[1], (1, 1, s, 16))
+    v = jax.random.normal(ks[2], (1, 1, s, 16))
+    out = swa_attention(q, k, v, window=window, block_q=16, block_k=16)
+    ref = swa_ref(q, k, v, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-4,
+                               atol=3e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(5, 70), st.integers(4, 40))
+def test_rglru_kernel_matches_ref(seed, s, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[0], (2, s, d)))
+    b = jax.random.normal(ks[1], (2, s, d))
+    h0 = jax.random.normal(ks[2], (2, d))
+    out = rglru_scan(log_a, b, h0, block_s=16, block_d=16)
+    ref = rglru_scan_ref(log_a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
