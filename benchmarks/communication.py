@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.baselines import dnsp_fit, sp_predict
 from repro.configs.paper import dmtl_cfg, usps_like
-from repro.core import dmtl_elm_fit, make_feature_map, star
+from repro.core import fit_dense, make_feature_map, star, sufficient_stats
 from repro.data.synthetic import classification_error, multitask_classification
 
 from benchmarks.common import emit, write_csv
@@ -44,9 +44,11 @@ def run():
         H_tr = jax.vmap(fmap)(data.X_train)
         H_te = jax.vmap(fmap)(data.X_test)
         H_tr, H_te = normalize_features(H_tr, H_te)
+        # one stats reduction per L, shared across the three budgets k
+        stats = sufficient_stats(H_tr, data.Y_train)
         for k in (25, 50, 100):
             cfg = dataclasses.replace(dmtl_cfg(setup), iters=k)
-            st, _ = dmtl_elm_fit(H_tr, data.Y_train, g, cfg)
+            st, _ = fit_dense(stats, g, cfg)
             err = float(classification_error(
                 jnp.einsum("mnl,mlr,mrd->mnd", H_te, st.U, st.A),
                 data.Y_test))

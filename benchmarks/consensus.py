@@ -1,5 +1,8 @@
 """Paper Fig. 4: evolution of U_t / A_t accuracy (distance to the
-centralized MTL-ELM solution) for DMTL-ELM and FO-DMTL-ELM."""
+centralized MTL-ELM solution) for DMTL-ELM and FO-DMTL-ELM.
+
+Stats-first: one reduction to SufficientStats; the centralized reference
+and both decentralized tracks all fit from the same statistics."""
 
 from __future__ import annotations
 
@@ -8,23 +11,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    DMTLELMConfig, MTLELMConfig, dmtl_elm_fit, fo_dmtl_elm_fit, mtl_elm_fit,
-    paper_fig2a,
+    DMTLELMConfig, MTLELMConfig, fit_dense, mtl_elm_fit_from_stats,
+    paper_fig2a, sufficient_stats,
 )
-from repro.core.dmtl_elm import DMTLELMState
 from repro.data.synthetic import paper_uniform
 
 from benchmarks.common import emit, timed, write_csv
 
 
-def _track(H, T, g, cfg, ref_U, ref_A, fo=False):
+def _track(stats, g, cfg, ref_U, ref_A, fo=False):
     """Re-run with per-iteration state capture (small problem: cheap)."""
     import dataclasses
     accs_u, accs_a = [], []
     ckpts = np.unique(np.geomspace(1, cfg.iters, 40).astype(int))
-    fit = fo_dmtl_elm_fit if fo else dmtl_elm_fit
     for k in ckpts:
-        state, _ = fit(H, T, g, dataclasses.replace(cfg, iters=int(k)))
+        state, _ = fit_dense(
+            stats, g, dataclasses.replace(cfg, iters=int(k), first_order=fo)
+        )
         m, L, r = state.U.shape
         d = state.A.shape[-1]
         accs_u.append(float(jnp.sqrt(
@@ -37,14 +40,15 @@ def _track(H, T, g, cfg, ref_U, ref_A, fo=False):
 def run():
     g = paper_fig2a()
     H, T = paper_uniform(jax.random.PRNGKey(0), m=5, N=10, L=5, d=1)
-    ref, _ = mtl_elm_fit(H, T, MTLELMConfig(r=2, iters=1000))
+    stats = sufficient_stats(H, T)
+    ref, _ = mtl_elm_fit_from_stats(stats, MTLELMConfig(r=2, iters=1000))
     cfg = DMTLELMConfig(r=2, tau=1.0, zeta=1.0, delta=10.0, iters=1000)
     # FO needs the larger tau' of Theorem 2 (paper uses tau' > tau in Fig. 4)
     cfg_fo = DMTLELMConfig(r=2, tau=3.0, zeta=1.0, delta=10.0, iters=1000)
 
-    (ks, u_d, a_d), t_d = timed(lambda: _track(H, T, g, cfg, ref.U, ref.A))
+    (ks, u_d, a_d), t_d = timed(lambda: _track(stats, g, cfg, ref.U, ref.A))
     (_, u_f, a_f), t_f = timed(
-        lambda: _track(H, T, g, cfg_fo, ref.U, ref.A, fo=True))
+        lambda: _track(stats, g, cfg_fo, ref.U, ref.A, fo=True))
     rows = [[int(k), u_d[i], a_d[i], u_f[i], a_f[i]]
             for i, k in enumerate(ks)]
     write_csv("fig4_consensus",

@@ -1,16 +1,21 @@
 """Paper Fig. 3: objective value vs iterations for MTL-ELM, DMTL-ELM and
 FO-DMTL-ELM on the §IV-A synthetic setup, across the paper's four
-(L, N_t, tau, zeta) panels."""
+(L, N_t, tau, zeta) panels.
+
+Stats-first: the data is reduced ONCE per panel to SufficientStats and all
+three algorithms fit from the same statistics — the engine contract."""
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import numpy as np
 
 from repro.configs.paper import PaperConvergenceSetup
 from repro.core import (
-    DMTLELMConfig, MTLELMConfig, dmtl_elm_fit, fo_dmtl_elm_fit, mtl_elm_fit,
-    paper_fig2a,
+    DMTLELMConfig, MTLELMConfig, fit_dense, mtl_elm_fit_from_stats,
+    paper_fig2a, sufficient_stats,
 )
 from repro.data.synthetic import paper_uniform
 
@@ -28,13 +33,16 @@ def run():
         setup = PaperConvergenceSetup(L=L, N=N)
         H, T = paper_uniform(jax.random.PRNGKey(0), m=setup.m, N=N, L=L,
                              d=setup.d)
+        stats = sufficient_stats(H, T)   # one reduction, three algorithms
         (s_c, obj_c), t_c = timed(
-            lambda: mtl_elm_fit(H, T, MTLELMConfig(r=setup.r, iters=iters))
+            lambda: mtl_elm_fit_from_stats(
+                stats, MTLELMConfig(r=setup.r, iters=iters))
         )
         cfg_d = DMTLELMConfig(r=setup.r, rho=setup.rho, delta=setup.delta,
                               tau=tau, zeta=zeta, iters=iters)
-        (s_d, diag_d), t_d = timed(lambda: dmtl_elm_fit(H, T, g, cfg_d))
-        (s_f, diag_f), t_f = timed(lambda: fo_dmtl_elm_fit(H, T, g, cfg_d))
+        cfg_f = dataclasses.replace(cfg_d, first_order=True)
+        (s_d, diag_d), t_d = timed(lambda: fit_dense(stats, g, cfg_d))
+        (s_f, diag_f), t_f = timed(lambda: fit_dense(stats, g, cfg_f))
         obj_c = np.asarray(obj_c)
         obj_d = np.asarray(diag_d["objective"])
         obj_f = np.asarray(diag_f["objective"])

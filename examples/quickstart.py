@@ -10,12 +10,14 @@ and prints test errors — multi-task sharing should win by a wide margin.
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    DMTLELMConfig, MTLELMConfig, dmtl_elm_fit, elm_fit, fo_dmtl_elm_fit,
-    make_feature_map, mtl_elm_fit, ring,
+    DMTLELMConfig, MTLELMConfig, elm_fit, fit_dense, make_feature_map,
+    mtl_elm_fit_from_stats, ring, sufficient_stats,
 )
 from repro.data.synthetic import multitask_regression
 
@@ -35,17 +37,23 @@ def main():
     betas = jax.vmap(lambda H, T: elm_fit(H, T, mu))(H_tr, T_tr)
     err_local = mse(jnp.einsum("mnl,mld->mnd", H_te, betas))
 
+    # Stats-first: reduce the data ONCE; every algorithm below fits from the
+    # same SufficientStats (the engine contract — on TPU this reduction is
+    # the fused Pallas gram kernel).
+    stats = sufficient_stats(H_tr, T_tr)
+
     # Centralized MTL-ELM
-    st, objs = mtl_elm_fit(H_tr, T_tr, MTLELMConfig(r=r, mu1=mu, mu2=mu,
-                                                    iters=150))
+    st, objs = mtl_elm_fit_from_stats(
+        stats, MTLELMConfig(r=r, mu1=mu, mu2=mu, iters=150))
     err_mtl = mse(jnp.einsum("mnl,lr,mrd->mnd", H_te, st.U, st.A))
 
     # Decentralized on a ring of agents
     cfg = DMTLELMConfig(r=r, mu1=mu, mu2=mu, tau=1.0, zeta=1.0, iters=2000)
-    std, diag = dmtl_elm_fit(H_tr, T_tr, ring(m), cfg)
+    std, diag = fit_dense(stats, ring(m), cfg)
     err_dmtl = mse(jnp.einsum("mnl,mlr,mrd->mnd", H_te, std.U, std.A))
 
-    stf, _ = fo_dmtl_elm_fit(H_tr, T_tr, ring(m), cfg)
+    stf, _ = fit_dense(stats, ring(m),
+                       dataclasses.replace(cfg, first_order=True))
     err_fo = mse(jnp.einsum("mnl,mlr,mrd->mnd", H_te, stf.U, stf.A))
 
     print(f"Local ELM      test MSE: {err_local:.5f}")

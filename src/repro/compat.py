@@ -1,0 +1,134 @@
+"""Compatibility shims: newer public JAX APIs on the pinned jax (0.4.37).
+
+The repo is written against the modern JAX surface —
+
+  ``jax.shard_map``                  (was ``jax.experimental.shard_map.shard_map``)
+  ``jax.set_mesh``                   (was ``with mesh:``)
+  ``jax.lax.pcast``                  (no 0.4.x equivalent; replication-cast no-op)
+  ``jax.sharding.get_abstract_mesh`` (0.4.x: the thread-local physical mesh)
+
+— so that the engine/model code reads like current JAX and keeps working as
+the toolchain moves.  Importing this module installs fallbacks onto the jax
+namespace for whichever of those names the running version lacks; on a new
+enough jax, ``install()`` is a no-op and the real APIs are used untouched.
+
+Modules that rely on any of these names import from here (``shard_map``,
+``pcast``, ``get_abstract_mesh``) rather than reaching into ``jax.*``
+directly; the namespace patching additionally covers test/driver scripts
+that call e.g. ``jax.set_mesh`` themselves.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.lax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
+    """``jax.shard_map`` with a ``jax.experimental.shard_map`` fallback.
+
+    ``check_rep`` defaults to False: the 0.4.x replication checker predates
+    the ppermute-in-scan patterns the consensus engine uses.
+    """
+    native = getattr(jax, "_repro_native_shard_map", None)
+    if native is not None:
+        try:
+            return native(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_rep,
+            )
+        except TypeError:  # pre-check_vma spelling
+            return native(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_rep,
+    )
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` or, on 0.4.x, ``psum(1, axis)`` (a trace-time
+    constant inside shard_map, so XLA folds it)."""
+    native = getattr(jax.lax, "_repro_native_axis_size", None)
+    if native is not None:
+        return native(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def pcast(x, axis_name, *, to="varying"):
+    """``jax.lax.pcast`` or, on 0.4.x (no varying-manual type system), identity."""
+    native = getattr(jax.lax, "_repro_native_pcast", None)
+    if native is not None:
+        return native(x, axis_name, to=to)
+    return x
+
+
+def get_abstract_mesh():
+    """Active mesh for sharding annotations.
+
+    Modern jax: the abstract mesh set by ``jax.set_mesh``.  0.4.x fallback:
+    the thread-local physical mesh set by ``with mesh:`` (an empty ``Mesh()``
+    when none is active, matching the modern empty-mesh contract).
+    """
+    native = getattr(jax.sharding, "_repro_native_get_abstract_mesh", None)
+    if native is not None:
+        return native()
+    from jax._src import mesh as _mesh_lib
+
+    return _mesh_lib.thread_resources.env.physical_mesh
+
+
+class _MeshContext:
+    """0.4.x fallback for ``jax.set_mesh``: activates the mesh EAGERLY on
+    call (matching modern plain-call global-setter semantics) and
+    deactivates it again when used as a context manager."""
+
+    def __init__(self, mesh):
+        self._mesh = mesh
+        mesh.__enter__()
+
+    def __enter__(self):
+        return self._mesh
+
+    def __exit__(self, *exc):
+        return self._mesh.__exit__(*exc)
+
+
+def _set_mesh_fallback(mesh):
+    return _MeshContext(mesh)
+
+
+def install():
+    """Patch missing modern names onto the jax namespace (idempotent)."""
+    if hasattr(jax, "shard_map"):
+        if not hasattr(jax, "_repro_native_shard_map"):
+            jax._repro_native_shard_map = jax.shard_map
+    else:
+        jax.shard_map = shard_map
+    if hasattr(jax.lax, "axis_size"):
+        if not hasattr(jax.lax, "_repro_native_axis_size"):
+            jax.lax._repro_native_axis_size = jax.lax.axis_size
+    else:
+        jax.lax.axis_size = axis_size
+    if hasattr(jax.lax, "pcast"):
+        if not hasattr(jax.lax, "_repro_native_pcast"):
+            jax.lax._repro_native_pcast = jax.lax.pcast
+    else:
+        jax.lax.pcast = pcast
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        if not hasattr(jax.sharding, "_repro_native_get_abstract_mesh"):
+            jax.sharding._repro_native_get_abstract_mesh = (
+                jax.sharding.get_abstract_mesh
+            )
+    else:
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh_fallback
+
+
+install()

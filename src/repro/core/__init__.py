@@ -1,4 +1,11 @@
-"""Core: the paper's contribution — (decentralized) multi-task ELM."""
+"""Core: the paper's contribution — (decentralized) multi-task ELM.
+
+Organized stats-first: ``repro.core.engine`` holds the shared
+``SufficientStats`` type, the ONE per-agent ADMM body (``agent_update``)
+and its two executors (``fit_dense``: vmap + dense incidence;
+``fit_sharded``: shard_map + ppermute ring/torus).  The modules below are
+thin, paper-named entry points over that engine.
+"""
 
 from repro.core.elm import (
     ELMFeatureMap,
@@ -7,11 +14,29 @@ from repro.core.elm import (
     elm_predict,
     make_feature_map,
 )
+from repro.core.engine import (
+    AgentState,
+    ConsensusConfig,
+    NeighborMsgs,
+    SufficientStats,
+    U_SOLVERS,
+    accumulate_stats,
+    accumulate_stats_chunked,
+    agent_update,
+    dual_step,
+    fit_dense,
+    fit_sharded,
+    init_stats,
+    objective_from_stats,
+    register_u_solver,
+    sufficient_stats,
+)
 from repro.core.graph import Graph, chain, complete, erdos, paper_fig2a, ring, star
 from repro.core.mtl_elm import (
     MTLELMConfig,
     MTLELMState,
     mtl_elm_fit,
+    mtl_elm_fit_from_stats,
     mtl_elm_predict,
     mtl_objective,
 )
@@ -25,14 +50,19 @@ from repro.core.dmtl_elm import (
     dmtl_objective,
 )
 from repro.core.fo_dmtl_elm import fo_dmtl_elm_fit, lipschitz_bound
-from repro.core.sharded_dmtl import dmtl_elm_fit_sharded
+from repro.core.sharded_dmtl import dmtl_elm_fit_sharded, dmtl_fit_from_stats
 
 __all__ = [
     "ELMFeatureMap", "elm_fit", "elm_objective", "elm_predict", "make_feature_map",
     "Graph", "chain", "complete", "erdos", "paper_fig2a", "ring", "star",
-    "MTLELMConfig", "MTLELMState", "mtl_elm_fit", "mtl_elm_predict", "mtl_objective",
+    "AgentState", "ConsensusConfig", "NeighborMsgs", "SufficientStats",
+    "U_SOLVERS", "accumulate_stats", "accumulate_stats_chunked", "agent_update",
+    "dual_step", "fit_dense", "fit_sharded", "init_stats",
+    "objective_from_stats", "register_u_solver", "sufficient_stats",
+    "MTLELMConfig", "MTLELMState", "mtl_elm_fit", "mtl_elm_fit_from_stats",
+    "mtl_elm_predict", "mtl_objective",
     "DMTLELMConfig", "DMTLELMState", "augmented_lagrangian", "consensus_residual",
     "dmtl_elm_fit", "dmtl_elm_predict", "dmtl_objective",
     "fo_dmtl_elm_fit", "lipschitz_bound",
-    "dmtl_elm_fit_sharded",
+    "dmtl_elm_fit_sharded", "dmtl_fit_from_stats",
 ]

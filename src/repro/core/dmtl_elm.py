@@ -1,75 +1,42 @@
 """DMTL-ELM — decentralized multi-task ELM (paper §III, Algorithm 2) and its
-first-order variant FO-DMTL-ELM (Algorithm 3).
+first-order variant FO-DMTL-ELM (Algorithm 3): the dense-graph entry point.
 
 Problem (eq. 12):
     min_{U, A} sum_t ( 1/2 ||H_t U_t A_t - T_t||^2 + mu1/(2m) ||U_t||^2
                        + mu2/2 ||A_t||^2 )      s.t.  sum_t C_t U_t = 0,
-with edge-consensus constraints over a connected graph G. Solved by a hybrid
+with edge-consensus constraints over a connected graph G, solved by a hybrid
 Jacobian (across agents) / Gauss-Seidel (U then A within an agent) proximal
-multi-block ADMM:
+multi-block ADMM.
 
-  U_t^{k+1}: prox-regularized local ridge solve    (eq. 19), in parallel;
-  gamma_i:   adaptive dual step per edge           (Lemma 2 choice);
-  lambda_i:  dual ascent on the edge residual      (eq. 16);
-  A_t^{k+1}: local (r x r) prox ridge solve        (eq. 21), in parallel.
+Since the refactor to the stats-first engine (``repro.core.engine``), this
+module holds no update math of its own: ``dmtl_elm_fit`` reduces the data to
+:class:`~repro.core.engine.SufficientStats` via the single Gram producer and
+dispatches into ``engine.fit_dense`` — the vmap + dense-incidence executor
+wrapped around the ONE shared ``engine.agent_update`` body.  The shard_map
+ring/torus executor (``repro.core.sharded_dmtl`` / ``engine.fit_sharded``)
+wraps the *same* body, so the two execution modes agree by construction.
 
-Two execution modes:
-  * ``dmtl_elm_fit`` — all agents on one device, stacked on a leading axis
-    (vmap); the reference implementation and the one used at paper scale.
-  * ``dmtl_elm_fit_sharded`` (see sharded_dmtl.py) — one agent per mesh
-    shard, ring graph, neighbor exchange via ``jax.lax.ppermute``.
-
-U-solvers (cfg.u_solver):
+Solver choice (cfg.u_solver — the ``engine.U_SOLVERS`` registry):
   * "kron"      — the paper's eq. (19) Kronecker inverse (faithful; O(L^3 r^3));
-  * "sylvester" — exact O(L^3 + r^3) double-eigendecomposition; since
-                  G_t = H_t^T H_t is iteration-invariant, its eigh is hoisted
-                  out of the scan and each iteration costs O(L^2 r + r^3).
+  * "sylvester" — exact O(L^3 + r^3) double-eigendecomposition; eigh(G_t) is
+                  hoisted out of the ADMM scan (iteration cost O(L^2 r + r^3));
+  * "cg"        — matrix-free conjugate gradients, matmul-only;
   * FO mode (cfg.first_order=True) needs no solve at all (eq. 23).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core import engine
+from repro.core.engine import ConsensusConfig, DenseState, sufficient_stats
 from repro.core.graph import Graph
-from repro.core.solvers import kron_ridge_solve
 
-
-class DMTLELMState(NamedTuple):
-    U: jax.Array    # (m, L, r) local subspaces
-    A: jax.Array    # (m, r, d) local heads
-    lam: jax.Array  # (E, L, r) edge dual variables
-
-
-@dataclasses.dataclass(frozen=True)
-class DMTLELMConfig:
-    r: int
-    mu1: float = 2.0
-    mu2: float = 2.0
-    rho: float = 1.0
-    delta: float = 10.0
-    # tau_t / zeta_t: proximal weights; paper uses tau_t = const + d_t.
-    tau: float | np.ndarray = 2.0         # scalar -> tau_t = tau + d_t
-    zeta: float | np.ndarray = 1.0
-    iters: int = 100
-    prox: str = "prox_linear"   # P_t = tau_t I - rho C_t^T C_t | "standard": tau_t I
-    u_solver: str = "sylvester"  # "kron" | "sylvester"
-    first_order: bool = False    # FO-DMTL-ELM (Algorithm 3)
-    gamma_cap: float = 1.0       # gamma = min(cap, delta * dual/primal) as in §IV
-
-
-def _resolve_tau_zeta(cfg: DMTLELMConfig, g: Graph, dtype):
-    deg = jnp.asarray(g.degrees(), dtype=dtype)
-    tau = jnp.asarray(cfg.tau, dtype=dtype)
-    tau_t = tau + deg if tau.ndim == 0 else tau
-    zeta = jnp.asarray(cfg.zeta, dtype=dtype)
-    zeta_t = jnp.broadcast_to(zeta, (g.m,))
-    return tau_t, zeta_t, deg
+# Public names kept for API compatibility: the config and stacked-state types
+# now live in the engine.
+DMTLELMConfig = ConsensusConfig
+DMTLELMState = DenseState
 
 
 def augmented_lagrangian(
@@ -104,13 +71,6 @@ def dmtl_objective(H, T, U, A, mu1, mu2) -> jax.Array:
     )
 
 
-def _u_solve_sylvester(dg, qg, M, R, c):
-    """Solve G U M + c U = R given precomputed eigh(G) = (dg, qg)."""
-    dm, qm = jnp.linalg.eigh(M)
-    Rt = qg.T @ R @ qm
-    return qg @ (Rt / (dg[:, None] * dm[None, :] + c)) @ qm.T
-
-
 def dmtl_elm_fit(
     H: jax.Array,
     T: jax.Array,
@@ -123,78 +83,8 @@ def dmtl_elm_fit(
     per-iteration 'objective' (primal, eq. 12), 'lagrangian' (eq. 13) and
     'consensus' residuals.
     """
-    m, _, L = H.shape
-    d = T.shape[-1]
-    dtype = H.dtype
-    adj = jnp.asarray(g.adjacency(), dtype=dtype)      # (m, m)
-    S = jnp.asarray(g.incidence(), dtype=dtype)        # (E, m)
-    tau_t, zeta_t, deg = _resolve_tau_zeta(cfg, g, dtype)
-    p_t = tau_t - cfg.rho * deg if cfg.prox == "prox_linear" else tau_t
-
-    # Iteration-invariant per-agent quantities.
-    G = jnp.einsum("mnl,mnk->mlk", H, H)               # (m, L, L)
-    HtT = jnp.einsum("mnl,mnd->mld", H, T)             # (m, L, d)
-    if cfg.u_solver == "sylvester" and not cfg.first_order:
-        dgs, qgs = jnp.linalg.eigh(G)                  # hoisted out of scan
-    else:
-        dgs = qgs = None
-
-    U0 = jnp.ones((m, L, cfg.r), dtype=dtype)
-    A0 = jnp.ones((m, cfg.r, d), dtype=dtype)
-    lam0 = jnp.zeros((g.n_edges, L, cfg.r), dtype=dtype)
-
-    mu1, mu2, rho, delta = cfg.mu1, cfg.mu2, cfg.rho, cfg.delta
-
-    def u_update(U, A, lam):
-        M = jnp.einsum("mrd,msd->mrs", A, A)                       # A A^T
-        neigh = jnp.einsum("ij,jlr->ilr", adj, U)                  # sum_N U_j
-        Ct_lam = jnp.einsum("em,elr->mlr", S, lam)                 # C_t^T lam
-        RAt = jnp.einsum("mld,mrd->mlr", HtT, A)                   # H^T T A^T
-        rhs = RAt + rho * neigh - Ct_lam + p_t[:, None, None] * U
-        if cfg.first_order:
-            # eq. (23): (rho C^T C + P)^-1 (.. - H^T H U A A^T - mu1/m U ..)
-            grad_f = jnp.einsum("mij,mjr,mrs->mis", G, U, M)
-            rhs_fo = rhs - grad_f - (mu1 / m) * U
-            denom = (rho * deg + p_t)[:, None, None]
-            return rhs_fo / denom
-        c_t = mu1 / m + rho * deg + p_t                            # (m,)
-        if cfg.u_solver == "kron":
-            return jax.vmap(kron_ridge_solve)(G, M, rhs, c_t)
-        return jax.vmap(_u_solve_sylvester)(dgs, qgs, M, rhs, c_t)
-
-    def a_update(U, A):
-        HU = jnp.einsum("mnl,mlr->mnr", H, U)
-        Ga = jnp.einsum("mnr,mns->mrs", HU, HU)
-        eye = jnp.eye(cfg.r, dtype=dtype)
-        Ga = Ga + (zeta_t + mu2)[:, None, None] * eye
-        rhs = jnp.einsum("mnr,mnd->mrd", HU, T) + zeta_t[:, None, None] * A
-        return jnp.linalg.solve(Ga, rhs)
-
-    def step(state: DMTLELMState, _):
-        U, A, lam = state
-        U_new = u_update(U, A, lam)
-        # Adaptive dual step per edge (Lemma 2 / §IV experimental choice).
-        CU_new = jnp.einsum("em,mlr->elr", S, U_new)
-        CdU = jnp.einsum("em,mlr->elr", S, U - U_new)
-        dual = jnp.sum(CdU**2, axis=(1, 2))
-        primal = jnp.sum(CU_new**2, axis=(1, 2))
-        gamma = jnp.minimum(cfg.gamma_cap, delta * dual / jnp.maximum(primal, 1e-12))
-        gamma = jnp.where(primal <= 1e-12, cfg.gamma_cap, gamma)
-        lam_new = lam + rho * gamma[:, None, None] * CU_new
-        A_new = a_update(U_new, A)
-        new_state = DMTLELMState(U_new, A_new, lam_new)
-        diag = {
-            "objective": dmtl_objective(H, T, U_new, A_new, mu1, mu2),
-            "lagrangian": augmented_lagrangian(
-                H, T, U_new, A_new, lam_new, S, mu1, mu2, rho
-            ),
-            "consensus": consensus_residual(U_new, S),
-        }
-        return new_state, diag
-
-    init = DMTLELMState(U0, A0, lam0)
-    final, diags = jax.lax.scan(step, init, None, length=cfg.iters)
-    return final, diags
+    stats = sufficient_stats(H, T)
+    return engine.fit_dense(stats, g, cfg)
 
 
 def dmtl_elm_predict(U_t: jax.Array, A_t: jax.Array, H: jax.Array) -> jax.Array:

@@ -7,7 +7,9 @@ prox-linear P_t = tau_t I - rho C_t^T C_t the update matrix collapses to
 ``tau_t >= L_t + rho m (delta + 1/2) sigma_max - sigma/2`` (Theorem 2).
 
 This module is a thin convenience wrapper over ``dmtl_elm_fit`` with
-``first_order=True``.
+``first_order=True``; the FO branch itself lives inside the shared
+``repro.core.engine.agent_update`` body, so it is available unchanged from
+every executor (vmap dense graph, shard_map ring/torus, streaming heads).
 """
 
 from __future__ import annotations

@@ -1,5 +1,5 @@
 """MultiTaskELMHead — the paper's technique as a first-class framework
-feature on top of any backbone in the model zoo (DESIGN.md §3).
+feature on top of any backbone in the model zoo.
 
 The backbone plays the role of the ELM's frozen random hidden layer:
 ``H_t = stop_gradient(encode(backbone, X_t))`` pooled over the sequence.
@@ -9,38 +9,36 @@ agents (Algorithm 2 on the ICI ring) and task heads ``A_t`` kept local.
 
 Training is two-phase, matching the ELM philosophy:
   1. ``accumulate_stats``: stream batches through the frozen backbone and
-     accumulate per-agent Gram statistics G_t = H_t^T H_t, R_t = H_t^T T_t
-     (the FLOPs hot-spot — served by the Pallas ``gram`` kernel on TPU).
-  2. ``fit``: run DMTL-ELM / FO-DMTL-ELM over the statistics; only
-     ``U_t`` (d_model x r) crosses agent boundaries, never data.
+     fold per-agent Gram statistics into the engine's
+     :class:`~repro.core.engine.SufficientStats` (the FLOPs hot-spot —
+     served by the Pallas ``gram`` kernel on TPU, its jnp oracle elsewhere).
+  2. ``fit``: run DMTL-ELM / FO-DMTL-ELM over the statistics with
+     ``engine.fit_sharded`` — the same shared ``agent_update`` body as every
+     other entry point; only ``U_t`` (d_model x r) crosses agent boundaries,
+     never data.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dmtl_elm import DMTLELMConfig
-from repro.core.sharded_dmtl import dmtl_fit_from_stats
+from repro.core import engine
+from repro.core.engine import ConsensusConfig as DMTLELMConfig
+from repro.core.engine import (  # noqa: F401  (re-exported producer API)
+    SufficientStats,
+    accumulate_stats,
+    accumulate_stats_chunked,
+    init_stats,
+)
 from repro.models.config import ModelConfig
 from repro.models.transformer import encode
 
-
-class HeadStats(NamedTuple):
-    G: jax.Array     # (m, L, L) per-agent feature Gram
-    R: jax.Array     # (m, L, d) per-agent feature-target cross terms
-    n: jax.Array     # (m,) samples seen
-
-
-def init_stats(m: int, L: int, d: int, dtype=jnp.float32) -> HeadStats:
-    return HeadStats(
-        G=jnp.zeros((m, L, L), dtype),
-        R=jnp.zeros((m, L, d), dtype),
-        n=jnp.zeros((m,), dtype),
-    )
+# Historical name: head statistics ARE the engine's sufficient statistics.
+HeadStats = SufficientStats
 
 
 def pooled_features(
@@ -66,23 +64,6 @@ def pooled_features(
     return jax.lax.stop_gradient(feats)
 
 
-def accumulate_stats(
-    stats: HeadStats, H: jax.Array, T: jax.Array, use_pallas: bool = False
-) -> HeadStats:
-    """Fold a batch of features H (m, B, L), targets T (m, B, d) into stats."""
-    if use_pallas:
-        from repro.kernels.gram.ops import gram as gram_op
-        G_b, R_b = jax.vmap(gram_op)(H, T)
-    else:
-        G_b = jnp.einsum("mbl,mbk->mlk", H, H)
-        R_b = jnp.einsum("mbl,mbd->mld", H, T)
-    return HeadStats(
-        G=stats.G + G_b,
-        R=stats.R + R_b,
-        n=stats.n + H.shape[1],
-    )
-
-
 @dataclasses.dataclass(frozen=True)
 class MultiTaskELMHead:
     """Bundles the fitted (U_t, A_t) with prediction helpers."""
@@ -104,8 +85,10 @@ def fit_head(
     agent_axes: Sequence[str],
     cfg: DMTLELMConfig,
 ) -> tuple[MultiTaskELMHead, dict]:
-    """Decentralized fit over accumulated statistics (Algorithm 2/3)."""
-    U, A, diags = dmtl_fit_from_stats(stats.G, stats.R, mesh, agent_axes, cfg)
+    """Decentralized fit over accumulated statistics (Algorithm 2/3):
+    dispatches into the shared ``engine.agent_update`` body via the
+    shard_map ring executor."""
+    U, A, diags = engine.fit_sharded(stats, mesh, agent_axes, cfg)
     return MultiTaskELMHead(U=U, A=A), diags
 
 

@@ -6,9 +6,11 @@ by Alternating Optimization:
     U-step  (eq. 9): vectorized Kronecker ridge solve over all tasks;
     A-step (eq. 11): per-task (r x r) ridge solve.
 
-All tasks are stacked on a leading axis (equal N_t, as in the paper's
-experiments), so the whole algorithm is a single ``lax.scan`` over
-iterations with vmapped task updates — one XLA program, no host loop.
+Stats-first: both steps are functions of the sufficient statistics
+G_t = H_t^T H_t, R_t = H_t^T T_t alone, so ``mtl_elm_fit`` reduces the data
+once through the shared Gram producer (``engine.sufficient_stats``) and
+``mtl_elm_fit_from_stats`` runs the whole algorithm from stats — one XLA
+program (a single ``lax.scan``), no per-iteration touch of the raw data.
 """
 
 from __future__ import annotations
@@ -19,6 +21,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (
+    SufficientStats,
+    objective_from_stats,
+    sufficient_stats,
+)
 from repro.core.solvers import kron_ridge_solve, sum_sylvester_cg
 
 
@@ -49,24 +56,47 @@ def mtl_objective(
     )
 
 
-def _update_U(H, T, A, mu1, solver):
-    """Paper eq. (9): solve sum_t H_t^T H_t U A_t A_t^T + mu1 U = sum_t H_t^T T_t A_t^T."""
-    Gs = jnp.einsum("mnl,mnk->mlk", H, H)          # (m, L, L)  H_t^T H_t
+def _update_U(stats: SufficientStats, A, mu1, solver):
+    """Paper eq. (9): solve sum_t G_t U A_t A_t^T + mu1 U = sum_t R_t A_t^T."""
     Ms = jnp.einsum("mrd,msd->mrs", A, A)          # (m, r, r)  A_t A_t^T
-    R = jnp.einsum("mnl,mnd,mrd->lr", H, T, A)     # (L, r)     sum H^T T A^T
+    R = jnp.einsum("mld,mrd->lr", stats.R, A)      # (L, r)     sum R_t A_t^T
     if solver == "kron":
-        return kron_ridge_solve(Gs, Ms, R, mu1)
-    return sum_sylvester_cg(Gs, Ms, R, mu1)
+        return kron_ridge_solve(stats.G, Ms, R, mu1)
+    return sum_sylvester_cg(stats.G, Ms, R, mu1)
 
 
-def _update_A(H, T, U, mu2):
-    """Paper eq. (11), vmapped over tasks."""
-    HU = jnp.einsum("mnl,lr->mnr", H, U)           # (m, N, r)
-    G = jnp.einsum("mnr,mns->mrs", HU, HU)         # (m, r, r)
+def _update_A(stats: SufficientStats, U, mu2):
+    """Paper eq. (11), batched over tasks: (U^T G_t U + mu2 I)^-1 U^T R_t."""
+    Ga = jnp.einsum("lr,mlk,ks->mrs", U, stats.G, U)   # (m, r, r)
     r = U.shape[1]
-    G = G + mu2 * jnp.eye(r, dtype=U.dtype)
-    rhs = jnp.einsum("mnr,mnd->mrd", HU, T)
-    return jnp.linalg.solve(G, rhs)
+    Ga = Ga + mu2 * jnp.eye(r, dtype=U.dtype)
+    rhs = jnp.einsum("lr,mld->mrd", U, stats.R)
+    return jnp.linalg.solve(Ga, rhs)
+
+
+def mtl_elm_fit_from_stats(
+    stats: SufficientStats, cfg: MTLELMConfig,
+) -> tuple[MTLELMState, jax.Array]:
+    """Run Algorithm 1 over sufficient statistics alone.
+
+    Returns final state and the per-iteration objective (computable from
+    stats because they carry ``t2 = ||T||^2``).
+    """
+    m, L = stats.G.shape[0], stats.G.shape[-1]
+    d = stats.R.shape[-1]
+    dtype = stats.G.dtype
+    A0 = jnp.ones((m, cfg.r, d), dtype=dtype)
+    U0 = jnp.zeros((L, cfg.r), dtype=dtype)
+
+    def step(state: MTLELMState, _):
+        U = _update_U(stats, state.A, cfg.mu1, cfg.u_solver)
+        A = _update_A(stats, U, cfg.mu2)
+        obj = objective_from_stats(stats, U, A, cfg.mu1, cfg.mu2,
+                                   shared_u=True)
+        return MTLELMState(U, A), obj
+
+    init = MTLELMState(U0, A0)
+    return jax.lax.scan(step, init, None, length=cfg.iters)
 
 
 def mtl_elm_fit(
@@ -77,20 +107,7 @@ def mtl_elm_fit(
     H: (m, N, L) hidden features per task; T: (m, N, d) targets.
     Initialization A_t^0 = 1 (all-ones), as in the paper.
     """
-    m, _, L = H.shape
-    d = T.shape[-1]
-    A0 = jnp.ones((m, cfg.r, d), dtype=H.dtype)
-    U0 = jnp.zeros((L, cfg.r), dtype=H.dtype)
-
-    def step(state: MTLELMState, _):
-        U = _update_U(H, T, state.A, cfg.mu1, cfg.u_solver)
-        A = _update_A(H, T, U, cfg.mu2)
-        obj = mtl_objective(H, T, U, A, cfg.mu1, cfg.mu2)
-        return MTLELMState(U, A), obj
-
-    init = MTLELMState(U0, A0)
-    final, objs = jax.lax.scan(step, init, None, length=cfg.iters)
-    return final, objs
+    return mtl_elm_fit_from_stats(sufficient_stats(H, T), cfg)
 
 
 def mtl_elm_predict(U: jax.Array, A_t: jax.Array, H: jax.Array) -> jax.Array:

@@ -1,130 +1,37 @@
 """Sharded DMTL-ELM: one agent per mesh shard, consensus over the ICI torus.
 
-This is the TPU-native realization of Algorithm 2 (DESIGN.md §2): agents live
-along one or more mesh axes (e.g. ``("data",)`` single-pod or
-``("pod", "data")`` multi-pod). The consensus graph is the corresponding
-**ring / torus**: along every agent axis, agent t holds the directed edge
-(t, t+1 mod n) and exchanges its local subspace ``U_t`` with ring neighbors
-via ``jax.lax.ppermute`` — the paper's "share with the neighbouring agents"
-step, mapped onto nearest-neighbor ICI links.
+This is the TPU-native realization of Algorithm 2: agents live along one or
+more mesh axes (e.g. ``("data",)`` single-pod or ``("pod", "data")``
+multi-pod) and the consensus graph is the corresponding **ring / torus** —
+along every agent axis, agent t owns the directed edge (t, t+1 mod n) and
+exchanges its local subspace ``U_t`` with ring neighbors via
+``jax.lax.ppermute``, the paper's "share with the neighbouring agents" step
+mapped onto nearest-neighbor ICI links.
 
-Per ADMM iteration each agent communicates:
-  2 x ppermute(U)       (receive U_{t-1}, U_{t+1})        [pre-update]
-  1 x ppermute(U_new)   (receive U_{t+1}^{k+1} for gamma)  [post-update]
-  1 x ppermute(lambda)  (receive edge-dual of edge (t-1,t))
-per agent axis — exactly the paper's O(k L r) communication volume
-(EXPERIMENTS.md reproduces the Fig. 6 trade-off from these counts).
+Since the refactor to the stats-first engine, all update math lives in
+``repro.core.engine``: ``engine.ring_iteration`` is the per-shard message
+plumbing around the ONE shared ``engine.agent_update`` body (the same body
+the dense vmap executor runs), and ``engine.fit_sharded`` is the
+shard_map-building driver.  This module keeps the thin, historically-named
+entry points: ``dmtl_fit_from_stats`` (streaming-statistics path used by
+``repro.core.heads``) and ``dmtl_elm_fit_sharded`` (raw-data path).
 
-All functions here are *per-shard* bodies meant to run inside
-``jax.shard_map``; ``dmtl_elm_fit_sharded`` is a host-callable driver that
-builds the shard_map over a given mesh.
+Per ADMM iteration each agent communicates 3 x ppermute(U) +
+1 x ppermute(lambda) per agent axis — the paper's O(k L r) communication
+volume (EXPERIMENTS.md reproduces the Fig. 6 trade-off from these counts).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Mapping, NamedTuple, Sequence
+from typing import Sequence
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core.dmtl_elm import DMTLELMConfig
-
-
-class ShardedDMTLState(NamedTuple):
-    U: jax.Array                    # per-shard (L, r)
-    A: jax.Array                    # per-shard (r, d)
-    lam: jax.Array                  # per-shard (n_axes, L, r): edge (t, t+1) per axis
-
-
-def _ring_recv_from_next(x, axis_name):
-    """Receive x from agent t+1 on the ring (source i sends to i-1)."""
-    n = jax.lax.axis_size(axis_name)
-    return jax.lax.ppermute(x, axis_name, [(i, (i - 1) % n) for i in range(n)])
-
-
-def _ring_recv_from_prev(x, axis_name):
-    n = jax.lax.axis_size(axis_name)
-    return jax.lax.ppermute(x, axis_name, [(i, (i + 1) % n) for i in range(n)])
-
-
-def _u_solve_sylvester(G, M, R, c):
-    dg, qg = jnp.linalg.eigh(G)
-    dm, qm = jnp.linalg.eigh(M)
-    Rt = qg.T @ R @ qm
-    return qg @ (Rt / (dg[:, None] * dm[None, :] + c)) @ qm.T
-
-
-def dmtl_iteration(
-    state: ShardedDMTLState,
-    G: jax.Array,        # (L, L)  H_t^T H_t (iteration-invariant)
-    HtT: jax.Array,      # (L, d)  H_t^T T_t
-    agent_axes: Sequence[str],
-    cfg: DMTLELMConfig,
-    m_total: int,
-) -> tuple[ShardedDMTLState, dict]:
-    """One ADMM round for the shard-local agent (runs inside shard_map)."""
-    U, A, lam = state
-    dtype = U.dtype
-    n_axes = len(agent_axes)
-    deg = 2.0 * n_axes  # ring degree per axis
-    tau_t = jnp.asarray(cfg.tau, dtype) + deg
-    zeta_t = jnp.asarray(cfg.zeta, dtype)
-    p_t = tau_t - cfg.rho * deg if cfg.prox == "prox_linear" else tau_t
-    rho, mu1, mu2, delta = cfg.rho, cfg.mu1, cfg.mu2, cfg.delta
-
-    # --- gather neighbor subspaces and incoming edge duals --------------
-    neigh = jnp.zeros_like(U)
-    ct_lam = jnp.zeros_like(U)
-    U_next_old = []
-    for ax_i, ax in enumerate(agent_axes):
-        u_next = _ring_recv_from_next(U, ax)     # U_{t+1}^k
-        u_prev = _ring_recv_from_prev(U, ax)     # U_{t-1}^k
-        lam_prev = _ring_recv_from_prev(lam[ax_i], ax)  # dual of edge (t-1, t)
-        neigh = neigh + u_next + u_prev
-        # C_t^T lambda: +lam on own (s-side) edge, -lam on incoming (e-side).
-        ct_lam = ct_lam + lam[ax_i] - lam_prev
-        U_next_old.append(u_next)
-
-    # --- U update (eq. 19 / eq. 23) --------------------------------------
-    M = A @ A.T
-    RAt = HtT @ A.T
-    rhs = RAt + rho * neigh - ct_lam + p_t * U
-    if cfg.first_order:
-        grad_f = G @ U @ M
-        U_new = (rhs - grad_f - (mu1 / m_total) * U) / (rho * deg + p_t)
-    else:
-        c_t = mu1 / m_total + rho * deg + p_t
-        U_new = _u_solve_sylvester(G, M, rhs, c_t)
-
-    # --- adaptive dual step + lambda update (eq. 16) ---------------------
-    lam_new = []
-    primal_sq = jnp.zeros((), dtype)
-    for ax_i, ax in enumerate(agent_axes):
-        u_next_new = _ring_recv_from_next(U_new, ax)
-        resid_new = U_new - u_next_new                   # \hat C_i U^{k+1}
-        resid_old = U - U_next_old[ax_i]
-        dual = jnp.sum((resid_old - resid_new) ** 2)
-        primal = jnp.sum(resid_new**2)
-        gamma = jnp.minimum(
-            cfg.gamma_cap, delta * dual / jnp.maximum(primal, 1e-12)
-        )
-        gamma = jnp.where(primal <= 1e-12, cfg.gamma_cap, gamma)
-        lam_new.append(lam[ax_i] + rho * gamma * resid_new)
-        primal_sq = primal_sq + primal
-    lam_new = jnp.stack(lam_new)
-
-    # --- A update (eq. 21), purely local ---------------------------------
-    HU_gram = U_new.T @ G @ U_new
-    eye = jnp.eye(cfg.r, dtype=dtype)
-    A_new = jnp.linalg.solve(
-        HU_gram + (zeta_t + mu2) * eye, U_new.T @ HtT + zeta_t * A
-    )
-
-    diag = {"primal_sq": primal_sq}
-    return ShardedDMTLState(U_new, A_new, lam_new), diag
+from repro import compat  # noqa: F401  (installs shard_map/pcast shims)
+from repro.core import engine
+from repro.core.engine import AgentState as ShardedDMTLState  # noqa: F401
+from repro.core.engine import ConsensusConfig as DMTLELMConfig
+from repro.core.engine import SufficientStats, ring_iteration  # noqa: F401
 
 
 def dmtl_fit_from_stats(
@@ -143,46 +50,8 @@ def dmtl_fit_from_stats(
     dataset itself never moves between agents, exactly the paper's privacy /
     communication constraint.
     """
-    m = G_all.shape[0]
-    sizes = [mesh.shape[ax] for ax in agent_axes]
-    n_agents = functools.reduce(lambda a, b: a * b, sizes, 1)
-    if m != n_agents:
-        raise ValueError(f"m={m} must equal prod(agent axes)={n_agents}")
-    L, d, r = G_all.shape[-1], HtT_all.shape[-1], cfg.r
-    dtype = G_all.dtype
-
-    spec_batched = P(tuple(agent_axes))
-
-    def body(G_blk, HtT_blk):
-        G = G_blk[0]
-        HtT = HtT_blk[0]
-        axes_t = tuple(agent_axes)
-        # mark the carry as device-varying so the ppermuted outputs type-match
-        U0 = jax.lax.pcast(jnp.ones((L, r), dtype), axes_t, to="varying")
-        A0 = jax.lax.pcast(jnp.ones((r, d), dtype), axes_t, to="varying")
-        lam0 = jax.lax.pcast(
-            jnp.zeros((len(agent_axes), L, r), dtype), axes_t, to="varying"
-        )
-
-        def step(carry, _):
-            new, diag = dmtl_iteration(carry, G, HtT, agent_axes, cfg, m)
-            # primal residual summed over all agents for a global diagnostic
-            diag = {"primal_sq": jax.lax.psum(diag["primal_sq"], tuple(agent_axes))}
-            return new, diag
-
-        final, diags = jax.lax.scan(
-            step, ShardedDMTLState(U0, A0, lam0), None, length=cfg.iters
-        )
-        return final.U[None], final.A[None], diags["primal_sq"][:, None]
-
-    shard_fn = jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(spec_batched, spec_batched),
-        out_specs=(spec_batched, spec_batched, P(None, tuple(agent_axes))),
-    )
-    U, A, primal = shard_fn(G_all, HtT_all)
-    return U, A, {"primal_sq": primal.sum(axis=1)}
+    stats = SufficientStats(G=G_all, R=HtT_all)
+    return engine.fit_sharded(stats, mesh, agent_axes, cfg)
 
 
 def dmtl_elm_fit_sharded(
@@ -197,6 +66,5 @@ def dmtl_elm_fit_sharded(
     Returns (U (m,L,r), A (m,r,d), diagnostics) with leading axis sharded the
     same way. ``m`` must equal the product of the agent-axis sizes.
     """
-    G_all = jnp.einsum("mnl,mnk->mlk", H, H)
-    HtT_all = jnp.einsum("mnl,mnd->mld", H, T)
-    return dmtl_fit_from_stats(G_all, HtT_all, mesh, agent_axes, cfg)
+    stats = engine.sufficient_stats(H, T)
+    return engine.fit_sharded(stats, mesh, agent_axes, cfg)

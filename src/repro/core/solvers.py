@@ -62,14 +62,20 @@ def kron_ridge_solve(
 
 
 def sylvester_ridge_solve(
-    G: jax.Array, M: jax.Array, R: jax.Array, c: jax.Array | float
+    G: jax.Array, M: jax.Array, R: jax.Array, c: jax.Array | float,
+    eig_g: tuple[jax.Array, jax.Array] | None = None,
 ) -> jax.Array:
     """Solve G U M + c U = R for symmetric PSD G (L,L), M (r,r) exactly.
 
     Eigendecompose G = Qg Dg Qg^T, M = Qm Dm Qm^T; in the eigenbasis the
-    operator is diagonal with entries Dg_i Dm_j + c.
+    operator is diagonal with entries Dg_i Dm_j + c.  ``eig_g`` is an
+    optional precomputed eigh(G) — G is iteration-invariant in the ADMM
+    loops, so callers hoist it out of the scan.
     """
-    dg, qg = jnp.linalg.eigh(G)
+    if eig_g is None:
+        dg, qg = jnp.linalg.eigh(G)
+    else:
+        dg, qg = eig_g
     dm, qm = jnp.linalg.eigh(M)
     Rt = qg.T @ R @ qm
     denom = dg[:, None] * dm[None, :] + c

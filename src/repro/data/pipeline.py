@@ -1,4 +1,4 @@
-"""Deterministic synthetic LM data pipeline.
+"""Deterministic synthetic LM data pipeline + streaming stats accumulation.
 
 Generates structured (learnable) token streams on-device: a mixture of
 order-2 Markov chains whose transition tables are fixed by seed. Losses on
@@ -6,12 +6,18 @@ this data genuinely decrease during the end-to-end training examples, unlike
 uniform-random tokens. Batches are generated per (step, shard) from the PRNG
 key alone, so any data-parallel worker can materialize exactly its shard —
 the standard deterministic-pipeline contract.
+
+``stream_sufficient_stats`` is the pipeline-side bridge into the stats-first
+consensus engine: it folds an iterator of per-agent feature batches into the
+engine's :class:`~repro.core.engine.SufficientStats` (chunked, bounded peak
+memory), so multi-task ELM heads can be fitted over data that never fully
+materializes.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterable, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,3 +69,40 @@ def batches(cfg: DataConfig, start_step: int = 0) -> Iterator[dict]:
     while True:
         yield gen(step)
         step += 1
+
+
+def stream_sufficient_stats(
+    feature_batches: Iterable[Tuple[jax.Array, jax.Array]],
+    stats=None,
+    *,
+    chunk: Optional[int] = None,
+    use_pallas: bool = False,
+):
+    """Fold a stream of per-agent feature batches into SufficientStats.
+
+    feature_batches yields (H, T) with H: (m, B, L), T: (m, B, d) — e.g.
+    frozen-backbone pooled features and task targets.  Each batch goes
+    through the engine's single Gram producer (Pallas kernel on TPU);
+    ``chunk`` caps the rows folded per inner step so arbitrarily large
+    stream batches accumulate at bounded peak memory.  Chunked accumulation
+    equals one-shot accumulation exactly (zero-row padding is a no-op).
+    """
+    from repro.core.engine import (
+        accumulate_stats, accumulate_stats_chunked, init_stats,
+    )
+
+    for H, T in feature_batches:
+        if stats is None:
+            stats = init_stats(H.shape[0], H.shape[-1], T.shape[-1],
+                               jnp.float32)
+        if chunk is not None and H.shape[1] > chunk:
+            stats = accumulate_stats_chunked(stats, H, T, chunk,
+                                             use_pallas=use_pallas)
+        else:
+            stats = accumulate_stats(stats, H, T, use_pallas=use_pallas)
+    if stats is None:
+        raise ValueError(
+            "stream_sufficient_stats: empty feature stream and no initial "
+            "stats — pass `stats=init_stats(...)` or a non-empty iterator"
+        )
+    return stats

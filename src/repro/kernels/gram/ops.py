@@ -15,15 +15,23 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
 @functools.partial(jax.jit, static_argnames=("block_l", "block_n", "force_ref"))
 def gram(H: jax.Array, T: jax.Array, *, block_l: int = 128,
          block_n: int = 512, force_ref: bool = False):
     """Fused (H^T H, H^T T). Pads N and L to block multiples (zero rows/cols
-    contribute nothing to either product, so padding is exact)."""
+    contribute nothing to either product, so padding is exact).
+
+    Block policy: block_n is clamped to the sample count but always kept a
+    multiple of 8 (TPU sublane) — N < 8, or any N not a multiple of 8, pads
+    up to the next aligned block instead of producing an unaligned tile."""
     if force_ref:
         return gram_ref(H, T)
     N, L = H.shape
-    block_n = min(block_n, max(8, N))
+    block_n = max(8, min(block_n, _round_up(N, 8)))
     pad_n = (-N) % block_n
     pad_l = (-L) % block_l
     Hp = jnp.pad(H, ((0, pad_n), (0, pad_l)))

@@ -19,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init
 from repro.models.sharding import MODEL_AXIS, maybe_shard
@@ -189,7 +190,7 @@ def moe_ffn_shardmap(params, cfg: ModelConfig, x: jax.Array):
     # d / F over model, weights replicated across data inside the region.
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     bspec = batch_axes if batch_axes else None
-    out = jax.shard_map(
+    out = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(bspec, None, None),            # x full-d per shard

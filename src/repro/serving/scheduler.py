@@ -49,7 +49,9 @@ class EngineStats:
 
 class ContinuousBatchingEngine:
     def __init__(self, params, cfg: ModelConfig, batch_slots: int,
-                 max_len: int, cache_dtype=jnp.float32):
+                 max_len: int, cache_dtype=jnp.bfloat16):
+        # cache_dtype default matches prefill/init_cache, so engine decoding
+        # is token-identical to the sequential generate() reference
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
@@ -92,7 +94,9 @@ class ContinuousBatchingEngine:
             if batch_leaf.ndim == 0:
                 return batch_leaf
             if batch_leaf.shape == req_leaf.shape:
-                return batch_leaf  # shared scalar-ish leaves
+                # every cache leaf carries the batch axis, so equal shapes
+                # mean B == 1: the slot copy is the whole leaf
+                return req_leaf.astype(batch_leaf.dtype)
             # find the axis where batch_leaf has B and req_leaf has 1
             for ax in range(batch_leaf.ndim):
                 if (batch_leaf.shape[ax] == self.B

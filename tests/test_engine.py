@@ -1,0 +1,166 @@
+"""Stats-first consensus engine: executor parity and streaming accumulation.
+
+The engine's core claim is that the vmap dense-incidence executor and the
+shard_map ring executor wrap the SAME per-agent ``agent_update`` body, so on
+the same ring graph they must agree to float noise — not just to loose
+algorithmic tolerances.  Multi-device host platforms must be configured
+before jax initializes, so the parity test runs in a subprocess with
+XLA_FLAGS set (the main test process keeps the default single device).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (
+    SufficientStats,
+    accumulate_stats,
+    accumulate_stats_chunked,
+    init_stats,
+    sufficient_stats,
+)
+
+_PARITY_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from repro.core.engine import (
+        ConsensusConfig, fit_dense, fit_sharded, sufficient_stats,
+    )
+    from repro.core.graph import ring
+
+    m, N, L, d = 8, 24, 12, 3
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    H = jax.random.normal(k1, (m, N, L)) / jnp.sqrt(L)
+    T = jax.random.normal(k2, (m, N, d))
+    stats = sufficient_stats(H, T)
+    mesh = jax.make_mesh((8,), ("agents",))
+
+    # Strict trajectory parity over a short horizon: both executors run the
+    # SAME agent_update body, so they agree to float-lowering noise
+    # (iteration 1 is bitwise identical; 1-ulp batched-vs-unbatched XLA
+    # differences then amplify through the chaotic bilinear ADMM dynamics,
+    # which is why this asserts a short window, not a long run).
+    for solver, fo in (("sylvester", False), ("kron", False), ("sylvester", True)):
+        cfg = ConsensusConfig(r=2, iters=3, tau=2.0, zeta=1.0, delta=10.0,
+                              u_solver=solver, first_order=fo)
+        dense_state, _ = fit_dense(stats, ring(m), cfg)
+        U, A, _ = fit_sharded(stats, mesh, ("agents",), cfg)
+        np.testing.assert_allclose(
+            np.asarray(U), np.asarray(dense_state.U), rtol=1e-5, atol=1e-5,
+            err_msg=f"U mismatch for solver={solver} fo={fo}",
+        )
+        np.testing.assert_allclose(
+            np.asarray(A), np.asarray(dense_state.A), rtol=1e-5, atol=1e-5,
+            err_msg=f"A mismatch for solver={solver} fo={fo}",
+        )
+    print("ENGINE_EXECUTORS_MATCH")
+    """
+)
+
+
+def test_vmap_and_shardmap_executors_match():
+    """(U, A) parity between fit_dense and fit_sharded from identical
+    SufficientStats on an 8-device host-platform ring mesh (rtol 1e-5)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _PARITY_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ENGINE_EXECUTORS_MATCH" in proc.stdout
+
+
+def test_chunked_accumulation_matches_one_shot():
+    """Streaming: folding a batch in chunks == folding it at once, exactly
+    up to summation order (and the tail chunk's zero-padding is a no-op)."""
+    m, B, L, d = 3, 37, 10, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    H = jax.random.normal(k1, (m, B, L))
+    T = jax.random.normal(k2, (m, B, d))
+    one_shot = accumulate_stats(init_stats(m, L, d), H, T)
+    for chunk in (5, 8, 37, 64):   # uneven tail, exact fit, chunk > B
+        chunked = accumulate_stats_chunked(init_stats(m, L, d), H, T, chunk)
+        np.testing.assert_allclose(np.asarray(chunked.G),
+                                   np.asarray(one_shot.G), rtol=1e-6, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(chunked.R),
+                                   np.asarray(one_shot.R), rtol=1e-6, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(chunked.t2),
+                                   np.asarray(one_shot.t2), rtol=1e-6, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(chunked.n),
+                                      np.asarray(one_shot.n))
+
+
+def test_stream_sufficient_stats_matches_one_shot():
+    """Pipeline bridge: folding an iterator of (H, T) batches (with inner
+    chunking) equals accumulating the concatenated batch at once."""
+    from repro.data.pipeline import stream_sufficient_stats
+
+    m, L, d = 2, 6, 2
+    ks = jax.random.split(jax.random.PRNGKey(11), 6)
+    parts = [
+        (jax.random.normal(ks[2 * i], (m, 4 + 3 * i, L)),
+         jax.random.normal(ks[2 * i + 1], (m, 4 + 3 * i, d)))
+        for i in range(3)
+    ]
+    streamed = stream_sufficient_stats(iter(parts), chunk=4)
+    H_all = jnp.concatenate([h for h, _ in parts], axis=1)
+    T_all = jnp.concatenate([t for _, t in parts], axis=1)
+    one_shot = accumulate_stats(init_stats(m, L, d), H_all, T_all)
+    np.testing.assert_allclose(np.asarray(streamed.G), np.asarray(one_shot.G),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(streamed.R), np.asarray(one_shot.R),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(streamed.n),
+                                  np.asarray(one_shot.n))
+
+
+def test_stats_producer_matches_manual_einsum():
+    m, N, L, d = 2, 9, 6, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    H = jax.random.normal(k1, (m, N, L))
+    T = jax.random.normal(k2, (m, N, d))
+    s = sufficient_stats(H, T)
+    np.testing.assert_allclose(
+        np.asarray(s.G), np.asarray(jnp.einsum("mnl,mnk->mlk", H, H)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(s.R), np.asarray(jnp.einsum("mnl,mnd->mld", H, T)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(s.t2), np.asarray(jnp.sum(T**2, axis=(1, 2))),
+        rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(s.n) == N)
+
+
+def test_objective_from_stats_matches_residual_form():
+    from repro.core.dmtl_elm import dmtl_objective
+    from repro.core.engine import objective_from_stats
+
+    m, N, L, d, r = 4, 11, 7, 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    H = jax.random.normal(ks[0], (m, N, L))
+    T = jax.random.normal(ks[1], (m, N, d))
+    U = jax.random.normal(ks[2], (m, L, r))
+    A = jax.random.normal(ks[3], (m, r, d))
+    stats = sufficient_stats(H, T)
+    got = float(objective_from_stats(stats, U, A, 2.0, 2.0))
+    want = float(dmtl_objective(H, T, U, A, 2.0, 2.0))
+    assert abs(got - want) < 1e-3 * abs(want) + 1e-4
+
+
+def test_stats_fields_default_and_alias():
+    """dmtl_fit_from_stats-era callers construct stats with (G, R) only."""
+    from repro.core.heads import HeadStats
+
+    assert HeadStats is SufficientStats
+    s = SufficientStats(G=jnp.zeros((2, 4, 4)), R=jnp.zeros((2, 4, 1)))
+    assert float(jnp.asarray(s.n)) == 0.0 and float(jnp.asarray(s.t2)) == 0.0

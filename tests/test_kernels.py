@@ -32,6 +32,22 @@ def test_gram_sweep(N, L, D, dtype):
     np.testing.assert_allclose(np.asarray(R), np.asarray(Rr), **TOL[dtype])
 
 
+@pytest.mark.parametrize("N,L,D", [(5, 3, 1), (3, 129, 2), (7, 200, 1),
+                                   (12, 70, 3), (1, 5, 1)])
+def test_gram_odd_shapes_default_blocks(N, L, D):
+    """Default block policy on N < 8 and non-multiple-of-128 L: the clamp
+    must keep block_n sublane-aligned (multiple of 8) and pad exactly."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(N * 1000 + L))
+    H = jax.random.normal(k1, (N, L))
+    T = jax.random.normal(k2, (N, D))
+    G, R = gram(H, T)   # default block_l=128, block_n=512
+    Gr, Rr = gram_ref(H, T)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Gr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(R), np.asarray(Rr), rtol=2e-4,
+                               atol=2e-4)
+
+
 def test_gram_symmetry_and_psd():
     H = jax.random.normal(jax.random.PRNGKey(0), (80, 40))
     G, _ = gram(H, jnp.zeros((80, 1)), block_l=32, block_n=16)
