@@ -1,6 +1,8 @@
 """Paper Fig. 3: objective value vs iterations for MTL-ELM, DMTL-ELM and
 FO-DMTL-ELM on the §IV-A synthetic setup, across the paper's four
-(L, N_t, tau, zeta) panels.
+(L, N_t, tau, zeta) panels — plus the Jacobian-vs-Gauss-Seidel sweep-order
+comparison (``run_sweeps``): iterations each executor needs to reach the
+Jacobian iteration-100 objective on fig2a / ring / star topologies.
 
 Stats-first: the data is reduced ONCE per panel to SufficientStats and all
 three algorithms fit from the same statistics — the engine contract."""
@@ -14,8 +16,8 @@ import numpy as np
 
 from repro.configs.paper import PaperConvergenceSetup
 from repro.core import (
-    DMTLELMConfig, MTLELMConfig, fit_dense, mtl_elm_fit_from_stats,
-    paper_fig2a, sufficient_stats,
+    DMTLELMConfig, MTLELMConfig, fit_colored, fit_dense,
+    mtl_elm_fit_from_stats, paper_fig2a, ring, star, sufficient_stats,
 )
 from repro.data.synthetic import paper_uniform
 
@@ -60,3 +62,60 @@ def run():
              f"{abs(obj_f[-1]-obj_c[-1])/abs(obj_c[-1]):.4f}")
     write_csv("fig3_convergence",
               ["panel", "iter", "mtl_elm", "dmtl_elm", "fo_dmtl_elm"], rows)
+
+
+def _iters_to(objs: np.ndarray, target: float) -> int:
+    """First 1-based iteration whose objective is <= target, or -1 if the
+    horizon never reaches it."""
+    hit = np.nonzero(objs <= target)[0]
+    return int(hit[0]) + 1 if hit.size else -1
+
+
+def run_sweeps():
+    """Sweep-order comparison: Jacobian (fit_dense) vs Gauss-Seidel colored
+    sweeps (fit_colored, staleness=0) vs 3-round-stale messages, on the
+    paper's Fig. 2(a) graph and ring/star topologies.
+
+    The yardstick is the Jacobian executor's iteration-100 objective, with
+    0.1% of the initial optimality gap as slack (different sweep orders
+    settle on fp32 plateaus a few 1e-6 apart, so the raw plateau value is
+    not comparable across executors): for each topology we report the first
+    iteration at which each sweep order has closed 99.9% of the Jacobian
+    gap.  Gauss-Seidel propagates fresh subspaces within an iteration, so
+    it gets there in strictly fewer iterations; k-round-stale messages
+    degrade gracefully toward (or past) the Jacobian count."""
+    setup = PaperConvergenceSetup(L=10, N=100)
+    H, T = paper_uniform(jax.random.PRNGKey(0), m=setup.m, N=setup.N,
+                         L=setup.L, d=setup.d)
+    stats = sufficient_stats(H, T)
+    iters = 300
+    cfg = DMTLELMConfig(r=setup.r, rho=setup.rho, delta=setup.delta,
+                        tau=2.0, zeta=1.0, iters=iters)
+    rows = []
+    for name, g in [("fig2a", paper_fig2a()), ("ring", ring(setup.m)),
+                    ("star", star(setup.m))]:
+        (_, diag_j), t_j = timed(lambda: fit_dense(stats, g, cfg))
+        (_, diag_g), t_g = timed(lambda: fit_colored(stats, g, cfg))
+        (_, diag_s), t_s = timed(
+            lambda: fit_colored(stats, g, cfg, staleness=3))
+        obj_j = np.asarray(diag_j["objective"])
+        obj_g = np.asarray(diag_g["objective"])
+        obj_s = np.asarray(diag_s["objective"])
+        # Jacobian @ iteration 100, plus 0.1% of the initial gap as slack
+        target = float(obj_j[99]) + 1e-3 * float(obj_j[0] - obj_j[99])
+        it_j = _iters_to(obj_j, target)
+        it_g = _iters_to(obj_g, target)
+        it_s = _iters_to(obj_s, target)
+        n_colors = len(g.chromatic_schedule())
+        speedup = f"{it_j / it_g:.2f}" if it_g > 0 and it_j > 0 else "DNF"
+        emit(f"sweeps/{name}/jacobian", t_j * 1e6,
+             f"iters_to_target={it_j};obj100={target:.4f}")
+        emit(f"sweeps/{name}/gauss_seidel", t_g * 1e6,
+             f"iters_to_target={it_g};colors={n_colors};"
+             f"speedup_x={speedup}")
+        emit(f"sweeps/{name}/stale3", t_s * 1e6,
+             f"iters_to_target={it_s}")
+        rows.append([name, n_colors, target, it_j, it_g, it_s])
+    write_csv("sweep_iterations",
+              ["graph", "colors", "jacobian_obj100", "jacobian_iters",
+               "gauss_seidel_iters", "stale3_iters"], rows)

@@ -25,6 +25,7 @@ def main() -> None:
 
     suites = [
         ("fig3", convergence.run),
+        ("sweeps", convergence.run_sweeps),
         ("fig4", consensus.run),
         ("table1", generalization.run),
         ("fig6", communication.run),

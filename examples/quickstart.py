@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    DMTLELMConfig, MTLELMConfig, elm_fit, fit_dense, make_feature_map,
-    mtl_elm_fit_from_stats, ring, sufficient_stats,
+    DMTLELMConfig, MTLELMConfig, elm_fit, fit_colored, fit_dense,
+    make_feature_map, mtl_elm_fit_from_stats, ring, sufficient_stats,
 )
 from repro.data.synthetic import multitask_regression
 
@@ -56,13 +56,24 @@ def main():
                        dataclasses.replace(cfg, first_order=True))
     err_fo = mse(jnp.einsum("mnl,mlr,mrd->mnd", H_te, stf.U, stf.A))
 
+    # Gauss-Seidel colored sweeps: the SAME agent_update body, but agents
+    # update one color class at a time with fresh neighbor messages between
+    # phases — typically fewer iterations to the same solution.  GS reaches
+    # the frozen-dual fixed point fast enough that the paper's adaptive
+    # gamma can collapse early; gamma_floor keeps the dual ascent alive.
+    stg, diag_g = fit_colored(stats, ring(m),
+                              dataclasses.replace(cfg, gamma_floor=0.05))
+    err_gs = mse(jnp.einsum("mnl,mlr,mrd->mnd", H_te, stg.U, stg.A))
+
     print(f"Local ELM      test MSE: {err_local:.5f}")
     print(f"MTL-ELM        test MSE: {err_mtl:.5f}  "
           f"(objective {float(objs[0]):.2f} -> {float(objs[-1]):.2f})")
     print(f"DMTL-ELM       test MSE: {err_dmtl:.5f}  "
           f"(consensus residual {float(diag['consensus'][-1]):.2e})")
     print(f"FO-DMTL-ELM    test MSE: {err_fo:.5f}")
-    assert err_mtl < err_local and err_dmtl < err_local
+    print(f"DMTL-ELM (GS)  test MSE: {err_gs:.5f}  "
+          f"(colored sweeps, consensus {float(diag_g['consensus'][-1]):.2e})")
+    assert err_mtl < err_local and err_dmtl < err_local and err_gs < err_local
     print("multi-task sharing beats local training ✓")
 
 

@@ -24,9 +24,11 @@ from repro.core.engine import (
     accumulate_stats_chunked,
     agent_update,
     dual_step,
+    fit_colored,
     fit_dense,
     fit_sharded,
     init_stats,
+    jacobian_schedule,
     objective_from_stats,
     register_u_solver,
     sufficient_stats,
@@ -48,6 +50,7 @@ from repro.core.dmtl_elm import (
     dmtl_elm_fit,
     dmtl_elm_predict,
     dmtl_objective,
+    fit,
 )
 from repro.core.fo_dmtl_elm import fo_dmtl_elm_fit, lipschitz_bound
 from repro.core.sharded_dmtl import dmtl_elm_fit_sharded, dmtl_fit_from_stats
@@ -57,12 +60,13 @@ __all__ = [
     "Graph", "chain", "complete", "erdos", "paper_fig2a", "ring", "star",
     "AgentState", "ConsensusConfig", "NeighborMsgs", "SufficientStats",
     "U_SOLVERS", "accumulate_stats", "accumulate_stats_chunked", "agent_update",
-    "dual_step", "fit_dense", "fit_sharded", "init_stats",
-    "objective_from_stats", "register_u_solver", "sufficient_stats",
+    "dual_step", "fit_colored", "fit_dense", "fit_sharded", "init_stats",
+    "jacobian_schedule", "objective_from_stats", "register_u_solver",
+    "sufficient_stats",
     "MTLELMConfig", "MTLELMState", "mtl_elm_fit", "mtl_elm_fit_from_stats",
     "mtl_elm_predict", "mtl_objective",
     "DMTLELMConfig", "DMTLELMState", "augmented_lagrangian", "consensus_residual",
-    "dmtl_elm_fit", "dmtl_elm_predict", "dmtl_objective",
+    "dmtl_elm_fit", "dmtl_elm_predict", "dmtl_objective", "fit",
     "fo_dmtl_elm_fit", "lipschitz_bound",
     "dmtl_elm_fit_sharded", "dmtl_fit_from_stats",
 ]

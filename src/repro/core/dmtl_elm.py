@@ -87,5 +87,77 @@ def dmtl_elm_fit(
     return engine.fit_dense(stats, g, cfg)
 
 
+def fit(
+    H: jax.Array,
+    T: jax.Array,
+    g: Graph,
+    cfg: DMTLELMConfig,
+    *,
+    executor: str = "dense",
+    mesh: "jax.sharding.Mesh | None" = None,
+    agent_axes=None,
+    schedule=None,
+    staleness: int = 0,
+):
+    """One entry point, three executors over the SAME ``agent_update`` body.
+
+    * ``executor="dense"``   — Jacobian sweep, vmap + edge-list gathering
+      (``engine.fit_dense``); the paper's synchronous scheme.
+    * ``executor="colored"`` — Gauss-Seidel colored sweeps
+      (``engine.fit_colored``); ``schedule`` overrides the greedy
+      ``g.chromatic_schedule()`` and ``staleness`` delays neighbor messages
+      by k rounds (see the engine docstring for the trade-off).
+    * ``executor="sharded"`` — one agent per shard of ``mesh[agent_axes]``
+      with ppermute ring consensus (``engine.fit_sharded``); the consensus
+      graph is the mesh ring/torus, so ``g`` must be the matching ring
+      (any other topology would be silently replaced — rejected instead).
+
+    Executor-specific kwargs are validated: ``schedule``/``staleness`` only
+    apply to "colored" and ``mesh``/``agent_axes`` only to "sharded";
+    passing them elsewhere raises rather than silently ignoring them.
+
+    dense/colored return ``(DMTLELMState, diagnostics)``; sharded returns
+    the engine's ``(U, A, diagnostics)`` sharded-output contract.
+    """
+    # All validation happens BEFORE the Gram reduction: a bad call must not
+    # pay the O(m N L^2) stats pass just to raise.
+    if executor not in ("dense", "sharded", "colored"):
+        raise ValueError(
+            f"unknown executor {executor!r}; expected 'dense', 'sharded' or "
+            f"'colored'"
+        )
+    if executor != "colored" and (schedule is not None or staleness != 0):
+        raise ValueError(
+            f"schedule=/staleness= only apply to executor='colored', "
+            f"got executor={executor!r}"
+        )
+    if executor != "sharded" and (mesh is not None or agent_axes is not None):
+        raise ValueError(
+            f"mesh=/agent_axes= only apply to executor='sharded', "
+            f"got executor={executor!r}"
+        )
+    if executor == "sharded":
+        if mesh is None or agent_axes is None:
+            raise ValueError(
+                "executor='sharded' needs mesh= and agent_axes="
+            )
+        if set(g.edges) != engine.torus_edges(
+            [mesh.shape[a] for a in agent_axes]
+        ):
+            raise ValueError(
+                "executor='sharded' realizes the ring/torus induced by the "
+                "mesh agent axes; pass the matching g (use dense/colored "
+                "executors for arbitrary topologies)"
+            )
+    stats = sufficient_stats(H, T)
+    if executor == "dense":
+        return engine.fit_dense(stats, g, cfg)
+    if executor == "colored":
+        return engine.fit_colored(
+            stats, g, cfg, schedule=schedule, staleness=staleness
+        )
+    return engine.fit_sharded(stats, mesh, agent_axes, cfg)
+
+
 def dmtl_elm_predict(U_t: jax.Array, A_t: jax.Array, H: jax.Array) -> jax.Array:
     return H @ U_t @ A_t

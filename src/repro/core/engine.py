@@ -24,16 +24,37 @@ backend:
   ``fit_dense``
       Executor 1: all agents on one device; neighbor messages are dense
       incidence/adjacency einsums, the body is ``jax.vmap``-ed over agents.
+      Sweep order: synchronous Jacobian (every agent reads its neighbors'
+      previous iterate), the paper's scheme.
   ``fit_sharded``
       Executor 2: one agent per mesh shard on a ring/torus; neighbor
       messages travel over ``jax.lax.ppermute``, the *same* body runs
-      per shard inside ``shard_map``.
+      per shard inside ``shard_map``.  Jacobian sweep order (all shards
+      update simultaneously each round).
+  ``fit_colored``
+      Executor 3: Gauss-Seidel colored sweeps — agents update one color
+      class of ``Graph.chromatic_schedule()`` at a time, re-gathering
+      neighbor messages between phases so later classes see the current
+      iterate of earlier classes.  A ``staleness`` knob delays neighbor
+      messages by k rounds to model asynchronous execution.
 
-Because both executors call the identical ``agent_update``, vmap/sharded
+Sweep-order / staleness trade-off: Gauss-Seidel (``fit_colored``,
+``staleness=0``) propagates information within an iteration and typically
+reaches a given objective in fewer iterations than Jacobian, but its color
+phases are sequential — per-iteration parallel width drops from ``m`` to
+``max_class_size``, so it suits few-device / iteration-bound deployments,
+while the Jacobian executors (``fit_dense`` / ``fit_sharded``) keep all
+agents in flight and suit wide meshes.  ``staleness=k`` interpolates toward
+asynchrony tolerance: ``staleness=1`` is exactly the Jacobian schedule (the
+parity oracle — so is the single-class ``jacobian_schedule(m)``), larger k
+emulates k-round-late messages and degrades convergence gracefully instead
+of blocking on stragglers.
+
+Because all executors call the identical ``agent_update``, cross-executor
 parity is true by construction; new topologies or async sweeps only need a
 new executor, never a new update body.  Iteration-invariant work (the
 eigendecomposition of G_t used by the ``sylvester`` solver) is hoisted out
-of the ADMM scan by ``hoist_precomp`` in both executors.
+of the ADMM scan by ``hoist_precomp`` in every executor.
 """
 
 from __future__ import annotations
@@ -129,7 +150,9 @@ def accumulate_stats_chunked(
 
     The tail chunk is zero-padded; zero rows contribute nothing to G, R or
     t2, so chunked accumulation equals one-shot accumulation exactly.  The
-    sample count ``n`` uses the true (unpadded) batch size.
+    sample count ``n`` uses the true (unpadded) batch size and — like every
+    other leaf — comes out per-agent ``(m,)``, identical in shape and value
+    to the one-shot :func:`accumulate_stats` path.
     """
     m, B = H.shape[0], H.shape[1]
     k = -(-B // chunk)
@@ -139,8 +162,11 @@ def accumulate_stats_chunked(
     # (k, m, chunk, ...) so the scan walks chunks
     Hc = Hp.reshape(m, k, chunk, H.shape[-1]).swapaxes(0, 1)
     Tc = Tp.reshape(m, k, chunk, T.shape[-1]).swapaxes(0, 1)
-    # scalar t2 (the (G, R)-only construction) must be broadcast to the
+    # scalar n/t2 (the (G, R)-only construction) must be broadcast to the
     # per-agent shape the fold produces, or the scan carry types mismatch
+    # (and downstream consumers would see a scalar n from the chunked path
+    # but an (m,) n from the one-shot path)
+    n_0 = jnp.broadcast_to(jnp.asarray(stats.n, jnp.float32), (m,))
     t2_0 = jnp.broadcast_to(jnp.asarray(stats.t2, jnp.float32), (m,))
 
     def fold(carry, ht):
@@ -149,7 +175,7 @@ def accumulate_stats_chunked(
         return (carry[0] + b.G, carry[1] + b.R, carry[2] + b.t2), None
 
     (G, R, t2), _ = jax.lax.scan(fold, (stats.G, stats.R, t2_0), (Hc, Tc))
-    return SufficientStats(G=G, R=R, n=stats.n + B, t2=t2)
+    return SufficientStats(G=G, R=R, n=n_0 + B, t2=t2)
 
 
 # --------------------------------------------------------------------------
@@ -212,6 +238,13 @@ class ConsensusConfig:
     u_solver: str = "sylvester"  # key into U_SOLVERS: "kron" | "sylvester" | "cg"
     first_order: bool = False    # FO-DMTL-ELM (Algorithm 3)
     gamma_cap: float = 1.0       # gamma = min(cap, delta * dual/primal) as in §IV
+    # Lower bound on the adaptive gamma (0 = the paper's rule untouched).
+    # The §IV heuristic shrinks gamma with the ITERATE movement, which is
+    # tuned to Jacobian dynamics: Gauss-Seidel sweeps (fit_colored) reach
+    # the frozen-dual fixed point much faster, so gamma can collapse while
+    # the consensus residual is still large, freezing the duals.  A small
+    # floor (e.g. 0.05) keeps the dual ascent alive for those executors.
+    gamma_floor: float = 0.0
 
 
 def _u_solve_kron(G, M, rhs, c, precomp=None):
@@ -332,6 +365,7 @@ def dual_step(
     gamma = jnp.minimum(
         cfg.gamma_cap, cfg.delta * dual / jnp.maximum(primal, 1e-12)
     )
+    gamma = jnp.maximum(gamma, cfg.gamma_floor)   # 0.0 = paper rule as-is
     gamma = jnp.where(primal <= 1e-12, cfg.gamma_cap, gamma)
     return lam + cfg.rho * gamma[..., None, None] * resid_new, gamma, primal
 
@@ -344,20 +378,32 @@ def _resolve_tau_zeta(cfg: ConsensusConfig, deg: jax.Array, m: int, dtype):
 
 
 # --------------------------------------------------------------------------
-# Executor 1: vmap + dense incidence (reference; all agents on one device)
+# Shared edge-list machinery of the single-program executors (1 and 3)
 # --------------------------------------------------------------------------
 
 
-def fit_dense(
-    stats: SufficientStats, g: Graph, cfg: ConsensusConfig,
-) -> tuple["DenseState", dict]:
-    """Run Algorithm 2 (or 3 if cfg.first_order) over stats on graph ``g``.
+class _EdgeSetup(NamedTuple):
+    """Everything fit_dense / fit_colored share: normalized stats, resolved
+    proximal weights, the hoisted precomp, edge-list gather closures, the
+    vmapped ``agent_update`` body, and the all-ones initial state.  One
+    construction site keeps the executors' numerics identical by code, not
+    by convention."""
 
-    Neighbor messages are dense adjacency/incidence products; the shared
-    :func:`agent_update` body is vmapped over the agent axis.  Returns the
-    final stacked state and per-iteration diagnostics ('objective',
-    'lagrangian', 'consensus') — all computed from stats alone.
-    """
+    stats: SufficientStats
+    deg: jax.Array
+    tau_t: jax.Array
+    zeta_t: jax.Array
+    precomp: object
+    edge_diff: Callable
+    neighbor_sum: Callable
+    ct_transpose: Callable
+    body: Callable
+    init: "DenseState"
+
+
+def _edge_setup(
+    stats: SufficientStats, g: Graph, cfg: ConsensusConfig
+) -> _EdgeSetup:
     m, L = stats.G.shape[0], stats.G.shape[-1]
     d = stats.R.shape[-1]
     dtype = stats.G.dtype
@@ -371,8 +417,8 @@ def fit_dense(
     )
     # Edge-list message gathering (O(E L r), vs O(m^2 L r) for a dense
     # adjacency matmul).  For degree-2 graphs the per-agent sums are the
-    # same two-term additions the ring executor performs, so the two
-    # executors stay bitwise-aligned far longer than matmul gathering would.
+    # same two-term additions the ring executor performs, so the executors
+    # stay bitwise-aligned far longer than matmul gathering would.
     src = jnp.asarray([e[0] for e in g.edges], jnp.int32)
     dst = jnp.asarray([e[1] for e in g.edges], jnp.int32)
     deg = jnp.asarray(g.degrees(), dtype=dtype)        # (m,)
@@ -409,34 +455,62 @@ def fit_dense(
         ),
     )
 
-    U0 = jnp.ones((m, L, cfg.r), dtype=dtype)
-    A0 = jnp.ones((m, cfg.r, d), dtype=dtype)
-    lam0 = jnp.zeros((g.n_edges, L, cfg.r), dtype=dtype)
+    init = DenseState(
+        U=jnp.ones((m, L, cfg.r), dtype=dtype),
+        A=jnp.ones((m, cfg.r, d), dtype=dtype),
+        lam=jnp.zeros((g.n_edges, L, cfg.r), dtype=dtype),
+    )
+    return _EdgeSetup(
+        stats, deg, tau_t, zeta_t, precomp,
+        edge_diff, neighbor_sum, ct_transpose, body, init,
+    )
+
+
+def _iteration_diag(stats, cfg, U, A, lam_new, resid_new) -> dict:
+    """The per-iteration diagnostics every single-program executor reports:
+    primal objective (eq. 12), augmented Lagrangian (eq. 13), RMS edge
+    disagreement — all from stats alone."""
+    obj = objective_from_stats(stats, U, A, cfg.mu1, cfg.mu2)
+    return {
+        "objective": obj,
+        "lagrangian": obj
+        + jnp.sum(lam_new * resid_new)
+        + 0.5 * cfg.rho * jnp.sum(resid_new**2),
+        "consensus": jnp.sqrt(jnp.mean(resid_new**2)),
+    }
+
+
+# --------------------------------------------------------------------------
+# Executor 1: vmap + dense incidence (reference; all agents on one device)
+# --------------------------------------------------------------------------
+
+
+def fit_dense(
+    stats: SufficientStats, g: Graph, cfg: ConsensusConfig,
+) -> tuple["DenseState", dict]:
+    """Run Algorithm 2 (or 3 if cfg.first_order) over stats on graph ``g``.
+
+    Neighbor messages are dense adjacency/incidence products; the shared
+    :func:`agent_update` body is vmapped over the agent axis.  Returns the
+    final stacked state and per-iteration diagnostics ('objective',
+    'lagrangian', 'consensus') — all computed from stats alone.
+    """
+    es = _edge_setup(stats, g, cfg)
+    stats = es.stats
 
     def step(state, _):
         U, A, lam = state
-        neigh = neighbor_sum(U)                        # sum of neighbor U^k
-        ct_lam = ct_transpose(lam)                     # C_t^T lambda^k
-        msgs = NeighborMsgs(neigh, ct_lam, deg, tau_t, zeta_t)
-        U_new, A_new = body(stats, AgentState(U, A, None), msgs, precomp)
-        resid_old = edge_diff(U)
-        resid_new = edge_diff(U_new)
+        neigh = es.neighbor_sum(U)                     # sum of neighbor U^k
+        ct_lam = es.ct_transpose(lam)                  # C_t^T lambda^k
+        msgs = NeighborMsgs(neigh, ct_lam, es.deg, es.tau_t, es.zeta_t)
+        U_new, A_new = es.body(stats, AgentState(U, A, None), msgs, es.precomp)
+        resid_old = es.edge_diff(U)
+        resid_new = es.edge_diff(U_new)
         lam_new, _, primal = dual_step(lam, resid_old, resid_new, cfg)
-        diag = {
-            "objective": objective_from_stats(
-                stats, U_new, A_new, cfg.mu1, cfg.mu2
-            ),
-            "lagrangian": objective_from_stats(
-                stats, U_new, A_new, cfg.mu1, cfg.mu2
-            )
-            + jnp.sum(lam_new * resid_new)
-            + 0.5 * cfg.rho * jnp.sum(resid_new**2),
-            "consensus": jnp.sqrt(jnp.mean(resid_new**2)),
-        }
+        diag = _iteration_diag(stats, cfg, U_new, A_new, lam_new, resid_new)
         return DenseState(U_new, A_new, lam_new), diag
 
-    init = DenseState(U0, A0, lam0)
-    return jax.lax.scan(step, init, None, length=cfg.iters)
+    return jax.lax.scan(step, es.init, None, length=cfg.iters)
 
 
 class DenseState(NamedTuple):
@@ -448,8 +522,196 @@ class DenseState(NamedTuple):
 
 
 # --------------------------------------------------------------------------
+# Executor 3: colored Gauss-Seidel sweeps (sequential color phases)
+# --------------------------------------------------------------------------
+
+
+def jacobian_schedule(m: int) -> tuple[tuple[int, ...], ...]:
+    """The single-phase schedule: every agent in one class.  Running
+    :func:`fit_colored` with it reproduces the Jacobian sweep of
+    :func:`fit_dense` exactly — the executor-parity oracle."""
+    return (tuple(range(m)),)
+
+
+def _validate_schedule(schedule, m: int) -> None:
+    seen: set[int] = set()
+    for cls in schedule:
+        for t in cls:
+            if not 0 <= t < m:
+                raise ValueError(f"schedule agent {t} out of range for m={m}")
+            if t in seen:
+                raise ValueError(f"agent {t} appears twice in schedule")
+            seen.add(t)
+    if len(seen) != m:
+        raise ValueError(
+            f"schedule covers {len(seen)} of {m} agents; classes must "
+            f"partition the agent set"
+        )
+
+
+def fit_colored(
+    stats: SufficientStats,
+    g: Graph,
+    cfg: ConsensusConfig,
+    *,
+    schedule: Sequence[Sequence[int]] | None = None,
+    staleness: int = 0,
+) -> tuple[DenseState, dict]:
+    """Gauss-Seidel / colored-sweep executor around the same ``agent_update``.
+
+    The paper's scheme is Jacobian across agents: every agent updates from
+    its neighbors' *previous*-iteration subspaces.  This executor instead
+    sweeps the agents one color class at a time (``schedule`` defaults to
+    :meth:`Graph.chromatic_schedule`, a greedy proper coloring), re-gathering
+    ``neigh_sum`` / ``ct_lam`` from the live ``U`` between phases — so later
+    classes see the *current*-iteration subspaces of earlier classes, the
+    classic Gauss-Seidel acceleration.  The per-agent round body is the ONE
+    shared :func:`agent_update`; only the message schedule differs.
+
+    ``staleness`` models asynchronous execution by delaying neighbor
+    messages:
+
+      * ``staleness=0`` (default): pure Gauss-Seidel — each phase gathers
+        from the live, freshest ``U``.
+      * ``staleness=k >= 1``: every phase of iteration ``i`` gathers from
+        the ``U`` snapshot published at the end of iteration ``i - k``
+        (the initial ``U^0`` while ``i < k``).  In particular
+        ``staleness=1`` delivers exactly the previous iterate to every
+        phase, which reproduces the synchronous Jacobian sweep of
+        :func:`fit_dense` for ANY schedule — the second parity oracle.
+        Larger ``k`` emulates k-round-late messages on a slow interconnect.
+
+    One ADMM iteration = all color phases + one shared :func:`dual_step` on
+    the edge duals (duals are per-iteration, exactly as in ``fit_dense``, so
+    the single-class schedule is bit-for-bit the Jacobian path).
+
+    Because the sweep solves the frozen-dual subproblem faster than the
+    Jacobian iteration, the paper's §IV adaptive gamma (which shrinks with
+    iterate movement) can collapse before consensus is enforced; set
+    ``cfg.gamma_floor`` (e.g. 0.05) to keep the dual ascent alive on
+    long-horizon Gauss-Seidel runs.
+
+    Returns the same ``(DenseState, diagnostics)`` contract as
+    :func:`fit_dense` ('objective', 'lagrangian', 'consensus').
+    """
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    m = stats.G.shape[0]
+    if schedule is None:
+        schedule = g.chromatic_schedule()
+    schedule = tuple(tuple(int(t) for t in cls) for cls in schedule)
+    _validate_schedule(schedule, m)
+
+    es = _edge_setup(stats, g, cfg)
+    stats = es.stats
+
+    # Class-constant slices (stats, precomp, degrees) and the per-class
+    # incident-edge lists are gathered ONCE, outside the ADMM scan — only
+    # U/A/lam move between phases.  Each phase sums only the edges touching
+    # its class (two segment_sums added in the same order as the full
+    # ``neighbor_sum``, so the single-class schedule stays bitwise-equal to
+    # ``fit_dense``); total per-iteration gather work is O(E) across all
+    # phases, not O(c * E).
+    phases = []
+    for cls in schedule:
+        idx = jnp.asarray(cls, jnp.int32)
+        stats_c = SufficientStats(
+            G=stats.G[idx], R=stats.R[idx], n=stats.n[idx], t2=stats.t2[idx]
+        )
+        precomp_c = (
+            None if es.precomp is None
+            else jax.tree_util.tree_map(lambda x: x[idx], es.precomp)
+        )
+        msg_consts = (es.deg[idx], es.tau_t[idx], es.zeta_t[idx])
+        pos = {t: i for i, t in enumerate(cls)}
+        s_rows = jnp.asarray(
+            [pos[s] for (s, e) in g.edges if s in pos], jnp.int32)
+        s_others = jnp.asarray(
+            [e for (s, e) in g.edges if s in pos], jnp.int32)
+        e_rows = jnp.asarray(
+            [pos[e] for (s, e) in g.edges if e in pos], jnp.int32)
+        e_others = jnp.asarray(
+            [s for (s, e) in g.edges if e in pos], jnp.int32)
+
+        def gather_c(view, k=len(cls), sr=s_rows, so=s_others,
+                     er=e_rows, eo=e_others):
+            return jax.ops.segment_sum(view[so], sr, k) + jax.ops.segment_sum(
+                view[eo], er, k
+            )
+
+        phases.append((idx, stats_c, precomp_c, msg_consts, gather_c))
+
+    # hist[j] = U published at the end of iteration i - staleness + j;
+    # pre-history is the initial subspace.
+    hist0 = jnp.broadcast_to(es.init.U, (staleness,) + es.init.U.shape)
+
+    def step(state, _):
+        U, A, lam, hist = state
+        U_start = U
+        # lam only moves at iteration end, so C^T lam is gathered once; the
+        # neighbor view is the live U (staleness=0, regathered per phase
+        # over the class's incident edges only) or the frozen k-round-old
+        # snapshot.
+        ct_lam_full = es.ct_transpose(lam)
+        for idx, stats_c, precomp_c, (deg_c, tau_c, zeta_c), gather_c in phases:
+            view = U if staleness == 0 else hist[0]
+            msgs = NeighborMsgs(
+                gather_c(view), ct_lam_full[idx], deg_c, tau_c, zeta_c
+            )
+            U_c, A_c = es.body(
+                stats_c, AgentState(U[idx], A[idx], None), msgs, precomp_c
+            )
+            U = U.at[idx].set(U_c)
+            A = A.at[idx].set(A_c)
+        resid_old = es.edge_diff(U_start)
+        resid_new = es.edge_diff(U)
+        lam_new, _, primal = dual_step(lam, resid_old, resid_new, cfg)
+        diag = _iteration_diag(stats, cfg, U, A, lam_new, resid_new)
+        if staleness > 0:
+            hist = jnp.concatenate([hist[1:], U[None]], axis=0)
+        return (U, A, lam_new, hist), diag
+
+    (U, A, lam, _), diags = jax.lax.scan(
+        step, (es.init.U, es.init.A, es.init.lam, hist0), None,
+        length=cfg.iters,
+    )
+    return DenseState(U, A, lam), diags
+
+
+# --------------------------------------------------------------------------
 # Executor 2: shard_map + ppermute ring/torus (one agent per mesh shard)
 # --------------------------------------------------------------------------
+
+
+def torus_edges(sizes: Sequence[int]) -> set:
+    """Directed edge set of the ring/torus :func:`fit_sharded` realizes.
+
+    This is the topology contract of :func:`ring_iteration`, kept next to
+    it: agents are the row-major flattening of the agent-axis grid, and
+    along each axis every coordinate owns the edge to its +1 neighbor (a
+    size-2 axis is the degenerate ring with a SINGLE edge, not a doubled
+    pair).  Entry points use it to reject graphs the sharded executor
+    would silently replace.
+    """
+    import itertools
+
+    sizes = list(sizes)
+    strides = [1] * len(sizes)
+    for i in range(len(sizes) - 2, -1, -1):
+        strides[i] = strides[i + 1] * sizes[i + 1]
+
+    def flat(coord):
+        return sum(c * s for c, s in zip(coord, strides))
+
+    edges = set()
+    for ax_i, n_ax in enumerate(sizes):
+        for coord in itertools.product(*(range(s) for s in sizes)):
+            if n_ax == 2 and coord[ax_i] == 1:
+                continue
+            nb = list(coord)
+            nb[ax_i] = (coord[ax_i] + 1) % n_ax
+            edges.add((flat(coord), flat(nb)))
+    return edges
 
 
 def _ring_recv_from_next(x, axis_name):
@@ -478,10 +740,25 @@ def ring_iteration(
     the fresh U once more for the edge-dual step.  Per iteration each agent
     moves 3 ppermute(U) + 1 ppermute(lambda) per agent axis — the paper's
     O(k L r) communication volume on nearest-neighbor ICI links.
+
+    A size-2 axis is the degenerate ring: ``ring(2)`` has a SINGLE edge
+    (0, 1), so each agent has degree 1 (not 2), the next/prev ppermutes
+    would deliver the same neighbor twice (counted once here), and only
+    agent 0 owns the axis edge — agent 1's dual slot is masked to zero.
+    This keeps ``fit_sharded`` on a 2-agent mesh in exact agreement with
+    ``fit_dense`` on ``ring(2)``.
     """
     U, A, lam = state
     dtype = U.dtype
-    deg = jnp.asarray(2.0 * len(agent_axes), dtype)   # ring degree per axis
+    # Ring degree per axis: 2 neighbors, except the degenerate 2-agent ring
+    # whose single edge gives degree 1.
+    ax_sizes = [jax.lax.axis_size(ax) for ax in agent_axes]
+    for ax, n_ax in zip(agent_axes, ax_sizes):
+        if n_ax < 2:
+            raise ValueError(f"agent axis {ax!r} needs >= 2 shards, got {n_ax}")
+    deg = jnp.asarray(
+        sum(1.0 if n_ax == 2 else 2.0 for n_ax in ax_sizes), dtype
+    )
     tau_t = jnp.asarray(cfg.tau, dtype) + deg
     zeta_t = jnp.asarray(cfg.zeta, dtype)
 
@@ -489,14 +766,23 @@ def ring_iteration(
     neigh = jnp.zeros_like(U)
     ct_lam = jnp.zeros_like(U)
     u_next_old = []
-    for ax_i, ax in enumerate(agent_axes):
+    own_edge = []
+    for ax_i, (ax, n_ax) in enumerate(zip(agent_axes, ax_sizes)):
         u_next = _ring_recv_from_next(U, ax)            # U_{t+1}^k
-        u_prev = _ring_recv_from_prev(U, ax)            # U_{t-1}^k
         lam_prev = _ring_recv_from_prev(lam[ax_i], ax)  # dual of edge (t-1, t)
-        neigh = neigh + u_next + u_prev
+        if n_ax == 2:
+            # single edge: the one neighbor arrives on both permutes —
+            # count it once, and only agent 0 owns the edge dual
+            neigh = neigh + u_next
+            own = (jax.lax.axis_index(ax) == 0).astype(dtype)
+        else:
+            u_prev = _ring_recv_from_prev(U, ax)        # U_{t-1}^k
+            neigh = neigh + u_next + u_prev
+            own = jnp.asarray(1.0, dtype)
         # C_t^T lambda: +lam on own (s-side) edge, -lam on incoming (e-side).
         ct_lam = ct_lam + lam[ax_i] - lam_prev
         u_next_old.append(u_next)
+        own_edge.append(own)
 
     # --- the shared per-agent body ---------------------------------------
     msgs = NeighborMsgs(neigh, ct_lam, deg, tau_t, zeta_t)
@@ -513,8 +799,8 @@ def ring_iteration(
         resid_new = U_new - u_next_new                  # \hat C_i U^{k+1}
         resid_old = U - u_next_old[ax_i]                # \hat C_i U^k
         lam_ax, _, primal = dual_step(lam[ax_i], resid_old, resid_new, cfg)
-        lam_new.append(lam_ax)
-        primal_sq = primal_sq + primal
+        lam_new.append(own_edge[ax_i] * lam_ax)
+        primal_sq = primal_sq + own_edge[ax_i] * primal
     lam_new = jnp.stack(lam_new)
 
     diag = {"primal_sq": primal_sq}

@@ -18,14 +18,19 @@ import dataclasses
 
 import jax
 
-from repro.core.dmtl_elm import DMTLELMConfig, DMTLELMState, dmtl_elm_fit
+from repro.core.dmtl_elm import DMTLELMConfig, DMTLELMState, dmtl_elm_fit, fit
 from repro.core.graph import Graph
 
 
 def fo_dmtl_elm_fit(
-    H: jax.Array, T: jax.Array, g: Graph, cfg: DMTLELMConfig
+    H: jax.Array, T: jax.Array, g: Graph, cfg: DMTLELMConfig, **executor_kw
 ) -> tuple[DMTLELMState, dict]:
+    """Algorithm 3 on any executor: forwards ``executor=`` / ``schedule=`` /
+    ``staleness=`` / ``mesh=`` / ``agent_axes=`` to :func:`dmtl_elm.fit`
+    (default: the dense Jacobian path, as before)."""
     cfg_fo = dataclasses.replace(cfg, first_order=True)
+    if executor_kw:
+        return fit(H, T, g, cfg_fo, **executor_kw)
     return dmtl_elm_fit(H, T, g, cfg_fo)
 
 

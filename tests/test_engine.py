@@ -61,6 +61,27 @@ _PARITY_SCRIPT = textwrap.dedent(
             np.asarray(A), np.asarray(dense_state.A), rtol=1e-5, atol=1e-5,
             err_msg=f"A mismatch for solver={solver} fo={fo}",
         )
+
+    # Degenerate 2-agent ring: ring(2) has ONE edge, so both agents have
+    # degree 1 and the next/prev ppermutes carry the same neighbor; the
+    # sharded executor must not double-count it (regression for the
+    # deg = 2*len(axes) hard-coding).
+    m2 = 2
+    H2 = jax.random.normal(k1, (m2, N, L)) / jnp.sqrt(L)
+    T2 = jax.random.normal(k2, (m2, N, d))
+    stats2 = sufficient_stats(H2, T2)
+    mesh2 = jax.make_mesh((2,), ("agents",))
+    cfg2 = ConsensusConfig(r=2, iters=5, tau=2.0, zeta=1.0, delta=10.0)
+    dense2, _ = fit_dense(stats2, ring(2), cfg2)
+    U2, A2, _ = fit_sharded(stats2, mesh2, ("agents",), cfg2)
+    np.testing.assert_allclose(
+        np.asarray(U2), np.asarray(dense2.U), rtol=1e-5, atol=1e-5,
+        err_msg="ring(2) U mismatch: sharded degree/dual accounting broken",
+    )
+    np.testing.assert_allclose(
+        np.asarray(A2), np.asarray(dense2.A), rtol=1e-5, atol=1e-5,
+        err_msg="ring(2) A mismatch: sharded degree/dual accounting broken",
+    )
     print("ENGINE_EXECUTORS_MATCH")
     """
 )
@@ -89,14 +110,39 @@ def test_chunked_accumulation_matches_one_shot():
     one_shot = accumulate_stats(init_stats(m, L, d), H, T)
     for chunk in (5, 8, 37, 64):   # uneven tail, exact fit, chunk > B
         chunked = accumulate_stats_chunked(init_stats(m, L, d), H, T, chunk)
-        np.testing.assert_allclose(np.asarray(chunked.G),
-                                   np.asarray(one_shot.G), rtol=1e-6, atol=1e-5)
-        np.testing.assert_allclose(np.asarray(chunked.R),
-                                   np.asarray(one_shot.R), rtol=1e-6, atol=1e-5)
-        np.testing.assert_allclose(np.asarray(chunked.t2),
-                                   np.asarray(one_shot.t2), rtol=1e-6, atol=1e-5)
+        # every leaf identical between chunked and one-shot — shape AND value
+        for leaf_c, leaf_o, name in [
+            (chunked.G, one_shot.G, "G"), (chunked.R, one_shot.R, "R"),
+            (chunked.n, one_shot.n, "n"), (chunked.t2, one_shot.t2, "t2"),
+        ]:
+            assert jnp.shape(leaf_c) == jnp.shape(leaf_o), (
+                f"{name}: chunked {jnp.shape(leaf_c)} != "
+                f"one-shot {jnp.shape(leaf_o)}"
+            )
+            np.testing.assert_allclose(np.asarray(leaf_c), np.asarray(leaf_o),
+                                       rtol=1e-6, atol=1e-5)
         np.testing.assert_array_equal(np.asarray(chunked.n),
                                       np.asarray(one_shot.n))
+
+
+def test_chunked_accumulation_from_scalar_default_stats():
+    """Starting from (G, R)-only stats (scalar n/t2 defaults), the chunked
+    path must still come out with per-agent (m,) n and t2 like the one-shot
+    path — a scalar n from one path and an (m,) n from the other would break
+    downstream consumers (regression for `stats.n + B` returning a scalar)."""
+    m, B, L, d = 4, 13, 6, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    H = jax.random.normal(k1, (m, B, L))
+    T = jax.random.normal(k2, (m, B, d))
+    start = SufficientStats(G=jnp.zeros((m, L, L)), R=jnp.zeros((m, L, d)))
+    one_shot = accumulate_stats(start, H, T)
+    chunked = accumulate_stats_chunked(start, H, T, chunk=5)
+    assert jnp.shape(chunked.n) == jnp.shape(one_shot.n) == (m,)
+    assert jnp.shape(chunked.t2) == jnp.shape(one_shot.t2) == (m,)
+    np.testing.assert_array_equal(np.asarray(chunked.n),
+                                  np.asarray(one_shot.n))
+    np.testing.assert_allclose(np.asarray(chunked.t2),
+                               np.asarray(one_shot.t2), rtol=1e-6, atol=1e-5)
 
 
 def test_stream_sufficient_stats_matches_one_shot():
@@ -164,3 +210,210 @@ def test_stats_fields_default_and_alias():
     assert HeadStats is SufficientStats
     s = SufficientStats(G=jnp.zeros((2, 4, 4)), R=jnp.zeros((2, 4, 1)))
     assert float(jnp.asarray(s.n)) == 0.0 and float(jnp.asarray(s.t2)) == 0.0
+
+
+# --------------------------------------------------------------------------
+# Executor 3: colored Gauss-Seidel sweeps
+# --------------------------------------------------------------------------
+
+
+import pytest
+
+from repro.core.engine import ConsensusConfig, fit_colored, fit_dense, jacobian_schedule
+from repro.core.graph import complete, erdos, paper_fig2a, ring, star
+
+
+def _problem(m=5, N=24, L=12, d=3, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    H = jax.random.normal(k1, (m, N, L)) / jnp.sqrt(L)
+    T = jax.random.normal(k2, (m, N, d))
+    return sufficient_stats(H, T)
+
+
+@pytest.mark.parametrize("g", [
+    ring(5), ring(8), star(7), complete(5), paper_fig2a(),
+    erdos(10, 0.3, seed=1), erdos(10, 0.7, seed=2), erdos(6, 0.0),
+], ids=lambda g: f"m{g.m}_E{g.n_edges}")
+def test_coloring_is_proper_and_schedule_partitions(g):
+    """Greedy coloring: no edge inside a color class; the schedule's classes
+    are disjoint, cover all agents, and use at most max_deg + 1 colors."""
+    colors = g.coloring()
+    assert colors.shape == (g.m,) and colors.min() == 0
+    for (s, e) in g.edges:
+        assert colors[s] != colors[e], f"edge ({s},{e}) monochromatic"
+    assert colors.max() + 1 <= g.degrees().max() + 1
+    sched = g.chromatic_schedule()
+    flat = [t for cls in sched for t in cls]
+    assert sorted(flat) == list(range(g.m))
+    assert len(flat) == len(set(flat))
+    for p, cls in enumerate(sched):
+        assert set(colors[list(cls)]) == {p}
+
+
+def test_erdos_p_zero_terminates_as_chain():
+    """Regression: erdos() used to retry forever for small p (the chain
+    fallback fired with probability 0.3 per edge); now a spanning chain is
+    grafted deterministically, so p=0 returns exactly the chain graph."""
+    g = erdos(7, 0.0, seed=3)
+    assert g.edges == tuple((t, t + 1) for t in range(6))
+    # and a sparse draw is still connected without resampling
+    g2 = erdos(12, 0.05, seed=4)
+    assert g2.m == 12  # Graph.__post_init__ enforces connectivity
+
+
+def test_single_color_class_is_jacobian_bitwise():
+    """fit_colored with the one-class jacobian_schedule runs every agent
+    from the start-of-iteration U — exactly fit_dense's sweep, bit for bit."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=20, tau=2.0, zeta=1.0)
+    dense, ddiag = fit_dense(stats, g, cfg)
+    colored, cdiag = fit_colored(stats, g, cfg, schedule=jacobian_schedule(g.m))
+    np.testing.assert_array_equal(np.asarray(colored.U), np.asarray(dense.U))
+    np.testing.assert_array_equal(np.asarray(colored.A), np.asarray(dense.A))
+    np.testing.assert_array_equal(np.asarray(colored.lam), np.asarray(dense.lam))
+    np.testing.assert_array_equal(np.asarray(cdiag["objective"]),
+                                  np.asarray(ddiag["objective"]))
+
+
+@pytest.mark.parametrize("g", [paper_fig2a(), ring(6), star(5)],
+                         ids=["fig2a", "ring6", "star5"])
+def test_staleness_one_is_jacobian_for_any_coloring(g):
+    """staleness=1 delivers exactly the previous iterate to every color
+    phase, so the multi-phase sweep collapses to the Jacobian schedule of
+    fit_dense for ANY proper coloring — the second parity oracle."""
+    stats = _problem(m=g.m)
+    cfg = ConsensusConfig(r=2, iters=15, tau=2.0, zeta=1.0)
+    assert len(g.chromatic_schedule()) > 1   # a real multi-phase sweep
+    dense, _ = fit_dense(stats, g, cfg)
+    colored, _ = fit_colored(stats, g, cfg, staleness=1)
+    np.testing.assert_allclose(np.asarray(colored.U), np.asarray(dense.U),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(colored.A), np.asarray(dense.A),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_gauss_seidel_beats_jacobian_short_horizon():
+    """Fresh within-iteration messages (staleness=0) must dominate the
+    Jacobian sweep at a short horizon: strictly lower objective at the
+    same iteration count on the paper's Fig. 2(a) graph."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=20, tau=2.0, zeta=1.0)
+    _, ddiag = fit_dense(stats, g, cfg)
+    _, gdiag = fit_colored(stats, g, cfg)   # staleness=0 Gauss-Seidel
+    assert float(gdiag["objective"][-1]) < float(ddiag["objective"][-1])
+
+
+def test_staleness_delays_messages():
+    """staleness=k keeps every phase on the U snapshot from k rounds back:
+    iteration 0 is Jacobian regardless of k (pre-history is U^0), and the
+    stale trajectories must (a) differ from the fresh ones afterwards while
+    (b) still carrying finite, convergent dynamics."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg1 = ConsensusConfig(r=2, iters=1, tau=2.0, zeta=1.0)
+    dense1, _ = fit_dense(stats, g, cfg1)
+    for k in (1, 2, 5):
+        colored1, _ = fit_colored(stats, g, cfg1, staleness=k)
+        np.testing.assert_allclose(np.asarray(colored1.U),
+                                   np.asarray(dense1.U),
+                                   rtol=1e-6, atol=1e-6,
+                                   err_msg=f"iteration 0 with staleness={k}")
+    cfg = ConsensusConfig(r=2, iters=40, tau=2.0, zeta=1.0)
+    _, fresh = fit_colored(stats, g, cfg, staleness=0)
+    _, jac = fit_dense(stats, g, cfg)
+    _, stale = fit_colored(stats, g, cfg, staleness=3)
+    obj_stale = np.asarray(stale["objective"])
+    assert np.isfinite(obj_stale).all()
+    assert not np.allclose(obj_stale, np.asarray(fresh["objective"]))
+    assert not np.allclose(obj_stale, np.asarray(jac["objective"]))
+    # staler messages cannot beat the fresh Gauss-Seidel sweep
+    assert float(obj_stale[-1]) >= float(fresh["objective"][-1]) - 1e-4
+
+
+def test_gamma_floor_keeps_gauss_seidel_duals_alive():
+    """Long-horizon GS: the paper's adaptive gamma shrinks with iterate
+    movement and can freeze the duals at nonzero consensus (GS reaches the
+    frozen-dual fixed point fast); a small gamma_floor restores full
+    consensus at the same final objective, and a floor of 0.0 must leave
+    the Jacobian path's dual_step byte-identical to the paper rule."""
+    import dataclasses
+
+    from repro.data.synthetic import multitask_regression
+
+    m = 8
+    H_tr, T_tr, *_ = multitask_regression(
+        jax.random.PRNGKey(0), m=m, n_train=16, n_test=8, L=64, r=2,
+        noise=0.1,
+    )
+    stats = sufficient_stats(H_tr, T_tr)
+    g = ring(m)
+    cfg = ConsensusConfig(r=2, iters=800, tau=1.0, zeta=1.0,
+                          mu1=0.1, mu2=0.1)
+    _, no_floor = fit_colored(stats, g, cfg)
+    _, floored = fit_colored(
+        stats, g, dataclasses.replace(cfg, gamma_floor=0.05))
+    assert float(no_floor["consensus"][-1]) > 1e-3      # the stall is real
+    assert float(floored["consensus"][-1]) < 1e-3
+    assert float(floored["consensus"][-1]) < float(no_floor["consensus"][-1])
+    # default floor 0.0: fit_dense unchanged vs an explicit 0.0
+    cfg_s = ConsensusConfig(r=2, iters=10, tau=1.0, zeta=1.0)
+    a, _ = fit_dense(stats, g, cfg_s)
+    b, _ = fit_dense(stats, g, dataclasses.replace(cfg_s, gamma_floor=0.0))
+    np.testing.assert_array_equal(np.asarray(a.U), np.asarray(b.U))
+
+
+def test_colored_schedule_validation():
+    stats = _problem()
+    g = ring(5)
+    cfg = ConsensusConfig(r=2, iters=2)
+    with pytest.raises(ValueError, match="partition"):
+        fit_colored(stats, g, cfg, schedule=((0, 1), (2, 3)))   # missing 4
+    with pytest.raises(ValueError, match="twice"):
+        fit_colored(stats, g, cfg, schedule=((0, 1, 2), (2, 3, 4)))
+    with pytest.raises(ValueError, match="out of range"):
+        fit_colored(stats, g, cfg, schedule=((0, 1, 2, 3, 7),))
+    with pytest.raises(ValueError, match="staleness"):
+        fit_colored(stats, g, cfg, staleness=-1)
+
+
+def test_fit_entry_point_dispatches_executors():
+    """dmtl_elm.fit(executor=...) routes to the right engine executor and
+    rejects unknown names; FO forwards executor kwargs."""
+    from repro.core.dmtl_elm import fit
+    from repro.core.fo_dmtl_elm import fo_dmtl_elm_fit
+
+    m, N, L, d = 5, 16, 8, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    H = jax.random.normal(k1, (m, N, L)) / jnp.sqrt(L)
+    T = jax.random.normal(k2, (m, N, d))
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=10, tau=2.0, zeta=1.0)
+    dense, _ = fit(H, T, g, cfg)                       # default: dense
+    jacobi, _ = fit(H, T, g, cfg, executor="colored",
+                    schedule=jacobian_schedule(m))
+    np.testing.assert_array_equal(np.asarray(jacobi.U), np.asarray(dense.U))
+    gs, _ = fit(H, T, g, cfg, executor="colored")
+    assert not np.allclose(np.asarray(gs.U), np.asarray(dense.U))
+    fo_gs, _ = fo_dmtl_elm_fit(H, T, g, cfg, executor="colored")
+    fo_dense, _ = fo_dmtl_elm_fit(H, T, g, cfg)
+    assert np.isfinite(np.asarray(fo_gs.U)).all()
+    assert not np.allclose(np.asarray(fo_gs.U), np.asarray(fo_dense.U))
+    with pytest.raises(ValueError, match="unknown executor"):
+        fit(H, T, g, cfg, executor="async")
+    with pytest.raises(ValueError, match="mesh"):
+        fit(H, T, g, cfg, executor="sharded")
+    # executor-specific kwargs must not be silently dropped
+    with pytest.raises(ValueError, match="colored"):
+        fit(H, T, g, cfg, staleness=3)            # dense ignores staleness
+    with pytest.raises(ValueError, match="colored"):
+        fo_dmtl_elm_fit(H, T, g, cfg, schedule=jacobian_schedule(m))
+    with pytest.raises(ValueError, match="sharded"):
+        fit(H, T, g, cfg, executor="colored", agent_axes=("agents",))
+    # sharded consensus runs on the mesh ring/torus: a different g must be
+    # rejected, not silently replaced
+    mesh1 = jax.make_mesh((1,), ("agents",))
+    with pytest.raises(ValueError, match="ring/torus"):
+        fit(H, T, g, cfg, executor="sharded", mesh=mesh1,
+            agent_axes=("agents",))
