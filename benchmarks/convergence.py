@@ -17,7 +17,8 @@ import numpy as np
 from repro.configs.paper import PaperConvergenceSetup
 from repro.core import (
     DMTLELMConfig, MTLELMConfig, fit_colored, fit_dense,
-    mtl_elm_fit_from_stats, paper_fig2a, ring, star, sufficient_stats,
+    mtl_elm_fit_from_stats, objective_from_stats, paper_fig2a, ring, star,
+    sufficient_stats,
 )
 from repro.data.synthetic import paper_uniform
 
@@ -119,3 +120,54 @@ def run_sweeps():
     write_csv("sweep_iterations",
               ["graph", "colors", "jacobian_obj100", "jacobian_iters",
                "gauss_seidel_iters", "stale3_iters"], rows)
+
+
+def run_precision():
+    """ADMM convergence impact of bf16 Gram statistics (the mixed-precision
+    stats stream of the triangular kernel): fit the same problems from fp32
+    and bf16 stats, score the bf16-trained (U, A) on the exact fp32
+    statistics, and report that objective gap plus the iteration at which
+    each run closes 99.9% of its own optimality gap.  The stats carry ~4e-3
+    relative rounding, so the bf16 run solves a slightly perturbed problem.
+    Interpretation note: at these sizes the consensus ADMM's trajectory
+    sensitivity dominates the rounding itself — the cross-scored gap
+    bounces within the run-to-run band and bf16 sometimes lands on a
+    *better* plateau.  The usable signal is that iters-to-99.9% stays the
+    same order: bf16 stats halve the stats-pass HBM read traffic without
+    destabilizing the iteration."""
+    from repro.data.synthetic import multitask_regression
+
+    rows = []
+    for (m, L, name) in [(8, 64, "ring_L64"), (8, 128, "ring_L128")]:
+        H, T, *_ = multitask_regression(
+            jax.random.PRNGKey(0), m=m, n_train=4 * L, n_test=8, L=L, r=2,
+            noise=0.1,
+        )
+        g = ring(m)
+        cfg = DMTLELMConfig(r=2, iters=400, tau=2.0, zeta=1.0)
+        stats32 = sufficient_stats(H, T)
+        statsbf = sufficient_stats(H, T, precision="bf16")
+        (s32, d32), t32 = timed(lambda: fit_dense(stats32, g, cfg))
+        (sbf, dbf), tbf = timed(lambda: fit_dense(statsbf, g, cfg))
+        o32 = np.asarray(d32["objective"])
+        obf = np.asarray(dbf["objective"])
+        tgt32 = float(o32[-1]) + 1e-3 * float(o32[0] - o32[-1])
+        tgtbf = float(obf[-1]) + 1e-3 * float(obf[0] - obf[-1])
+        it32 = _iters_to(o32, tgt32)
+        itbf = _iters_to(obf, tgtbf)
+        # apples-to-apples solution quality: score the bf16-trained (U, A)
+        # under the EXACT fp32 statistics (each run's own trace is evaluated
+        # on its own — perturbed — stats and not comparable directly)
+        obj_bf_on_32 = float(objective_from_stats(
+            stats32, sbf.U, sbf.A, cfg.mu1, cfg.mu2))
+        rel_gap = abs(obj_bf_on_32 - float(o32[-1])) / abs(float(o32[-1]))
+        emit(f"precision/{name}/fp32", t32 * 1e6,
+             f"final_obj={o32[-1]:.5f};iters_to_999={it32}")
+        emit(f"precision/{name}/bf16", tbf * 1e6,
+             f"obj_on_fp32_stats={obj_bf_on_32:.5f};iters_to_999={itbf};"
+             f"rel_obj_gap_vs_fp32={rel_gap:.2e}")
+        rows.append([name, float(o32[-1]), obj_bf_on_32, rel_gap, it32,
+                     itbf])
+    write_csv("precision_convergence",
+              ["setup", "fp32_final_obj", "bf16_final_obj", "rel_obj_gap",
+               "fp32_iters_to_999", "bf16_iters_to_999"], rows)

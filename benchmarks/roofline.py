@@ -1,6 +1,9 @@
 """Roofline bench: aggregates the dry-run artifacts (deliverable g) into the
-EXPERIMENTS.md tables. Requires experiments/dryrun/*.json from
-``python -m repro.launch.dryrun --all``."""
+EXPERIMENTS.md tables, plus the analytic Gram-engine roofline (triangular vs
+dense vs two-matmul strategies from ``benchmarks.kernels.gram_cost_model``).
+The dry-run tables require experiments/dryrun/*.json from
+``python -m repro.launch.dryrun --all``; the Gram rows are model-only and
+always emitted."""
 
 from __future__ import annotations
 
@@ -11,6 +14,11 @@ from benchmarks.common import emit, write_csv
 
 DRYRUN_DIR = Path("experiments/dryrun")
 
+# v5p-ish per-chip envelope used ONLY to rank modeled times; absolute
+# numbers are not calibrated measurements.
+PEAK_FLOPS = 459e12
+PEAK_HBM_BPS = 2.8e12
+
 
 def load_results():
     out = []
@@ -19,7 +27,43 @@ def load_results():
     return out
 
 
+def run_gram():
+    """Roofline placement of the three Gram strategies: compute-time vs
+    memory-time per modeled config, and the dominant resource.  The
+    triangular kernel halves the compute leg at fixed HBM traffic, so
+    at backbone scale (compute-dominated L >= 2048) the modeled speedup
+    approaches the FLOPs ratio; bf16 halves the memory leg instead."""
+    from benchmarks.kernels import gram_model_sweep
+
+    rows = []
+    for row in gram_model_sweep():
+        for strat in ("two_matmul", "dense", "tri"):
+            s = row[strat]
+            flops = s["mxu_flops_G"] + s["mxu_flops_R"]
+            bytes_total = s["hbm_read_bytes"] + s["hbm_write_bytes"]
+            compute_s = flops / PEAK_FLOPS
+            memory_s = bytes_total / PEAK_HBM_BPS
+            rows.append([
+                row["L"], row["block_l"], row["precision"], strat, flops,
+                bytes_total, compute_s, memory_s,
+                "compute" if compute_s >= memory_s else "memory",
+            ])
+        if row["precision"] == "fp32":
+            dense_t = max(rows[-2][6], rows[-2][7])
+            tri_t = max(rows[-1][6], rows[-1][7])
+            emit(
+                f"roofline/gram/L{row['L']}_bl{row['block_l']}", 0.0,
+                f"model_speedup_tri_vs_dense={dense_t / tri_t:.2f};"
+                f"flops_ratio_G={row['flops_ratio_G_dense_over_tri']:.2f};"
+                f"dom={rows[-1][8]}",
+            )
+    write_csv("roofline_gram",
+              ["L", "block_l", "precision", "strategy", "flops", "bytes",
+               "compute_s", "memory_s", "dominant"], rows)
+
+
 def run():
+    run_gram()
     results = load_results()
     if not results:
         emit("roofline/missing", 0.0, "no dryrun artifacts; run dryrun --all")

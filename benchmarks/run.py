@@ -8,8 +8,12 @@ experiments/benchmarks/.
   table1 generalization vs Local-ELM / MTFL / GO-MTL / DGSP / DNSP
   fig5   error vs hidden width L (set BENCH_FIG5=1; slower sweep)
   fig6   communication-vs-accuracy trade-off
-  roofline  aggregated dry-run roofline table (deliverable g)
-  kernels   Pallas-kernel interpret-mode checks vs oracles
+  precision  ADMM convergence from fp32 vs bf16 Gram statistics
+  roofline  aggregated dry-run roofline table (deliverable g) + the
+            analytic Gram-engine roofline (tri vs dense vs two-matmul)
+  kernels   Pallas-kernel correctness probes, op timings (labeled
+            interpret off-TPU), the Gram FLOPs/HBM cost model, and the
+            machine-readable BENCH_kernels.json perf-trajectory artifact
 """
 
 import os
@@ -29,6 +33,7 @@ def main() -> None:
         ("fig4", consensus.run),
         ("table1", generalization.run),
         ("fig6", communication.run),
+        ("precision", convergence.run_precision),
         ("topology", topology.run),
         ("kernels", kernels.run),
         ("roofline", roofline.run),

@@ -21,6 +21,8 @@ Solver choice (cfg.u_solver — the ``engine.U_SOLVERS`` registry):
   * "sylvester" — exact O(L^3 + r^3) double-eigendecomposition; eigh(G_t) is
                   hoisted out of the ADMM scan (iteration cost O(L^2 r + r^3));
   * "cg"        — matrix-free conjugate gradients, matmul-only;
+  * "pcg"       — CG with the Gram-diagonal (Jacobi) preconditioner, the
+                  backbone-scale choice when diag(G) carries the conditioning;
   * FO mode (cfg.first_order=True) needs no solve at all (eq. 23).
 """
 
@@ -81,9 +83,11 @@ def dmtl_elm_fit(
 
     H: (m, N, L); T: (m, N, d). Returns final state + diagnostics dict with
     per-iteration 'objective' (primal, eq. 12), 'lagrangian' (eq. 13) and
-    'consensus' residuals.
+    'consensus' residuals.  The Gram reduction honors
+    ``cfg.stats_precision`` ("bf16" streams H/T tiles at half HBM traffic
+    with fp32 accumulators).
     """
-    stats = sufficient_stats(H, T)
+    stats = sufficient_stats(H, T, precision=cfg.stats_precision)
     return engine.fit_dense(stats, g, cfg)
 
 
@@ -141,15 +145,22 @@ def fit(
             raise ValueError(
                 "executor='sharded' needs mesh= and agent_axes="
             )
-        if set(g.edges) != engine.torus_edges(
-            [mesh.shape[a] for a in agent_axes]
-        ):
+        sizes = [mesh.shape[a] for a in agent_axes]
+        if any(s < 2 for s in sizes):
+            # torus_edges would emit a self-loop no Graph can match — tell
+            # the user the real constraint instead of "pass the matching g"
+            raise ValueError(
+                f"executor='sharded' realizes the ring/torus induced by the "
+                f"mesh agent axes, and every agent axis needs >= 2 shards; "
+                f"got sizes {dict(zip(agent_axes, sizes))}"
+            )
+        if set(g.edges) != engine.torus_edges(sizes):
             raise ValueError(
                 "executor='sharded' realizes the ring/torus induced by the "
                 "mesh agent axes; pass the matching g (use dense/colored "
                 "executors for arbitrary topologies)"
             )
-    stats = sufficient_stats(H, T)
+    stats = sufficient_stats(H, T, precision=cfg.stats_precision)
     if executor == "dense":
         return engine.fit_dense(stats, g, cfg)
     if executor == "colored":

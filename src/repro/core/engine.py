@@ -12,11 +12,20 @@ backend:
 
   ``sufficient_stats`` / ``accumulate_stats``
       The single stats producer — the fused Pallas ``gram`` kernel (TPU) or
-      its jnp oracle (``use_pallas=False``); streaming accumulation is
-      chunked addition of producer outputs, so chunked == one-shot exactly.
+      its jnp oracle (``use_pallas=False``).  On the Pallas path a stacked
+      (m, N, L) input is ONE agent-batched triangular-grid kernel launch
+      (``gram_batched``: grid (m, tri, n), mirroring G's symmetric tiles)
+      rather than m vmapped launches.  ``precision="bf16"`` streams H/T
+      tiles in bf16 with fp32 accumulators (half the stats-pass HBM read
+      traffic; ~4e-3 relative error on G/R — see
+      ``benchmarks/convergence.run_precision`` for the ADMM impact).
+      Streaming accumulation is chunked addition of producer outputs, so
+      chunked == one-shot exactly; ``compensated=True`` upgrades the
+      chunked fold to Kahan summation for long low-magnitude streams.
   ``agent_update``
       The one ADMM round body for ONE agent (paper eqs. 19/23 + 21): U-solve
-      through the solver registry (``kron`` | ``sylvester`` | ``cg``), the
+      through the solver registry (``kron`` | ``sylvester`` | ``cg`` |
+      ``pcg`` — Gram-diagonal-preconditioned CG for backbone-scale L), the
       first-order branch, and the local A-solve.  Pure function of
       ``(stats, state, neighbor_msgs, cfg)`` — no communication inside.
   ``dual_step``
@@ -94,29 +103,47 @@ class SufficientStats(NamedTuple):
     t2: jax.Array | float = 0.0  # (...,) sum T**2
 
 
-def _gram_one(H: jax.Array, T: jax.Array, use_pallas: bool):
+def _gram_one(H: jax.Array, T: jax.Array, use_pallas: bool,
+              precision: str = "fp32"):
     if use_pallas:
         from repro.kernels.gram.ops import gram as gram_op
 
-        return gram_op(H, T)
+        return gram_op(H, T, precision=precision)
     from repro.kernels.gram.ref import gram_ref
 
+    if precision == "bf16":
+        # jnp oracle path: emulate the bf16 tile stream by rounding the
+        # operands to bf16 storage before the fp32 contraction (the kernel's
+        # fp32 accumulator contributes nothing beyond this rounding).
+        H = H.astype(jnp.bfloat16)
+        T = T.astype(jnp.bfloat16)
     return gram_ref(H, T)
 
 
 def sufficient_stats(
-    H: jax.Array, T: jax.Array, use_pallas: bool = False
+    H: jax.Array, T: jax.Array, use_pallas: bool = False,
+    precision: str = "fp32",
 ) -> SufficientStats:
     """The single stats producer. H: (N, L) or (m, N, L); T matches.
 
     Routes through the fused Pallas ``gram`` kernel when requested (one HBM
-    pass for both products on TPU) and its jnp oracle otherwise.
+    pass for both products on TPU) and its jnp oracle otherwise.  A stacked
+    (m, N, L) input on the Pallas path is ONE agent-batched triangular
+    kernel launch (``gram_batched``) covering all m agents, not m vmapped
+    launches.  ``precision="bf16"`` streams the feature/target tiles in
+    bf16 with fp32 accumulation; ``t2`` (a scalar diagnostics reduction)
+    always stays fp32.
     """
     if H.ndim == 2:
-        G, R = _gram_one(H, T, use_pallas)
+        G, R = _gram_one(H, T, use_pallas, precision)
         n = jnp.asarray(H.shape[0], jnp.float32)
+    elif use_pallas:
+        from repro.kernels.gram.ops import gram_batched
+
+        G, R = gram_batched(H, T, precision=precision)
+        n = jnp.full(H.shape[:-2], H.shape[-2], jnp.float32)
     else:
-        G, R = jax.vmap(lambda h, t: _gram_one(h, t, use_pallas))(H, T)
+        G, R = jax.vmap(lambda h, t: _gram_one(h, t, False, precision))(H, T)
         n = jnp.full(H.shape[:-2], H.shape[-2], jnp.float32)
     t2 = jnp.sum(jnp.square(T.astype(jnp.float32)), axis=(-2, -1))
     return SufficientStats(G=G, R=R, n=n, t2=t2)
@@ -133,18 +160,27 @@ def init_stats(m: int, L: int, d: int, dtype=jnp.float32) -> SufficientStats:
 
 def accumulate_stats(
     stats: SufficientStats, H: jax.Array, T: jax.Array,
-    use_pallas: bool = False,
+    use_pallas: bool = False, precision: str = "fp32",
 ) -> SufficientStats:
     """Fold one feature batch into running stats (streaming accumulation)."""
-    b = sufficient_stats(H, T, use_pallas=use_pallas)
+    b = sufficient_stats(H, T, use_pallas=use_pallas, precision=precision)
     return SufficientStats(
         G=stats.G + b.G, R=stats.R + b.R, n=stats.n + b.n, t2=stats.t2 + b.t2
     )
 
 
+def _kahan_add(total: jax.Array, comp: jax.Array, delta: jax.Array):
+    """One compensated-summation step: returns (new_total, new_comp) with
+    the fp32 rounding error of ``total + delta`` carried in ``comp``."""
+    y = delta - comp
+    t = total + y
+    return t, (t - total) - y
+
+
 def accumulate_stats_chunked(
     stats: SufficientStats, H: jax.Array, T: jax.Array,
-    chunk: int, use_pallas: bool = False,
+    chunk: int, use_pallas: bool = False, precision: str = "fp32",
+    compensated: bool = False,
 ) -> SufficientStats:
     """Fold a long batch in ``chunk``-row pieces (bounded peak memory).
 
@@ -153,6 +189,13 @@ def accumulate_stats_chunked(
     sample count ``n`` uses the true (unpadded) batch size and — like every
     other leaf — comes out per-agent ``(m,)``, identical in shape and value
     to the one-shot :func:`accumulate_stats` path.
+
+    ``compensated=True`` switches the chunk fold to Kahan summation: the
+    fp32 accumulators carry a running compensation term, so the per-chunk
+    rounding error stays O(eps) instead of growing O(k eps) with the chunk
+    count — the natural companion of ``precision="bf16"`` streams, whose
+    per-chunk contributions are already rounded and would otherwise lose
+    their low bits against a large running total.
     """
     m, B = H.shape[0], H.shape[1]
     k = -(-B // chunk)
@@ -169,9 +212,28 @@ def accumulate_stats_chunked(
     n_0 = jnp.broadcast_to(jnp.asarray(stats.n, jnp.float32), (m,))
     t2_0 = jnp.broadcast_to(jnp.asarray(stats.t2, jnp.float32), (m,))
 
+    if compensated:
+        zeros = (jnp.zeros_like(stats.G), jnp.zeros_like(stats.R),
+                 jnp.zeros_like(t2_0))
+
+        def fold_kahan(carry, ht):
+            (G, cG), (R, cR), (t2, ct2) = carry
+            h, t = ht
+            b = sufficient_stats(h, t, use_pallas=use_pallas,
+                                 precision=precision)
+            return (_kahan_add(G, cG, b.G), _kahan_add(R, cR, b.R),
+                    _kahan_add(t2, ct2, b.t2)), None
+
+        ((G, _), (R, _), (t2, _)), _ = jax.lax.scan(
+            fold_kahan,
+            ((stats.G, zeros[0]), (stats.R, zeros[1]), (t2_0, zeros[2])),
+            (Hc, Tc),
+        )
+        return SufficientStats(G=G, R=R, n=n_0 + B, t2=t2)
+
     def fold(carry, ht):
         h, t = ht
-        b = sufficient_stats(h, t, use_pallas=use_pallas)
+        b = sufficient_stats(h, t, use_pallas=use_pallas, precision=precision)
         return (carry[0] + b.G, carry[1] + b.R, carry[2] + b.t2), None
 
     (G, R, t2), _ = jax.lax.scan(fold, (stats.G, stats.R, t2_0), (Hc, Tc))
@@ -235,7 +297,12 @@ class ConsensusConfig:
     zeta: float = 1.0
     iters: int = 100
     prox: str = "prox_linear"    # P_t = tau_t I - rho C_t^T C_t | "standard": tau_t I
-    u_solver: str = "sylvester"  # key into U_SOLVERS: "kron" | "sylvester" | "cg"
+    u_solver: str = "sylvester"  # U_SOLVERS key: "kron" | "sylvester" | "cg" | "pcg"
+    # Gram-pass precision for entry points that reduce raw (H, T) to stats:
+    # "bf16" streams feature/target tiles in bf16 with fp32 accumulators
+    # (half the stats HBM read traffic; see benchmarks/convergence.
+    # run_precision for the measured ADMM convergence impact).
+    stats_precision: str = "fp32"
     first_order: bool = False    # FO-DMTL-ELM (Algorithm 3)
     gamma_cap: float = 1.0       # gamma = min(cap, delta * dual/primal) as in §IV
     # Lower bound on the adaptive gamma (0 = the paper's rule untouched).
@@ -265,10 +332,19 @@ def _u_solve_cg(G, M, rhs, c, precomp=None):
     return sum_sylvester_cg(G, M, rhs, c)
 
 
+def _u_solve_pcg(G, M, rhs, c, precomp=None):
+    """Gram-diagonal (Jacobi) preconditioned CG: divides the eigen-spread
+    of diag(G) out of the operator, so iteration counts track the
+    *off-diagonal* conditioning only — the backbone-scale (L = d_model)
+    solve where even one O(L^3) eigh per agent is undesirable."""
+    return sum_sylvester_cg(G, M, rhs, c, precond="jacobi")
+
+
 U_SOLVERS: dict[str, Callable] = {
     "kron": _u_solve_kron,
     "sylvester": _u_solve_sylvester,
     "cg": _u_solve_cg,
+    "pcg": _u_solve_pcg,
 }
 
 

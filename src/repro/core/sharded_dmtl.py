@@ -66,5 +66,5 @@ def dmtl_elm_fit_sharded(
     Returns (U (m,L,r), A (m,r,d), diagnostics) with leading axis sharded the
     same way. ``m`` must equal the product of the agent-axis sizes.
     """
-    stats = engine.sufficient_stats(H, T)
+    stats = engine.sufficient_stats(H, T, precision=cfg.stats_precision)
     return engine.fit_sharded(stats, mesh, agent_axes, cfg)

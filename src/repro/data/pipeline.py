@@ -77,29 +77,69 @@ def stream_sufficient_stats(
     *,
     chunk: Optional[int] = None,
     use_pallas: bool = False,
+    precision: str = "fp32",
+    compensated: bool = False,
 ):
     """Fold a stream of per-agent feature batches into SufficientStats.
 
     feature_batches yields (H, T) with H: (m, B, L), T: (m, B, d) — e.g.
     frozen-backbone pooled features and task targets.  Each batch goes
-    through the engine's single Gram producer (Pallas kernel on TPU);
+    through the engine's single Gram producer (on TPU: the agent-batched
+    triangular Pallas kernel, ONE launch per batch for all m agents);
     ``chunk`` caps the rows folded per inner step so arbitrarily large
     stream batches accumulate at bounded peak memory.  Chunked accumulation
     equals one-shot accumulation exactly (zero-row padding is a no-op).
+
+    ``precision="bf16"`` streams the Gram pass in bf16 with fp32
+    accumulators; ``compensated=True`` switches the running G/R/t2 totals
+    to Kahan summation carried across the WHOLE stream — every batch's
+    contribution (itself reduced from zero, chunked if requested) is folded
+    through one compensated add, so long streams of small batches don't
+    lose low bits against the running totals (recommended together with
+    bf16).
     """
     from repro.core.engine import (
-        accumulate_stats, accumulate_stats_chunked, init_stats,
+        SufficientStats, _kahan_add, accumulate_stats,
+        accumulate_stats_chunked, init_stats,
     )
 
+    comp = None
     for H, T in feature_batches:
         if stats is None:
             stats = init_stats(H.shape[0], H.shape[-1], T.shape[-1],
                                jnp.float32)
+        if not compensated:
+            if chunk is not None and H.shape[1] > chunk:
+                stats = accumulate_stats_chunked(stats, H, T, chunk,
+                                                 use_pallas=use_pallas,
+                                                 precision=precision)
+            else:
+                stats = accumulate_stats(stats, H, T, use_pallas=use_pallas,
+                                         precision=precision)
+            continue
+        # Compensated: reduce THIS batch alone from zero (its internal sums
+        # are same-magnitude, so the plain/chunked fold is fine), then fold
+        # it into the running totals through Kahan adds whose compensation
+        # persists across batches.
+        zero = init_stats(H.shape[0], H.shape[-1], T.shape[-1], jnp.float32)
         if chunk is not None and H.shape[1] > chunk:
-            stats = accumulate_stats_chunked(stats, H, T, chunk,
-                                             use_pallas=use_pallas)
+            b = accumulate_stats_chunked(zero, H, T, chunk,
+                                         use_pallas=use_pallas,
+                                         precision=precision,
+                                         compensated=True)
         else:
-            stats = accumulate_stats(stats, H, T, use_pallas=use_pallas)
+            b = accumulate_stats(zero, H, T, use_pallas=use_pallas,
+                                 precision=precision)
+        t2_run = jnp.broadcast_to(
+            jnp.asarray(stats.t2, jnp.float32), b.t2.shape)
+        if comp is None:
+            comp = (jnp.zeros_like(stats.G), jnp.zeros_like(stats.R),
+                    jnp.zeros_like(t2_run))
+        G, cG = _kahan_add(stats.G, comp[0], b.G)
+        R, cR = _kahan_add(stats.R, comp[1], b.R)
+        t2, ct2 = _kahan_add(t2_run, comp[2], b.t2)
+        comp = (cG, cR, ct2)
+        stats = SufficientStats(G=G, R=R, n=stats.n + b.n, t2=t2)
     if stats is None:
         raise ValueError(
             "stream_sufficient_stats: empty feature stream and no initial "

@@ -7,15 +7,19 @@ Each kernel package provides:
 
 Kernels:
   gram  — fused G = H^T H, R = H^T T single-pass Gram accumulation
-          (the paper's ELM-solve hot-spot at backbone scale)
+          (the paper's ELM-solve hot-spot at backbone scale); the
+          production path is the symmetry-aware triangular-grid kernel,
+          agent-batched so ``gram_batched`` covers all m agents in ONE
+          launch, with a bf16-streaming / fp32-accumulate precision knob
   swa   — sliding-window flash attention (long_500k enabler)
   rglru — RG-LRU diagonal recurrence, blocked time scan
   mlstm — chunkwise-parallel mLSTM with VMEM-resident (D,D) state
 """
 
-from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ops import gram, gram_batched
 from repro.kernels.mlstm.ops import mlstm_chunkwise
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.swa.ops import swa_attention
 
-__all__ = ["gram", "mlstm_chunkwise", "rglru_scan", "swa_attention"]
+__all__ = ["gram", "gram_batched", "mlstm_chunkwise", "rglru_scan",
+           "swa_attention"]

@@ -1,1 +1,1 @@
-from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ops import gram, gram_batched

@@ -1,16 +1,42 @@
-"""Fused Gram accumulation kernel: G = H^T H and R = H^T T in ONE pass
+"""Fused Gram accumulation kernels: G = H^T H and R = H^T T in ONE pass
 over the sample dimension N.
 
 This is the FLOPs hot-spot of the paper's algorithm family (every ELM /
 MTL-ELM / DMTL-ELM solve starts from these statistics; at backbone scale
-L = d_model it dominates the head fit). Streaming H through VMEM once
-instead of twice halves HBM traffic versus two separate matmuls.
+L = d_model it dominates the head fit).  Streaming H through VMEM once
+instead of twice halves HBM traffic versus two separate matmuls — and G is
+*symmetric*, so visiting every (i, j) tile pair wastes close to half the MXU
+work on mirrored tiles.  Two kernels:
 
-Tiling: grid (i, j, n) over (L/BL, L/BL, N/BN); the last axis iterates
-sequentially on TPU, so the fp32 accumulators live in the output VMEM tiles
-across n-steps. MXU-aligned BL=128; BN chosen so the (BN, BL) H tiles and
-the (BL, BL) accumulator fit VMEM comfortably (3 * 128*512*4B ~ 0.8 MB).
-R is accumulated by the j==0 column of the grid only.
+``gram_pallas`` — the dense-tile baseline (kept for benchmarking and as the
+    simplest correct tiling).  Grid ``(i, j, n)`` over
+    ``(L/BL, L/BL, N/BN)``; the last axis iterates sequentially on TPU, so
+    the fp32 accumulators live in the output VMEM tiles across n-steps.
+    R is accumulated by the ``j == 0`` column of the grid only.
+
+``gram_pallas_tri`` — the symmetry-aware, agent-batched production kernel.
+    The (i, j) tile plane is flattened to a single triangular grid axis that
+    enumerates only the lower-triangular block pairs ``(i, j <= i)`` in
+    row-major order (``t = i(i+1)/2 + j``), cutting G's MXU tile-matmuls
+    from ``nl^2`` to ``nl(nl+1)/2`` — a ``2 nl / (nl + 1)``-fold FLOPs
+    reduction that approaches 2x as the block grid refines.  A leading
+    agent axis batches all ``m`` agents' statistics into ONE kernel launch
+    (grid ``(m, tri, n)``) instead of ``m`` vmapped launches, so the whole
+    multi-task stats pass is a single pipelined Pallas program.  The caller
+    (``ops._mirror_blocks``) writes the upper triangle by transposing the
+    strictly-lower block tiles — diagonal tiles come out of the kernel
+    complete and symmetric.
+
+Mixed precision: both kernels stream H / T tiles in their *input* dtype and
+hand them straight to ``lax.dot_general(..., preferred_element_type=f32)``,
+so bf16 inputs take the native bf16-multiply / fp32-accumulate MXU path
+(half the HBM read traffic) while the G / R accumulators stay fp32 in VMEM.
+``ops.gram(..., precision="bf16")`` does the downcast at the op boundary.
+
+Tiling: MXU-aligned BL=128 by default; BN chosen so the (BN, BL) H tiles
+and the (BL, BL) accumulator fit VMEM comfortably (3 * 128*512*4B ~ 0.8 MB).
+The triangular index decode runs in the scalar index maps (exact integer
+arithmetic seeded by a float sqrt, corrected by +-1 where-steps).
 """
 
 from __future__ import annotations
@@ -22,6 +48,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def tri_count(nl: int) -> int:
+    """Number of lower-triangular (i, j <= i) block pairs of an nl x nl grid."""
+    return nl * (nl + 1) // 2
+
+
+def _tri_decode(t):
+    """Row-major lower-triangular decode: t = i(i+1)/2 + j  ->  (i, j).
+
+    Exact for any t reachable here (tri grids are tiny): the float sqrt
+    seeds the row index and two where-corrections pin it to the integer
+    triangle-number bracket ``i(i+1)/2 <= t < (i+1)(i+2)/2``.
+    """
+    t = jnp.asarray(t, jnp.int32)
+    i = ((jnp.sqrt(8.0 * t.astype(jnp.float32) + 1.0) - 1.0) * 0.5).astype(
+        jnp.int32
+    )
+    i = jnp.where(i * (i + 1) // 2 > t, i - 1, i)
+    i = jnp.where((i + 1) * (i + 2) // 2 <= t, i + 1, i)
+    return i, t - i * (i + 1) // 2
+
+
 def _gram_kernel(h_i_ref, h_j_ref, t_ref, g_ref, r_ref, *, n_steps):
     n = pl.program_id(2)
     j = pl.program_id(1)
@@ -30,8 +77,8 @@ def _gram_kernel(h_i_ref, h_j_ref, t_ref, g_ref, r_ref, *, n_steps):
     def _init():
         g_ref[...] = jnp.zeros_like(g_ref)
 
-    hi = h_i_ref[...].astype(jnp.float32)   # (BN, BL) rows n, cols i
-    hj = h_j_ref[...].astype(jnp.float32)   # (BN, BL) rows n, cols j
+    hi = h_i_ref[...]   # (BN, BL) rows n, cols i — input dtype (f32 or bf16)
+    hj = h_j_ref[...]   # (BN, BL) rows n, cols j
     g_ref[...] += jax.lax.dot_general(
         hi, hj, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -43,7 +90,7 @@ def _gram_kernel(h_i_ref, h_j_ref, t_ref, g_ref, r_ref, *, n_steps):
         def _init_r():
             r_ref[...] = jnp.zeros_like(r_ref)
 
-        t = t_ref[...].astype(jnp.float32)  # (BN, D)
+        t = t_ref[...]  # (BN, D)
         r_ref[...] += jax.lax.dot_general(
             hi, t, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -52,13 +99,20 @@ def _gram_kernel(h_i_ref, h_j_ref, t_ref, g_ref, r_ref, *, n_steps):
 
 def gram_pallas(H: jax.Array, T: jax.Array, *, block_l: int = 128,
                 block_n: int = 512, interpret: bool = False):
-    """H: (N, L), T: (N, D); N % block_n == 0, L % block_l == 0 (pre-padded
-    by ops.gram). Returns (G (L,L) fp32, R (L,D) fp32)."""
+    """Dense-tile baseline. H: (N, L), T: (N, D); N % block_n == 0,
+    L % block_l == 0 (pre-padded by ops.gram). Returns (G (L,L) fp32,
+    R (L,D) fp32); inputs stream in their own dtype (fp32 or bf16)."""
     N, L = H.shape
     D = T.shape[1]
     nl = L // block_l
     nn = N // block_n
     grid = (nl, nl, nn)
+
+    # T is only read on the j == 0 (R-accumulating) grid column; pinning its
+    # block index on every other step stops the pipeline refetching a tile
+    # the kernel never touches — T traffic is nl*nn fetches, not nl^2*nn.
+    def t_spec(i, j, n):
+        return (jnp.where(j == 0, n, 0), 0)
 
     return pl.pallas_call(
         functools.partial(_gram_kernel, n_steps=nn),
@@ -66,7 +120,7 @@ def gram_pallas(H: jax.Array, T: jax.Array, *, block_l: int = 128,
         in_specs=[
             pl.BlockSpec((block_n, block_l), lambda i, j, n: (n, i)),
             pl.BlockSpec((block_n, block_l), lambda i, j, n: (n, j)),
-            pl.BlockSpec((block_n, D), lambda i, j, n: (n, 0)),
+            pl.BlockSpec((block_n, D), t_spec),
         ],
         out_specs=[
             pl.BlockSpec((block_l, block_l), lambda i, j, n: (i, j)),
@@ -75,6 +129,94 @@ def gram_pallas(H: jax.Array, T: jax.Array, *, block_l: int = 128,
         out_shape=[
             jax.ShapeDtypeStruct((L, L), jnp.float32),
             jax.ShapeDtypeStruct((L, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(H, H, T)
+
+
+def _gram_tri_kernel(h_i_ref, h_j_ref, t_ref, g_ref, r_ref, *, n_steps):
+    n = pl.program_id(2)
+    _, j = _tri_decode(pl.program_id(1))
+
+    @pl.when(n == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    hi = h_i_ref[0]     # (BN, BL) rows n, cols i — input dtype (f32 or bf16)
+    hj = h_j_ref[0]     # (BN, BL) rows n, cols j <= i
+    g_ref[0] += jax.lax.dot_general(
+        hi, hj, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # R rides the diagonal-start column of each row: the j == 0 pair is the
+    # FIRST tri index of row i, so the (a, i, 0) R tile initializes and
+    # accumulates before any other pair of that row revisits it.
+    @pl.when(j == 0)
+    def _cross():
+        @pl.when(n == 0)
+        def _init_r():
+            r_ref[...] = jnp.zeros_like(r_ref)
+
+        t = t_ref[0]    # (BN, D)
+        r_ref[0] += jax.lax.dot_general(
+            hi, t, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+def gram_pallas_tri(H: jax.Array, T: jax.Array, *, block_l: int = 128,
+                    block_n: int = 512, interpret: bool = False):
+    """Symmetry-aware agent-batched kernel: ONE launch for all m agents.
+
+    H: (m, N, L), T: (m, N, D); N % block_n == 0, L % block_l == 0
+    (pre-padded by ops).  Grid ``(m, tri, n)`` visits only the
+    ``nl(nl+1)/2`` lower-triangular (i, j <= i) block pairs per agent.
+
+    Returns (G (m, L, L) fp32, R (m, L, D) fp32) with ONLY the
+    lower-triangular block tiles of G written — callers must mirror
+    ``G[j, i] = G[i, j]^T`` (see ``ops._mirror_blocks``); the untouched
+    upper tiles hold unspecified memory.
+    """
+    m, N, L = H.shape
+    D = T.shape[-1]
+    nl = L // block_l
+    nn = N // block_n
+    grid = (m, tri_count(nl), nn)
+
+    def h_row_spec(a, t, n):
+        i, _ = _tri_decode(t)
+        return (a, n, i)
+
+    def h_col_spec(a, t, n):
+        _, j = _tri_decode(t)
+        return (a, n, j)
+
+    def g_spec(a, t, n):
+        i, j = _tri_decode(t)
+        return (a, i, j)
+
+    # see gram_pallas: T is only read on j == 0 steps, so pin the block
+    # index elsewhere and the pipeline fetches T nl*nn times, not tri*nn
+    def t_spec(a, t, n):
+        _, j = _tri_decode(t)
+        return (a, jnp.where(j == 0, n, 0), 0)
+
+    return pl.pallas_call(
+        functools.partial(_gram_tri_kernel, n_steps=nn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, block_l), h_row_spec),
+            pl.BlockSpec((1, block_n, block_l), h_col_spec),
+            pl.BlockSpec((1, block_n, D), t_spec),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_l, block_l), g_spec),
+            pl.BlockSpec((1, block_l, D), lambda a, t, n: (a, _tri_decode(t)[0], 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, L, L), jnp.float32),
+            jax.ShapeDtypeStruct((m, L, D), jnp.float32),
         ],
         interpret=interpret,
     )(H, H, T)

@@ -1,4 +1,26 @@
-"""Public fused-Gram op: padding, block-size policy, CPU interpret fallback."""
+"""Public fused-Gram ops: padding, block-size policy, precision casting,
+triangular mirroring, CPU interpret fallback.
+
+``gram``        — unbatched (N, L) entry point; a thin wrapper that runs the
+                  agent-batched triangular kernel with a singleton agent axis
+                  (``variant="dense"`` selects the dense-tile baseline kernel,
+                  kept for benchmarking and padding-policy parity tests).
+``gram_batched``— (m, N, L) entry point: sufficient statistics for ALL m
+                  agents in ONE triangular-grid kernel launch.
+
+Block policy (shared, asserted): ``block_n`` is clamped to the padded sample
+count and rounded up to a multiple of 8 (TPU fp32 sublane), so the padded N
+is always an exact multiple of an aligned block — tiny or ragged streams
+(N in {1, 7, 9, ...}) pad up instead of producing unaligned tiles.  Padding
+is exact: zero rows/cols contribute nothing to either product.
+
+Precision (``precision="fp32" | "bf16"``): bf16 casts H and T once at the op
+boundary and streams the halved-traffic tiles straight to the MXU with fp32
+accumulators (see kernel.py).  Expected error: bf16 has an 8-bit mantissa,
+so G/R entries carry a relative error of order 2^-8 ~ 4e-3 of the
+accumulated magnitude (the fp32 accumulator adds nothing on top); the
+documented test tolerance is 3e-2 relative.
+"""
 
 from __future__ import annotations
 
@@ -7,8 +29,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.kernel import gram_pallas, gram_pallas_tri
 from repro.kernels.gram.ref import gram_ref
+
+PRECISIONS = ("fp32", "bf16")
 
 
 def _on_tpu() -> bool:
@@ -19,24 +43,112 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
-@functools.partial(jax.jit, static_argnames=("block_l", "block_n", "force_ref"))
-def gram(H: jax.Array, T: jax.Array, *, block_l: int = 128,
-         block_n: int = 512, force_ref: bool = False):
-    """Fused (H^T H, H^T T). Pads N and L to block multiples (zero rows/cols
-    contribute nothing to either product, so padding is exact).
-
-    Block policy: block_n is clamped to the sample count but always kept a
-    multiple of 8 (TPU sublane) — N < 8, or any N not a multiple of 8, pads
-    up to the next aligned block instead of producing an unaligned tile."""
-    if force_ref:
-        return gram_ref(H, T)
-    N, L = H.shape
+def resolve_block_n(N: int, block_n: int) -> int:
+    """The block policy, asserted: clamp to the padded sample count, then
+    round up to the fp32 sublane multiple of 8.  The returned block always
+    divides the padded N exactly (padding pads *to* a block multiple)."""
     block_n = max(8, min(block_n, _round_up(N, 8)))
+    block_n = _round_up(block_n, 8)
+    pad_n = (-N) % block_n
+    if block_n % 8 != 0 or (N + pad_n) % block_n != 0:
+        raise AssertionError(
+            f"gram block policy violated: N={N}, block_n={block_n}, "
+            f"padded N={N + pad_n} — block must be sublane-aligned and "
+            f"divide the padded sample count"
+        )
+    return block_n
+
+
+def _cast(H: jax.Array, T: jax.Array, precision: str):
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        )
+    if precision == "bf16":
+        return H.astype(jnp.bfloat16), T.astype(jnp.bfloat16)
+    return H.astype(jnp.float32), T.astype(jnp.float32)
+
+
+def _mirror_blocks(G: jax.Array, block_l: int) -> jax.Array:
+    """Mirror a lower-triangular-block G to full symmetric form:
+    ``G[j, i] = G[i, j]^T`` at block-tile granularity.
+
+    Diagonal tiles come out of the triangular kernel complete (and
+    symmetric); strictly-upper tiles were never written and hold
+    unspecified memory, so they are masked out with ``where`` (NaN-safe)
+    before the transpose fills them.
+    """
+    Lp = G.shape[-1]
+    bi = jnp.arange(Lp) // block_l
+    strict = bi[:, None] > bi[None, :]
+    diag = bi[:, None] == bi[None, :]
+    low = jnp.where(strict, G, 0.0)
+    return low + jnp.swapaxes(low, -1, -2) + jnp.where(diag, G, 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_l", "block_n", "force_ref", "variant",
+                     "precision"),
+)
+def gram(H: jax.Array, T: jax.Array, *, block_l: int = 128,
+         block_n: int = 512, force_ref: bool = False,
+         variant: str = "tri", precision: str = "fp32"):
+    """Fused (H^T H, H^T T) for one agent. H: (N, L), T: (N, D).
+
+    ``variant="tri"`` (default) runs the symmetry-aware triangular kernel
+    through the batched launcher with a singleton agent axis;
+    ``variant="dense"`` runs the all-tiles baseline.  Both share the padding
+    and precision policy, so they are interchangeable bit-for-bit in fp32
+    up to tile-reduction order.
+    """
+    if force_ref:
+        H, T = _cast(H, T, precision)   # bf16 rounding applies to the
+        return gram_ref(H, T)           # oracle path too, not just tiles
+    if variant == "tri":
+        G, R = gram_batched(H[None], T[None], block_l=block_l,
+                            block_n=block_n, precision=precision)
+        return G[0], R[0]
+    if variant != "dense":
+        raise ValueError(f"unknown variant {variant!r}; 'tri' or 'dense'")
+    N, L = H.shape
+    block_n = resolve_block_n(N, block_n)
     pad_n = (-N) % block_n
     pad_l = (-L) % block_l
+    H, T = _cast(H, T, precision)
     Hp = jnp.pad(H, ((0, pad_n), (0, pad_l)))
     Tp = jnp.pad(T, ((0, pad_n), (0, 0)))
     G, R = gram_pallas(
         Hp, Tp, block_l=block_l, block_n=block_n, interpret=not _on_tpu()
     )
     return G[:L, :L], R[:L]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "block_n", "force_ref", "precision")
+)
+def gram_batched(H: jax.Array, T: jax.Array, *, block_l: int = 128,
+                 block_n: int = 512, force_ref: bool = False,
+                 precision: str = "fp32"):
+    """Per-agent (H^T H, H^T T) for ALL m agents in ONE kernel launch.
+
+    H: (m, N, L), T: (m, N, D).  Returns (G (m, L, L), R (m, L, D)), both
+    fp32.  The launch grid is ``(m, tri, n)`` — the agent axis is the
+    outermost grid dimension of a single pipelined Pallas program, not an
+    m-fold vmap of separate launches.
+    """
+    if force_ref:
+        H, T = _cast(H, T, precision)
+        return jax.vmap(gram_ref)(H, T)
+    m, N, L = H.shape
+    block_n = resolve_block_n(N, block_n)
+    pad_n = (-N) % block_n
+    pad_l = (-L) % block_l
+    H, T = _cast(H, T, precision)
+    Hp = jnp.pad(H, ((0, 0), (0, pad_n), (0, pad_l)))
+    Tp = jnp.pad(T, ((0, 0), (0, pad_n), (0, 0)))
+    G, R = gram_pallas_tri(
+        Hp, Tp, block_l=block_l, block_n=block_n, interpret=not _on_tpu()
+    )
+    G = _mirror_blocks(G, block_l)
+    return G[:, :L, :L], R[:, :L]

@@ -82,6 +82,28 @@ _PARITY_SCRIPT = textwrap.dedent(
         np.asarray(A2), np.asarray(dense2.A), rtol=1e-5, atol=1e-5,
         err_msg="ring(2) A mismatch: sharded degree/dual accounting broken",
     )
+    # Randomized-solver fuzz (short horizon: long trajectories diverge
+    # chaotically): ring sizes and u_solvers drawn per seed, sharded must
+    # track dense through the SAME body within float-lowering noise.
+    import numpy.random as npr
+    for seed in range(3):
+        rng = npr.default_rng(100 + seed)
+        m_f = int(rng.choice([4, 8]))
+        solver = str(rng.choice(["sylvester", "kron", "cg", "pcg"]))
+        iters = int(rng.integers(2, 4))
+        kf1, kf2 = jax.random.split(jax.random.PRNGKey(seed))
+        Hf = jax.random.normal(kf1, (m_f, N, L)) / jnp.sqrt(L)
+        Tf = jax.random.normal(kf2, (m_f, N, d))
+        stats_f = sufficient_stats(Hf, Tf)
+        cfg_f = ConsensusConfig(r=2, iters=iters, tau=2.0, zeta=1.0,
+                                u_solver=solver)
+        dense_f, _ = fit_dense(stats_f, ring(m_f), cfg_f)
+        mesh_f = jax.make_mesh((m_f,), ("agents",))
+        U_f, A_f, _ = fit_sharded(stats_f, mesh_f, ("agents",), cfg_f)
+        np.testing.assert_allclose(
+            np.asarray(U_f), np.asarray(dense_f.U), rtol=1e-4, atol=1e-4,
+            err_msg=f"fuzz seed={seed} m={m_f} solver={solver} iters={iters}",
+        )
     print("ENGINE_EXECUTORS_MATCH")
     """
 )
@@ -376,6 +398,179 @@ def test_colored_schedule_validation():
         fit_colored(stats, g, cfg, schedule=((0, 1, 2, 3, 7),))
     with pytest.raises(ValueError, match="staleness"):
         fit_colored(stats, g, cfg, staleness=-1)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_executor_parity_fuzz_randomized_graphs_and_solvers(seed):
+    """Randomized executor-parity fuzz (ROADMAP item): graph family
+    (erdos/ring/star), size, u_solver and horizon are all drawn per seed;
+    fit_dense and fit_colored (both the staleness=1 oracle and the
+    single-class jacobian_schedule oracle) must agree over the short
+    horizon.  Horizons stay <= 5 iterations — longer trajectories diverge
+    chaotically (rotation symmetry of U A), so parity is only meaningful
+    short-window."""
+    rng = np.random.default_rng(1000 + seed)
+    m = int(rng.integers(4, 10))
+    kind = str(rng.choice(["erdos", "ring", "star"]))
+    if kind == "erdos":
+        g = erdos(m, float(rng.uniform(0.2, 0.8)), seed=seed)
+    elif kind == "ring":
+        g = ring(m)
+    else:
+        g = star(m)
+    solver = str(rng.choice(["sylvester", "kron", "cg", "pcg"]))
+    first_order = bool(rng.integers(0, 2))
+    iters = int(rng.integers(2, 6))
+    stats = _problem(m=m, seed=seed)
+    cfg = ConsensusConfig(r=2, iters=iters, tau=2.0, zeta=1.0,
+                          u_solver=solver, first_order=first_order)
+    dense, _ = fit_dense(stats, g, cfg)
+    assert np.isfinite(np.asarray(dense.U)).all(), (kind, solver, first_order)
+    stale1, _ = fit_colored(stats, g, cfg, staleness=1)
+    onecls, _ = fit_colored(stats, g, cfg, schedule=jacobian_schedule(m))
+    msg = f"seed={seed} g={kind}(m={m}) solver={solver} fo={first_order}"
+    np.testing.assert_allclose(np.asarray(stale1.U), np.asarray(dense.U),
+                               rtol=1e-5, atol=1e-5, err_msg=msg)
+    np.testing.assert_allclose(np.asarray(stale1.A), np.asarray(dense.A),
+                               rtol=1e-5, atol=1e-5, err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(onecls.U), np.asarray(dense.U),
+                                  err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# Mixed-precision stats + compensated accumulation
+# --------------------------------------------------------------------------
+
+
+def test_sufficient_stats_bf16_close_and_fp32_default():
+    m, N, L, d = 3, 32, 12, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(21))
+    H = jax.random.normal(k1, (m, N, L))
+    T = jax.random.normal(k2, (m, N, d))
+    s32 = sufficient_stats(H, T)
+    sbf = sufficient_stats(H, T, precision="bf16")
+    scale = float(jnp.max(jnp.abs(s32.G)))
+    assert float(jnp.max(jnp.abs(sbf.G - s32.G))) <= 3e-2 * scale
+    assert sbf.G.dtype == jnp.float32          # accumulators stay fp32
+    # t2 (fp32 diagnostics reduction) is precision-independent
+    np.testing.assert_array_equal(np.asarray(sbf.t2), np.asarray(s32.t2))
+    # pallas and ref agree on the bf16 emulation within the bf16 band
+    sbf_pl = sufficient_stats(H, T, use_pallas=True, precision="bf16")
+    np.testing.assert_allclose(np.asarray(sbf_pl.G), np.asarray(sbf.G),
+                               rtol=3e-2, atol=3e-2 * scale)
+
+
+def test_pallas_batched_stats_single_launch_matches_ref():
+    """3D input on the Pallas path goes through the ONE agent-batched
+    triangular launch (gram_batched), which must equal the jnp oracle."""
+    m, N, L, d = 4, 24, 20, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(13))
+    H = jax.random.normal(k1, (m, N, L))
+    T = jax.random.normal(k2, (m, N, d))
+    s_ref = sufficient_stats(H, T, use_pallas=False)
+    s_pl = sufficient_stats(H, T, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(s_pl.G), np.asarray(s_ref.G),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_pl.R), np.asarray(s_ref.R),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(np.asarray(s_pl.n), np.asarray(s_ref.n))
+
+
+def test_chunked_kahan_beats_plain_on_disparate_magnitudes():
+    """Compensated chunked accumulation: folding many small chunks onto a
+    large running total loses low bits in plain fp32; the Kahan fold must
+    land strictly closer to the float64 ground truth (and equal shapes)."""
+    m, L, d = 1, 8, 1
+    chunks = 512
+    chunk = 4
+    rng = np.random.default_rng(0)
+    # first chunk huge, the rest tiny: classic catastrophic-absorption setup
+    H_np = rng.standard_normal((m, chunks * chunk, L)).astype(np.float32)
+    H_np[:, :chunk] *= 4096.0
+    H_np[:, chunk:] *= 0.25
+    T_np = rng.standard_normal((m, chunks * chunk, d)).astype(np.float32)
+    H, T = jnp.asarray(H_np), jnp.asarray(T_np)
+    plain = accumulate_stats_chunked(init_stats(m, L, d), H, T, chunk)
+    kahan = accumulate_stats_chunked(init_stats(m, L, d), H, T, chunk,
+                                     compensated=True)
+    assert jax.tree_util.tree_structure(plain) == (
+        jax.tree_util.tree_structure(kahan))
+    G64 = np.einsum("mnl,mnk->mlk", H_np.astype(np.float64),
+                    H_np.astype(np.float64))
+    err_plain = np.abs(np.asarray(plain.G, np.float64) - G64).max()
+    err_kahan = np.abs(np.asarray(kahan.G, np.float64) - G64).max()
+    assert err_kahan < err_plain, (err_kahan, err_plain)
+    np.testing.assert_array_equal(np.asarray(kahan.n), np.asarray(plain.n))
+
+
+def test_stream_sufficient_stats_precision_and_compensated_kwargs():
+    from repro.data.pipeline import stream_sufficient_stats
+
+    m, L, d = 2, 6, 2
+    ks = jax.random.split(jax.random.PRNGKey(17), 4)
+    parts = [(jax.random.normal(ks[0], (m, 9, L)),
+              jax.random.normal(ks[1], (m, 9, d))),
+             (jax.random.normal(ks[2], (m, 5, L)),
+              jax.random.normal(ks[3], (m, 5, d)))]
+    base = stream_sufficient_stats(iter(parts), chunk=4)
+    comp = stream_sufficient_stats(iter(parts), chunk=4, compensated=True)
+    np.testing.assert_allclose(np.asarray(comp.G), np.asarray(base.G),
+                               rtol=1e-6, atol=1e-6)
+    bf = stream_sufficient_stats(iter(parts), chunk=4, precision="bf16",
+                                 compensated=True)
+    scale = float(jnp.max(jnp.abs(base.G)))
+    assert float(jnp.max(jnp.abs(bf.G - base.G))) <= 3e-2 * max(scale, 1.0)
+    np.testing.assert_array_equal(np.asarray(bf.n), np.asarray(base.n))
+
+
+def test_stream_compensation_carries_across_batches():
+    """Regression: compensated=True must apply to EVERY batch (including
+    B <= chunk ones, which used to silently take the plain path) with the
+    compensation term carried across the outer stream loop — a long stream
+    of small batches after one huge batch must land closer to the float64
+    truth than the uncompensated stream."""
+    from repro.data.pipeline import stream_sufficient_stats
+
+    m, L, d = 1, 8, 1
+    rng = np.random.default_rng(1)
+    batches = []
+    big = rng.standard_normal((m, 8, L)).astype(np.float32) * 4096.0
+    batches.append((big, rng.standard_normal((m, 8, d)).astype(np.float32)))
+    for _ in range(256):
+        batches.append(
+            (rng.standard_normal((m, 4, L)).astype(np.float32) * 0.25,
+             rng.standard_normal((m, 4, d)).astype(np.float32)))
+    parts = [(jnp.asarray(h), jnp.asarray(t)) for h, t in batches]
+    # every batch here has B <= chunk: the compensated path must fire anyway
+    plain = stream_sufficient_stats(iter(parts), chunk=16)
+    comp = stream_sufficient_stats(iter(parts), chunk=16, compensated=True)
+    H_all = np.concatenate([h for h, _ in batches], axis=1).astype(np.float64)
+    G64 = np.einsum("mnl,mnk->mlk", H_all, H_all)
+    err_plain = np.abs(np.asarray(plain.G, np.float64) - G64).max()
+    err_comp = np.abs(np.asarray(comp.G, np.float64) - G64).max()
+    assert err_comp < err_plain, (err_comp, err_plain)
+    np.testing.assert_array_equal(np.asarray(comp.n), np.asarray(plain.n))
+
+
+def test_stats_precision_threads_through_config_entry_point():
+    """cfg.stats_precision="bf16" must change the Gram reduction the fit
+    entry point performs (and "fp32" must reproduce the default path)."""
+    import dataclasses
+
+    from repro.core.dmtl_elm import fit
+
+    m, N, L, d = 4, 16, 8, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    H = jax.random.normal(k1, (m, N, L)) / jnp.sqrt(L)
+    T = jax.random.normal(k2, (m, N, d))
+    g = ring(m)
+    cfg = ConsensusConfig(r=2, iters=3, tau=2.0, zeta=1.0)
+    s32, _ = fit(H, T, g, cfg)
+    s32b, _ = fit(H, T, g, dataclasses.replace(cfg, stats_precision="fp32"))
+    sbf, _ = fit(H, T, g, dataclasses.replace(cfg, stats_precision="bf16"))
+    np.testing.assert_array_equal(np.asarray(s32.U), np.asarray(s32b.U))
+    assert not np.allclose(np.asarray(sbf.U), np.asarray(s32.U))
+    assert np.isfinite(np.asarray(sbf.U)).all()
 
 
 def test_fit_entry_point_dispatches_executors():

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ops import gram, gram_batched, resolve_block_n
 from repro.kernels.gram.ref import gram_ref
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_scan_ref
@@ -19,28 +19,32 @@ TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
 
 # ----------------------------- gram ---------------------------------------
 
+@pytest.mark.parametrize("variant", ["tri", "dense"])
 @pytest.mark.parametrize("N,L,D", [(64, 32, 1), (100, 70, 3), (256, 128, 8),
                                    (33, 129, 2)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_gram_sweep(N, L, D, dtype):
+def test_gram_sweep(N, L, D, dtype, variant):
     k1, k2 = jax.random.split(jax.random.PRNGKey(N * L + D))
     H = jax.random.normal(k1, (N, L), dtype)
     T = jax.random.normal(k2, (N, D), dtype)
-    G, R = gram(H, T, block_l=32, block_n=32)
+    G, R = gram(H, T, block_l=32, block_n=32, variant=variant)
     Gr, Rr = gram_ref(H, T)
     np.testing.assert_allclose(np.asarray(G), np.asarray(Gr), **TOL[dtype])
     np.testing.assert_allclose(np.asarray(R), np.asarray(Rr), **TOL[dtype])
 
 
+@pytest.mark.parametrize("variant", ["tri", "dense"])
 @pytest.mark.parametrize("N,L,D", [(5, 3, 1), (3, 129, 2), (7, 200, 1),
-                                   (12, 70, 3), (1, 5, 1)])
-def test_gram_odd_shapes_default_blocks(N, L, D):
-    """Default block policy on N < 8 and non-multiple-of-128 L: the clamp
-    must keep block_n sublane-aligned (multiple of 8) and pad exactly."""
+                                   (12, 70, 3), (1, 5, 1), (8, 70, 2),
+                                   (9, 129, 1)])
+def test_gram_odd_shapes_default_blocks(N, L, D, variant):
+    """Default block policy on tiny/ragged N (1, 3, 5, 7, 8, 9, 12) and
+    non-multiple-of-128 L, for BOTH tile layouts: the clamp must keep
+    block_n sublane-aligned (multiple of 8) and pad exactly."""
     k1, k2 = jax.random.split(jax.random.PRNGKey(N * 1000 + L))
     H = jax.random.normal(k1, (N, L))
     T = jax.random.normal(k2, (N, D))
-    G, R = gram(H, T)   # default block_l=128, block_n=512
+    G, R = gram(H, T, variant=variant)   # default block_l=128, block_n=512
     Gr, Rr = gram_ref(H, T)
     np.testing.assert_allclose(np.asarray(G), np.asarray(Gr), rtol=2e-4,
                                atol=2e-4)
@@ -48,12 +52,91 @@ def test_gram_odd_shapes_default_blocks(N, L, D):
                                atol=2e-4)
 
 
+def test_gram_block_policy_invariant():
+    """resolve_block_n must always return a sublane-aligned block that
+    divides the padded sample count exactly — including unaligned
+    user-passed block sizes and tiny streams."""
+    for N in (1, 5, 7, 8, 9, 12, 100, 513, 4096):
+        for bn in (1, 7, 8, 12, 100, 512, 10_000):
+            blk = resolve_block_n(N, bn)
+            assert blk % 8 == 0
+            padded = -(-N // blk) * blk
+            assert padded % blk == 0
+            assert blk <= padded
+    # an unaligned block request still yields exact results
+    H = jax.random.normal(jax.random.PRNGKey(0), (37, 40))
+    T = jax.random.normal(jax.random.PRNGKey(1), (37, 2))
+    Gr, Rr = gram_ref(H, T)
+    for variant in ("tri", "dense"):
+        G, R = gram(H, T, block_l=32, block_n=12, variant=variant)
+        np.testing.assert_allclose(np.asarray(G), np.asarray(Gr), rtol=2e-4,
+                                   atol=2e-4)
+
+
 def test_gram_symmetry_and_psd():
+    """The mirrored triangular output is EXACTLY symmetric (the upper
+    triangle is the transpose of the written lower tiles by construction);
+    the dense baseline is symmetric to float tolerance only."""
     H = jax.random.normal(jax.random.PRNGKey(0), (80, 40))
     G, _ = gram(H, jnp.zeros((80, 1)), block_l=32, block_n=16)
-    np.testing.assert_allclose(np.asarray(G), np.asarray(G.T), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(G), np.asarray(G).T)
     eig = np.linalg.eigvalsh(np.asarray(G))
     assert eig.min() > -1e-3
+    Gd, _ = gram(H, jnp.zeros((80, 1)), block_l=32, block_n=16,
+                 variant="dense")
+    np.testing.assert_allclose(np.asarray(Gd), np.asarray(Gd).T, atol=1e-4)
+
+
+def test_gram_tri_fp32_tight_tolerance():
+    """Acceptance contract: the triangular agent-batched kernel matches
+    gram_ref to <= 1e-5 max-abs in fp32 (O(1)-scaled statistics) across a
+    padding edge case (L not a multiple of the block)."""
+    m, N, L, D = 3, 100, 70, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(42))
+    H = jax.random.normal(k1, (m, N, L)) / jnp.sqrt(N)
+    T = jax.random.normal(k2, (m, N, D))
+    G, R = gram_batched(H, T, block_l=32, block_n=32)
+    Gr, Rr = jax.vmap(gram_ref)(H, T)
+    assert float(jnp.max(jnp.abs(G - Gr))) <= 1e-5
+    assert float(jnp.max(jnp.abs(R - Rr))) <= 1e-5
+
+
+@pytest.mark.parametrize("N,L,D,m", [(40, 70, 2, 3), (16, 129, 1, 2),
+                                     (9, 32, 3, 4)])
+def test_gram_batched_one_launch_matches_vmapped_ref(N, L, D, m):
+    """The agent-batched launch (grid (m, tri, n)) must equal the m
+    independent reference Grams, padding edge cases included."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * N + L))
+    H = jax.random.normal(k1, (m, N, L))
+    T = jax.random.normal(k2, (m, N, D))
+    G, R = gram_batched(H, T, block_l=32, block_n=16)
+    Gr, Rr = jax.vmap(gram_ref)(H, T)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Gr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(R), np.asarray(Rr), rtol=2e-4,
+                               atol=2e-4)
+    # exact block-level symmetry survives the batch axis
+    np.testing.assert_array_equal(np.asarray(G),
+                                  np.asarray(jnp.swapaxes(G, -1, -2)))
+
+
+def test_gram_bf16_precision_documented_tolerance():
+    """precision="bf16" streams H/T tiles in bf16 with fp32 accumulators:
+    documented tolerance is 3e-2 RELATIVE on G and R (8-bit mantissa =>
+    ~4e-3 typical, 3e-2 worst-case band), and fp32 stays exact."""
+    m, N, L, D = 2, 64, 48, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    H = jax.random.normal(k1, (m, N, L))
+    T = jax.random.normal(k2, (m, N, D))
+    Gr, Rr = jax.vmap(gram_ref)(H, T)
+    Gb, Rb = gram_batched(H, T, block_l=16, block_n=32, precision="bf16")
+    scale_g = float(jnp.max(jnp.abs(Gr)))
+    scale_r = float(jnp.max(jnp.abs(Rr)))
+    assert float(jnp.max(jnp.abs(Gb - Gr))) <= 3e-2 * scale_g
+    assert float(jnp.max(jnp.abs(Rb - Rr))) <= 3e-2 * scale_r
+    # and the knob rejects unknown modes
+    with pytest.raises(ValueError, match="precision"):
+        gram_batched(H, T, precision="fp8")
 
 
 # ----------------------------- swa -----------------------------------------

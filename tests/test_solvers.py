@@ -1,0 +1,118 @@
+"""Solver-level tests: the Gram-diagonal (Jacobi) preconditioned CG path
+(ROADMAP: "CG/preconditioned U-solve at backbone scale") and its engine
+registry wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import U_SOLVERS
+from repro.core.solvers import (
+    cg_solve,
+    gram_diag_precond,
+    sum_sylvester_cg,
+    sylvester_ridge_solve,
+)
+
+
+def _backbone_scale_problem(L=256, r=4, N=1024, spread=1.0, seed=0):
+    """An L >= 256 U-solve whose conditioning lives on diag(G): feature
+    columns with a ``10**spread`` scale range (the typical un-normalized
+    backbone activation spectrum), near-orthogonal off the diagonal."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    scales = jnp.logspace(0, spread, L)
+    H = jax.random.normal(k1, (N, L)) / jnp.sqrt(N) * scales
+    G = H.T @ H
+    Ah = jax.random.normal(k2, (r, r)) / jnp.sqrt(r)
+    M = Ah @ Ah.T + 0.1 * jnp.eye(r)
+    R = jax.random.normal(k3, (L, r))
+    return G, M, R, 1e-2
+
+
+def test_jacobi_pcg_matches_sylvester_in_fewer_iters():
+    """At L = 256 the preconditioned solve must reach the exact (sylvester)
+    solution to tolerance in strictly fewer CG iterations than the plain
+    solve — the Jacobi preconditioner divides diag(G)'s eigen-spread out of
+    the operator, so its iteration count tracks off-diagonal conditioning
+    only."""
+    G, M, R, c = _backbone_scale_problem()
+    U_exact = sylvester_ridge_solve(G, M, R, c)
+    U_cg, it_cg = sum_sylvester_cg(G, M, R, c, tol=1e-10, maxiter=2000,
+                                   return_info=True)
+    U_pcg, it_pcg = sum_sylvester_cg(G, M, R, c, tol=1e-10, maxiter=2000,
+                                     precond="jacobi", return_info=True)
+    scale = float(jnp.max(jnp.abs(U_exact)))
+    assert float(jnp.max(jnp.abs(U_pcg - U_exact))) <= 1e-4 * scale
+    assert float(jnp.max(jnp.abs(U_cg - U_exact))) <= 1e-4 * scale
+    # strictly fewer — with margin, so the assertion tracks the mechanism
+    # (conditioning) rather than float noise
+    assert int(it_pcg) * 2 < int(it_cg), (it_pcg, it_cg)
+
+
+def test_gram_diag_precond_is_exact_operator_diagonal():
+    """M^-1 applied to the canonical basis must equal 1/diag of the dense
+    Kronecker operator sum_t M_t^T kron G_t + c I."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    m, L, r = 3, 6, 2
+    A = jax.random.normal(k1, (m, L, L))
+    Gs = jnp.einsum("tij,tkj->tik", A, A)
+    B = jax.random.normal(k2, (m, r, r))
+    Ms = jnp.einsum("tij,tkj->tik", B, B)
+    c = 0.7
+    pc = gram_diag_precond(Gs, Ms, c)
+    dense_diag = (
+        jnp.einsum("tll,tss->ls", Gs, Ms) + c
+    )
+    got = pc(jnp.ones((L, r)))
+    np.testing.assert_allclose(np.asarray(got), 1.0 / np.asarray(dense_diag),
+                               rtol=1e-6)
+
+
+def test_cg_solve_return_info_and_identity_precond_parity():
+    """precond=identity must reproduce plain CG's iterates exactly, and
+    return_info must report a positive, bounded iteration count."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    L = 32
+    A = jax.random.normal(k1, (L, L)) / jnp.sqrt(L)
+    G = A @ A.T + jnp.eye(L)
+    b = jax.random.normal(k2, (L,))
+    mv = lambda v: G @ v
+    x_plain, it_plain = cg_solve(mv, b, tol=1e-9, maxiter=500,
+                                 return_info=True)
+    x_id, it_id = cg_solve(mv, b, tol=1e-9, maxiter=500,
+                           precond=lambda v: v, return_info=True)
+    assert 0 < int(it_plain) < 500
+    assert int(it_plain) == int(it_id)
+    np.testing.assert_array_equal(np.asarray(x_plain), np.asarray(x_id))
+    # and plain (no info) still returns just x
+    x_bare = cg_solve(mv, b, tol=1e-9, maxiter=500)
+    np.testing.assert_array_equal(np.asarray(x_bare), np.asarray(x_plain))
+
+
+def test_pcg_registered_and_runs_in_admm():
+    """u_solver="pcg" is in the registry and drives a finite short ADMM run
+    that agrees with the exact sylvester solve at matching tolerance."""
+    from repro.core.engine import ConsensusConfig, fit_dense, sufficient_stats
+    from repro.core.graph import ring
+
+    assert "pcg" in U_SOLVERS
+    m, N, L, d = 4, 24, 12, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    H = jax.random.normal(k1, (m, N, L)) / jnp.sqrt(L)
+    T = jax.random.normal(k2, (m, N, d))
+    stats = sufficient_stats(H, T)
+    g = ring(m)
+    s_pcg, _ = fit_dense(stats, g, ConsensusConfig(r=2, iters=5,
+                                                   u_solver="pcg"))
+    s_syl, _ = fit_dense(stats, g, ConsensusConfig(r=2, iters=5,
+                                                   u_solver="sylvester"))
+    assert bool(jnp.isfinite(s_pcg.U).all())
+    np.testing.assert_allclose(np.asarray(s_pcg.U), np.asarray(s_syl.U),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unknown_precond_rejected():
+    G, M, R, c = _backbone_scale_problem(L=16, r=2, N=32)
+    with pytest.raises(ValueError, match="precond"):
+        sum_sylvester_cg(G, M, R, c, precond="ilu")
