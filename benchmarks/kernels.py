@@ -45,6 +45,10 @@ from repro.kernels.swa.ref import swa_ref
 from benchmarks.common import OUT_DIR, emit, timed, write_csv
 
 BENCH_JSON = OUT_DIR / "BENCH_kernels.json"
+# The same snapshot, committed at the repo root so the perf trajectory is
+# discoverable without digging into experiments/ (the CI bench-smoke job
+# regenerates and uploads both).
+ROOT_BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
 
 
 def _mode() -> str:
@@ -270,7 +274,9 @@ def run():
     emit("kernels/rglru", dt_op * 1e6, f"mode={mode};maxerr_vs_ref={err:.2e}")
 
     OUT_DIR.mkdir(parents=True, exist_ok=True)
-    BENCH_JSON.write_text(json.dumps(results, indent=1, sort_keys=False))
+    payload = json.dumps(results, indent=1, sort_keys=False)
+    BENCH_JSON.write_text(payload)
+    ROOT_BENCH_JSON.write_text(payload)
     min_ratio_256 = min(
         r["flops_ratio_G_dense_over_tri"] for r in results["gram_model"]
         if r["L"] >= 256 and r["nl"] >= 16

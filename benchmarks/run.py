@@ -9,11 +9,14 @@ experiments/benchmarks/.
   fig5   error vs hidden width L (set BENCH_FIG5=1; slower sweep)
   fig6   communication-vs-accuracy trade-off
   precision  ADMM convergence from fp32 vs bf16 Gram statistics
+  schedule  comm-rounds-vs-topology: compiled ppermute edge schedules
+            (rounds vs the Δ+1 bound, message volume per iteration)
   roofline  aggregated dry-run roofline table (deliverable g) + the
             analytic Gram-engine roofline (tri vs dense vs two-matmul)
   kernels   Pallas-kernel correctness probes, op timings (labeled
             interpret off-TPU), the Gram FLOPs/HBM cost model, and the
             machine-readable BENCH_kernels.json perf-trajectory artifact
+            (written under experiments/benchmarks/ AND at the repo root)
 """
 
 import os
@@ -35,6 +38,7 @@ def main() -> None:
         ("fig6", communication.run),
         ("precision", convergence.run_precision),
         ("topology", topology.run),
+        ("schedule", topology.run_schedule),
         ("kernels", kernels.run),
         ("roofline", roofline.run),
     ]

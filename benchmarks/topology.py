@@ -4,14 +4,23 @@ The paper fixes the Fig. 2(a) 5-agent graph (and star for the DNSP
 comparison). Here we sweep ring / star / complete / Erdos graphs at m=10 and
 measure iterations-to-consensus and final objective — the communication-
 topology trade-off a deployment on an ICI torus actually faces (ring embeds
-natively; complete costs |E| = m(m-1)/2 exchanges per round)."""
+natively; complete costs |E| = m(m-1)/2 exchanges per round).
+
+``run_schedule`` is the comm-rounds-vs-topology companion for the
+edge-schedule compiler (``engine.fit_sharded_graph``): per topology it
+reports the compiled ppermute round count against the Δ+1 bound and the
+per-iteration message volume of the mesh executor — the numbers that decide
+whether a star/expander overlay is worth its schedule depth on hardware."""
 
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import DMTLELMConfig, complete, dmtl_elm_fit, erdos, ring, star
+from repro.core import (
+    DMTLELMConfig, chain, compile_edge_schedule, complete, dmtl_elm_fit,
+    erdos, paper_fig2a, ring, star,
+)
 from repro.data.synthetic import paper_uniform
 
 from benchmarks.common import emit, timed, write_csv
@@ -44,3 +53,52 @@ def run():
     write_csv("topology_ablation",
               ["graph", "edges", "iters_to_consensus", "final_obj",
                "final_consensus", "floats_per_round"], rows)
+
+
+def run_schedule():
+    """Comm-rounds-vs-topology: what each graph costs the mesh executor.
+
+    For every topology the edge-schedule compiler guarantees at most Δ+1
+    ppermute rounds per gather (Misra-Gries proper edge coloring; each
+    round one partial permutation on the ICI links).  Per ADMM iteration
+    the Jacobian graph executor spends ``2 * rounds`` U-ppermutes (the
+    start-of-iteration gather doubles as the dual step's resid_old
+    exchange; Gauss-Seidel schedules add ``(phases - 1) * rounds``
+    regathers) and ``rounds`` dual-ppermutes — so the star pays its depth
+    (Δ = m-1 sequential rounds of width 1) while the ring amortizes
+    (2-3 rounds of width ~m/2): exactly the Liu et al. 2017 topology
+    trade-off, now measurable for the hardware schedule."""
+    L, r = 8, 2
+    graphs = {
+        "ring": ring(10),
+        "chain": chain(10),
+        "star": star(10),
+        "complete": complete(10),
+        "fig2a": paper_fig2a(),
+        "erdos_p0.4": erdos(10, 0.4, seed=1),
+    }
+    rows = []
+    for name, g in graphs.items():
+        (sched, dt) = timed(lambda: compile_edge_schedule(g))
+        delta = int(g.degrees().max())
+        rounds = sched.n_rounds
+        widths = [len(c) for c in sched.rounds]
+        # per-iteration ppermute count of the Jacobian sweep: gather
+        # (reused as the dual resid_old) + dual-resid exchange (U, both
+        # bidirectional) + dual shipping (lambda)
+        u_permutes = 2 * rounds
+        lam_permutes = rounds
+        # floats moved per iteration: each of the 2 bidirectional U
+        # exchanges carries L*r both ways per edge, + lambda shipped once
+        floats = int(g.n_edges * L * r * (2 * 2 + 1))
+        assert rounds <= delta + 1, (name, rounds, delta)
+        rows.append([name, g.n_edges, delta, rounds, delta + 1,
+                     max(widths), u_permutes + lam_permutes, floats])
+        emit(f"schedule/{name}", dt * 1e6,
+             f"edges={g.n_edges};delta={delta};rounds={rounds};"
+             f"bound={delta + 1};max_width={max(widths)};"
+             f"ppermutes_per_iter={u_permutes + lam_permutes}")
+    write_csv("mesh_schedule",
+              ["graph", "edges", "delta", "rounds", "bound_delta_plus_1",
+               "max_round_width", "ppermutes_per_iter",
+               "floats_per_iter"], rows)

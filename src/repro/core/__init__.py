@@ -2,8 +2,10 @@
 
 Organized stats-first: ``repro.core.engine`` holds the shared
 ``SufficientStats`` type, the ONE per-agent ADMM body (``agent_update``)
-and its two executors (``fit_dense``: vmap + dense incidence;
-``fit_sharded``: shard_map + ppermute ring/torus).  The modules below are
+and its four executors (``fit_dense``: vmap + dense incidence;
+``fit_sharded``: shard_map + ppermute ring/torus; ``fit_colored``:
+Gauss-Seidel colored sweeps; ``fit_sharded_graph``: any connected Graph
+compiled to a ≤ Δ+1-round ppermute edge schedule).  The modules below are
 thin, paper-named entry points over that engine.
 """
 
@@ -27,13 +29,25 @@ from repro.core.engine import (
     fit_colored,
     fit_dense,
     fit_sharded,
+    fit_sharded_graph,
+    graph_matches_torus,
     init_stats,
     jacobian_schedule,
     objective_from_stats,
     register_u_solver,
     sufficient_stats,
 )
-from repro.core.graph import Graph, chain, complete, erdos, paper_fig2a, ring, star
+from repro.core.graph import (
+    EdgeSchedule,
+    Graph,
+    chain,
+    compile_edge_schedule,
+    complete,
+    erdos,
+    paper_fig2a,
+    ring,
+    star,
+)
 from repro.core.mtl_elm import (
     MTLELMConfig,
     MTLELMState,
@@ -57,10 +71,12 @@ from repro.core.sharded_dmtl import dmtl_elm_fit_sharded, dmtl_fit_from_stats
 
 __all__ = [
     "ELMFeatureMap", "elm_fit", "elm_objective", "elm_predict", "make_feature_map",
-    "Graph", "chain", "complete", "erdos", "paper_fig2a", "ring", "star",
+    "EdgeSchedule", "Graph", "chain", "compile_edge_schedule", "complete",
+    "erdos", "paper_fig2a", "ring", "star",
     "AgentState", "ConsensusConfig", "NeighborMsgs", "SufficientStats",
     "U_SOLVERS", "accumulate_stats", "accumulate_stats_chunked", "agent_update",
-    "dual_step", "fit_colored", "fit_dense", "fit_sharded", "init_stats",
+    "dual_step", "fit_colored", "fit_dense", "fit_sharded", "fit_sharded_graph",
+    "graph_matches_torus", "init_stats",
     "jacobian_schedule", "objective_from_stats", "register_u_solver",
     "sufficient_stats",
     "MTLELMConfig", "MTLELMState", "mtl_elm_fit", "mtl_elm_fit_from_stats",

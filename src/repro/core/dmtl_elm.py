@@ -13,8 +13,10 @@ module holds no update math of its own: ``dmtl_elm_fit`` reduces the data to
 :class:`~repro.core.engine.SufficientStats` via the single Gram producer and
 dispatches into ``engine.fit_dense`` — the vmap + dense-incidence executor
 wrapped around the ONE shared ``engine.agent_update`` body.  The shard_map
-ring/torus executor (``repro.core.sharded_dmtl`` / ``engine.fit_sharded``)
-wraps the *same* body, so the two execution modes agree by construction.
+executors (``repro.core.sharded_dmtl`` / ``engine.fit_sharded`` for the
+mesh ring/torus, ``engine.fit_sharded_graph`` for any connected graph via
+the compiled ppermute edge schedule) wrap the *same* body, so all
+execution modes agree by construction.
 
 Solver choice (cfg.u_solver — the ``engine.U_SOLVERS`` registry):
   * "kron"      — the paper's eq. (19) Kronecker inverse (faithful; O(L^3 r^3));
@@ -103,7 +105,7 @@ def fit(
     schedule=None,
     staleness: int = 0,
 ):
-    """One entry point, three executors over the SAME ``agent_update`` body.
+    """One entry point, four executors over the SAME ``agent_update`` body.
 
     * ``executor="dense"``   — Jacobian sweep, vmap + edge-list gathering
       (``engine.fit_dense``); the paper's synchronous scheme.
@@ -112,16 +114,24 @@ def fit(
       ``g.chromatic_schedule()`` and ``staleness`` delays neighbor messages
       by k rounds (see the engine docstring for the trade-off).
     * ``executor="sharded"`` — one agent per shard of ``mesh[agent_axes]``
-      with ppermute ring consensus (``engine.fit_sharded``); the consensus
-      graph is the mesh ring/torus, so ``g`` must be the matching ring
-      (any other topology would be silently replaced — rejected instead).
+      (``engine.fit_sharded`` / ``engine.fit_sharded_graph``).  ANY
+      connected ``g`` is accepted: when ``g`` is the mesh ring/torus (up
+      to per-edge orientation — the consensus problem is orientation-
+      invariant) the fast nearest-neighbor ring path runs; any other
+      topology is compiled to a ≤ Δ+1-round ppermute edge schedule by
+      ``engine.fit_sharded_graph``.  ``schedule`` (e.g.
+      ``g.chromatic_schedule()``) runs phase-masked Gauss-Seidel sweeps
+      inside shard_map via the compiler path.
 
-    Executor-specific kwargs are validated: ``schedule``/``staleness`` only
-    apply to "colored" and ``mesh``/``agent_axes`` only to "sharded";
-    passing them elsewhere raises rather than silently ignoring them.
+    Executor-specific kwargs are validated: ``staleness`` only applies to
+    "colored", ``schedule`` to "colored"/"sharded", and
+    ``mesh``/``agent_axes`` only to "sharded"; passing them elsewhere
+    raises rather than silently ignoring them.
 
     dense/colored return ``(DMTLELMState, diagnostics)``; sharded returns
-    the engine's ``(U, A, diagnostics)`` sharded-output contract.
+    the engine's ``(U, A, diagnostics)`` sharded-output contract.  All
+    executors report the same diagnostics keys ('objective', 'lagrangian',
+    'consensus', 'gamma', 'gamma_min', 'primal_sq').
     """
     # All validation happens BEFORE the Gram reduction: a bad call must not
     # pay the O(m N L^2) stats pass just to raise.
@@ -130,9 +140,14 @@ def fit(
             f"unknown executor {executor!r}; expected 'dense', 'sharded' or "
             f"'colored'"
         )
-    if executor != "colored" and (schedule is not None or staleness != 0):
+    if executor == "dense" and schedule is not None:
         raise ValueError(
-            f"schedule=/staleness= only apply to executor='colored', "
+            "schedule= only applies to executor='colored' or 'sharded', "
+            "got executor='dense'"
+        )
+    if executor != "colored" and staleness != 0:
+        raise ValueError(
+            f"staleness= only applies to executor='colored', "
             f"got executor={executor!r}"
         )
     if executor != "sharded" and (mesh is not None or agent_axes is not None):
@@ -140,32 +155,38 @@ def fit(
             f"mesh=/agent_axes= only apply to executor='sharded', "
             f"got executor={executor!r}"
         )
+    use_graph_path = False
     if executor == "sharded":
         if mesh is None or agent_axes is None:
             raise ValueError(
                 "executor='sharded' needs mesh= and agent_axes="
             )
         sizes = [mesh.shape[a] for a in agent_axes]
-        if any(s < 2 for s in sizes):
-            # torus_edges would emit a self-loop no Graph can match — tell
-            # the user the real constraint instead of "pass the matching g"
+        n_agents = 1
+        for s in sizes:
+            n_agents *= s
+        if g.m != n_agents:
             raise ValueError(
-                f"executor='sharded' realizes the ring/torus induced by the "
-                f"mesh agent axes, and every agent axis needs >= 2 shards; "
-                f"got sizes {dict(zip(agent_axes, sizes))}"
+                f"graph has m={g.m} agents but prod(agent axes)={n_agents}"
             )
-        if set(g.edges) != engine.torus_edges(sizes):
-            raise ValueError(
-                "executor='sharded' realizes the ring/torus induced by the "
-                "mesh agent axes; pass the matching g (use dense/colored "
-                "executors for arbitrary topologies)"
-            )
+        # orientation-insensitive: a ring written with a flipped edge is the
+        # same consensus problem (the dual just changes sign) and takes the
+        # fast ppermute ring path; everything else goes to the compiler
+        use_graph_path = (
+            schedule is not None
+            or any(s < 2 for s in sizes)
+            or not engine.graph_matches_torus(g, sizes)
+        )
     stats = sufficient_stats(H, T, precision=cfg.stats_precision)
     if executor == "dense":
         return engine.fit_dense(stats, g, cfg)
     if executor == "colored":
         return engine.fit_colored(
             stats, g, cfg, schedule=schedule, staleness=staleness
+        )
+    if use_graph_path:
+        return engine.fit_sharded_graph(
+            stats, mesh, agent_axes, g, cfg, schedule=schedule
         )
     return engine.fit_sharded(stats, mesh, agent_axes, cfg)
 

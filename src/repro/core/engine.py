@@ -39,13 +39,30 @@ backend:
       Executor 2: one agent per mesh shard on a ring/torus; neighbor
       messages travel over ``jax.lax.ppermute``, the *same* body runs
       per shard inside ``shard_map``.  Jacobian sweep order (all shards
-      update simultaneously each round).
+      update simultaneously each round).  The fast path when the graph IS
+      the mesh torus (up to edge orientation — ``graph_matches_torus``).
   ``fit_colored``
       Executor 3: Gauss-Seidel colored sweeps — agents update one color
       class of ``Graph.chromatic_schedule()`` at a time, re-gathering
       neighbor messages between phases so later classes see the current
       iterate of earlier classes.  A ``staleness`` knob delays neighbor
       messages by k rounds to model asynchronous execution.
+  ``fit_sharded_graph``
+      Executor 4: ANY connected ``Graph`` on the mesh — the edge-schedule
+      compiler (``graph.compile_edge_schedule``) decomposes the edge list
+      into ≤ Δ+1 matchings (Misra-Gries proper edge coloring), each
+      matching ONE partial ``ppermute`` round on the flattened agent axes;
+      per-edge duals live on the edge's source shard (slot table).  An
+      optional vertex ``schedule`` runs ``fit_colored``-style phase-masked
+      Gauss-Seidel sweeps inside shard_map.
+
+The executor contract: all four return per-iteration diagnostics with the
+SAME keys — ``objective`` (primal, eq. 12), ``lagrangian`` (eq. 13),
+``consensus`` (RMS edge disagreement), ``gamma``/``gamma_min`` (mean/min
+adaptive dual step over edges — the ``cfg.gamma_floor`` observable) and
+``primal_sq`` — all computable from stats alone because every stats leaf
+(G, R, n, t2) is threaded through each executor, including the shard_map
+paths.
 
 Sweep-order / staleness trade-off: Gauss-Seidel (``fit_colored``,
 ``staleness=0``) propagates information within an iteration and typically
@@ -542,10 +559,20 @@ def _edge_setup(
     )
 
 
-def _iteration_diag(stats, cfg, U, A, lam_new, resid_new) -> dict:
-    """The per-iteration diagnostics every single-program executor reports:
-    primal objective (eq. 12), augmented Lagrangian (eq. 13), RMS edge
-    disagreement — all from stats alone."""
+def _iteration_diag(stats, cfg, U, A, lam_new, resid_new, gamma, primal) -> dict:
+    """The per-iteration diagnostics EVERY executor reports (the shared
+    contract, asserted by the cross-executor diagnostics-parity test):
+
+      objective   primal objective (eq. 12), from stats alone
+      lagrangian  augmented Lagrangian (eq. 13)
+      consensus   RMS edge disagreement sqrt(mean (C U)^2)
+      gamma       mean adaptive dual step size over edges (§IV rule) — the
+                  observable for tuning ``cfg.gamma_floor``
+      gamma_min   min over edges (the first gamma to collapse)
+      primal_sq   sum of squared edge residuals (consensus, unnormalized)
+
+    ``gamma``/``primal`` are the per-edge (E,) outputs of :func:`dual_step`.
+    """
     obj = objective_from_stats(stats, U, A, cfg.mu1, cfg.mu2)
     return {
         "objective": obj,
@@ -553,6 +580,9 @@ def _iteration_diag(stats, cfg, U, A, lam_new, resid_new) -> dict:
         + jnp.sum(lam_new * resid_new)
         + 0.5 * cfg.rho * jnp.sum(resid_new**2),
         "consensus": jnp.sqrt(jnp.mean(resid_new**2)),
+        "gamma": jnp.mean(gamma),
+        "gamma_min": jnp.min(gamma),
+        "primal_sq": jnp.sum(primal),
     }
 
 
@@ -582,8 +612,10 @@ def fit_dense(
         U_new, A_new = es.body(stats, AgentState(U, A, None), msgs, es.precomp)
         resid_old = es.edge_diff(U)
         resid_new = es.edge_diff(U_new)
-        lam_new, _, primal = dual_step(lam, resid_old, resid_new, cfg)
-        diag = _iteration_diag(stats, cfg, U_new, A_new, lam_new, resid_new)
+        lam_new, gamma, primal = dual_step(lam, resid_old, resid_new, cfg)
+        diag = _iteration_diag(
+            stats, cfg, U_new, A_new, lam_new, resid_new, gamma, primal
+        )
         return DenseState(U_new, A_new, lam_new), diag
 
     return jax.lax.scan(step, es.init, None, length=cfg.iters)
@@ -741,8 +773,10 @@ def fit_colored(
             A = A.at[idx].set(A_c)
         resid_old = es.edge_diff(U_start)
         resid_new = es.edge_diff(U)
-        lam_new, _, primal = dual_step(lam, resid_old, resid_new, cfg)
-        diag = _iteration_diag(stats, cfg, U, A, lam_new, resid_new)
+        lam_new, gamma, primal = dual_step(lam, resid_old, resid_new, cfg)
+        diag = _iteration_diag(
+            stats, cfg, U, A, lam_new, resid_new, gamma, primal
+        )
         if staleness > 0:
             hist = jnp.concatenate([hist[1:], U[None]], axis=0)
         return (U, A, lam_new, hist), diag
@@ -755,7 +789,7 @@ def fit_colored(
 
 
 # --------------------------------------------------------------------------
-# Executor 2: shard_map + ppermute ring/torus (one agent per mesh shard)
+# Executors 2 and 4: shard_map + ppermute (one agent per mesh shard)
 # --------------------------------------------------------------------------
 
 
@@ -788,6 +822,62 @@ def torus_edges(sizes: Sequence[int]) -> set:
             nb[ax_i] = (coord[ax_i] + 1) % n_ax
             edges.add((flat(coord), flat(nb)))
     return edges
+
+
+def graph_matches_torus(g: Graph, sizes: Sequence[int]) -> bool:
+    """True iff ``g`` is the mesh ring/torus UP TO PER-EDGE ORIENTATION.
+
+    The consensus problem is orientation-invariant (flipping an edge flips
+    the sign of its dual and nothing else), so entry points must not reject
+    e.g. ``Graph(m=4, edges=((1, 0), (1, 2), (2, 3), (3, 0)))`` — the same
+    undirected ring as ``torus_edges([4])`` with one edge written backwards.
+    Compares undirected edge SETS (a duplicated edge in either orientation
+    is not the simple torus and fails the match).
+    """
+    und = {frozenset(e) for e in g.edges}
+    if len(und) != len(g.edges):
+        return False
+    return und == {frozenset(e) for e in torus_edges(sizes)}
+
+
+def _local_objective(
+    stats_t: SufficientStats, U: jax.Array, A: jax.Array,
+    cfg: ConsensusConfig, m_total: int,
+) -> jax.Array:
+    """ONE agent's contribution to the primal objective (eq. 12) from its
+    shard-local stats alone — requires the ``n``/``t2`` leaves to be
+    threaded through the shard_map (they make ``||T_t||^2`` available
+    without revisiting data).  Summed over agents this equals
+    :func:`objective_from_stats` exactly."""
+    UtGU = U.T @ (stats_t.G @ U)
+    quad = jnp.sum((UtGU @ A) * A)                  # tr(A^T U^T G U A)
+    cross = jnp.sum((U.T @ stats_t.R) * A)          # tr(A^T U^T R)
+    t2 = jnp.asarray(stats_t.t2, jnp.float32)
+    return (
+        0.5 * (quad - 2.0 * cross + t2)
+        + 0.5 * (cfg.mu1 / m_total) * jnp.sum(U**2)
+        + 0.5 * cfg.mu2 * jnp.sum(A**2)
+    )
+
+
+def _assemble_sharded_diags(diags: dict, n_edges: int, lr_size: int) -> dict:
+    """Combine the per-shard per-iteration (iters, m) diagnostic columns the
+    shard_map returns into the shared executor diagnostics contract.  The
+    per-edge sums are NOT psummed in-shard (each shard reports only the
+    edges it owns), so the cross-shard sum here counts every edge once."""
+    obj = diags["obj"].sum(axis=1)
+    lag_pen = diags["lag_pen"].sum(axis=1)
+    primal = diags["primal_sq"].sum(axis=1)
+    gamma = diags["gamma_sum"].sum(axis=1) / n_edges
+    gamma_min = diags["gamma_min"].min(axis=1)
+    return {
+        "objective": obj,
+        "lagrangian": obj + lag_pen,
+        "consensus": jnp.sqrt(primal / (n_edges * lr_size)),
+        "gamma": gamma,
+        "gamma_min": gamma_min,
+        "primal_sq": primal,
+    }
 
 
 def _ring_recv_from_next(x, axis_name):
@@ -868,18 +958,36 @@ def ring_iteration(
     )
 
     # --- shared dual step on the owned edge (t, t+1) per axis ------------
+    # Per-edge diagnostics are accumulated over OWNED edges only (masked by
+    # own_edge), so a plain cross-shard sum outside counts each edge once.
     lam_new = []
     primal_sq = jnp.zeros((), dtype)
+    gamma_sum = jnp.zeros((), dtype)
+    gamma_min = jnp.asarray(jnp.inf, dtype)
+    lag_pen = jnp.zeros((), dtype)
     for ax_i, ax in enumerate(agent_axes):
         u_next_new = _ring_recv_from_next(U_new, ax)
         resid_new = U_new - u_next_new                  # \hat C_i U^{k+1}
         resid_old = U - u_next_old[ax_i]                # \hat C_i U^k
-        lam_ax, _, primal = dual_step(lam[ax_i], resid_old, resid_new, cfg)
-        lam_new.append(own_edge[ax_i] * lam_ax)
-        primal_sq = primal_sq + own_edge[ax_i] * primal
+        lam_ax, gamma, primal = dual_step(lam[ax_i], resid_old, resid_new, cfg)
+        own = own_edge[ax_i]
+        lam_new.append(own * lam_ax)
+        primal_sq = primal_sq + own * primal
+        gamma_sum = gamma_sum + own * gamma
+        gamma_min = jnp.minimum(
+            gamma_min, jnp.where(own > 0, gamma, jnp.inf)
+        )
+        lag_pen = lag_pen + own * (
+            jnp.sum(lam_ax * resid_new) + 0.5 * cfg.rho * jnp.sum(resid_new**2)
+        )
     lam_new = jnp.stack(lam_new)
 
-    diag = {"primal_sq": primal_sq}
+    diag = {
+        "primal_sq": primal_sq,
+        "gamma_sum": gamma_sum,
+        "gamma_min": gamma_min,
+        "lag_pen": lag_pen,
+    }
     return AgentState(U_new, A_new, lam_new), diag
 
 
@@ -893,10 +1001,15 @@ def fit_sharded(
 
     The consensus graph is the ring/torus induced by the agent axes; the
     same :func:`agent_update` body as :func:`fit_dense` runs per shard.
-    Stats stay sharded on the agent axes — only U_t (and the edge duals)
-    ever cross shard boundaries, the paper's privacy/communication model.
+    Stats stay sharded on the agent axes — ALL FOUR leaves (G, R, n, t2),
+    so the primal objective is computable on-device from stats alone — and
+    only U_t (and the edge duals) ever cross shard boundaries, the paper's
+    privacy/communication model.
 
-    Returns (U (m,L,r), A (m,r,d), diagnostics) sharded over agent axes.
+    Returns (U (m,L,r), A (m,r,d), diagnostics) with U/A sharded over agent
+    axes and diagnostics carrying the shared executor contract
+    ('objective', 'lagrangian', 'consensus', 'gamma', 'gamma_min',
+    'primal_sq' — see :func:`_iteration_diag`).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -907,11 +1020,17 @@ def fit_sharded(
         raise ValueError(f"m={m} must equal prod(agent axes)={n_agents}")
     L, d, r = stats.G.shape[-1], stats.R.shape[-1], cfg.r
     dtype = stats.G.dtype
+    # normalize scalar n/t2 (the (G, R)-only construction) to per-agent
+    # leaves so they shard alongside G/R instead of being silently dropped
+    n_all = jnp.broadcast_to(jnp.asarray(stats.n, jnp.float32), (m,))
+    t2_all = jnp.broadcast_to(jnp.asarray(stats.t2, jnp.float32), (m,))
 
     spec_batched = P(tuple(agent_axes))
 
-    def body(G_blk, R_blk):
-        stats_t = SufficientStats(G=G_blk[0], R=R_blk[0])
+    def body(G_blk, R_blk, n_blk, t2_blk):
+        stats_t = SufficientStats(
+            G=G_blk[0], R=R_blk[0], n=n_blk[0], t2=t2_blk[0]
+        )
         precomp = hoist_precomp(stats_t, cfg)   # eigh ONCE, outside the scan
         axes_t = tuple(agent_axes)
         # mark the carry as device-varying so the ppermuted outputs type-match
@@ -925,22 +1044,207 @@ def fit_sharded(
             new, diag = ring_iteration(
                 carry, stats_t, agent_axes, cfg, m, precomp
             )
-            # primal residual summed over all agents for a global diagnostic
-            diag = {
-                "primal_sq": jax.lax.psum(diag["primal_sq"], tuple(agent_axes))
-            }
+            diag["obj"] = _local_objective(stats_t, new.U, new.A, cfg, m)
             return new, diag
 
         final, diags = jax.lax.scan(
             step, AgentState(U0, A0, lam0), None, length=cfg.iters
         )
-        return final.U[None], final.A[None], diags["primal_sq"][:, None]
+        # (iters,) per-shard columns -> (iters, 1) so the out_spec can lay
+        # every shard's contribution side by side for the host-side combine
+        diags = jax.tree_util.tree_map(lambda x: x[:, None], diags)
+        return final.U[None], final.A[None], diags
 
     shard_fn = compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(spec_batched, spec_batched),
+        in_specs=(spec_batched,) * 4,
         out_specs=(spec_batched, spec_batched, P(None, tuple(agent_axes))),
     )
-    U, A, primal = shard_fn(stats.G, stats.R)
-    return U, A, {"primal_sq": primal.sum(axis=1)}
+    U, A, diags = shard_fn(stats.G, stats.R, n_all, t2_all)
+    return U, A, _assemble_sharded_diags(
+        diags, len(torus_edges(sizes)), L * cfg.r
+    )
+
+
+# --------------------------------------------------------------------------
+# Executor 4: shard_map over ANY connected Graph (compiled edge schedule)
+# --------------------------------------------------------------------------
+
+
+def fit_sharded_graph(
+    stats: SufficientStats,
+    mesh: jax.sharding.Mesh,
+    agent_axes: Sequence[str],
+    g: Graph,
+    cfg: ConsensusConfig,
+    *,
+    schedule: Sequence[Sequence[int]] | None = None,
+):
+    """Consensus ADMM over ANY connected ``Graph`` with one agent per mesh
+    shard — the edge-schedule compiler executor.
+
+    ``compile_edge_schedule`` decomposes ``g``'s edge list into ≤ Δ+1
+    matchings (Misra-Gries proper edge coloring); each matching is ONE
+    partial ``jax.lax.ppermute`` round on the flattened agent axes (both
+    directions of a matched pair ride the same permutation; idle shards
+    receive zeros).  Summing the rounds reproduces ``fit_dense``'s
+    edge-list ``neighbor_sum`` / ``ct_transpose`` / ``dual_step`` semantics
+    exactly: agent ``t`` (the row-major flattening of its agent-axis
+    coordinates) holds stats shard ``t``, and the dual of edge ``(s, e)``
+    lives on shard ``s`` (slot table from the compiler), mirroring the
+    dense executor's source-side dual layout.
+
+    ``schedule`` (a vertex-class partition, e.g. ``g.chromatic_schedule()``)
+    runs the color phases INSIDE shard_map — sharded Gauss-Seidel: every
+    phase re-exchanges the live ``U`` and applies the shared
+    :func:`agent_update` under the phase mask, so later classes see earlier
+    classes' fresh subspaces, exactly like :func:`fit_colored` with
+    ``staleness=0``.  ``schedule=None`` is the single-phase Jacobian sweep
+    (the :func:`fit_dense` parity oracle).  Communication per iteration is
+    ``rounds * (phases + 1)`` U-ppermutes (the phase-0 gather doubles as
+    the dual step's resid_old exchange) + ``rounds`` dual-ppermutes, with
+    ``rounds ≤ Δ+1``.
+
+    Returns ``(U (m,L,r), A (m,r,d), diagnostics)`` — the same output and
+    diagnostics contract as :func:`fit_sharded`.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.graph import compile_edge_schedule
+
+    m = stats.G.shape[0]
+    sizes = [mesh.shape[ax] for ax in agent_axes]
+    n_agents = functools.reduce(lambda a, b: a * b, sizes, 1)
+    if m != n_agents:
+        raise ValueError(f"m={m} must equal prod(agent axes)={n_agents}")
+    if g.m != m:
+        raise ValueError(f"graph has m={g.m} agents but stats carry m={m}")
+    if schedule is not None:
+        schedule = tuple(tuple(int(t) for t in cls) for cls in schedule)
+        _validate_schedule(schedule, m)
+    else:
+        schedule = jacobian_schedule(m)
+    n_phases = len(schedule)
+
+    sched = compile_edge_schedule(g)
+    n_rounds = sched.n_rounds
+    L, d, r = stats.G.shape[-1], stats.R.shape[-1], cfg.r
+    dtype = stats.G.dtype
+    axes_t = tuple(agent_axes)
+
+    n_all = jnp.broadcast_to(jnp.asarray(stats.n, jnp.float32), (m,))
+    t2_all = jnp.broadcast_to(jnp.asarray(stats.t2, jnp.float32), (m,))
+    deg_all = jnp.asarray(g.degrees(), dtype)                    # (m,)
+    # proximal weights resolved EXACTLY like the dense executor (scalar tau
+    # -> tau + d_t, per-agent (m,) arrays passed through) and shipped as
+    # sharded operands so each shard reads its own entry
+    tau_all, zeta_all = _resolve_tau_zeta(cfg, deg_all, m, dtype)
+    tau_all = jnp.broadcast_to(tau_all, (m,))
+    slot_all = jnp.asarray(sched.slot, jnp.int32)                # (m, rounds)
+    own_all = jnp.asarray(sched.own, dtype)                      # (m, rounds)
+    pmask_all = jnp.zeros((m, n_phases), dtype)                  # (m, phases)
+    for p, cls in enumerate(schedule):
+        pmask_all = pmask_all.at[jnp.asarray(cls, jnp.int32), p].set(1.0)
+
+    def body(G_blk, R_blk, n_blk, t2_blk, deg_blk, tau_blk, zeta_blk,
+             slot_blk, own_blk, pmask_blk):
+        stats_t = SufficientStats(
+            G=G_blk[0], R=R_blk[0], n=n_blk[0], t2=t2_blk[0]
+        )
+        precomp = hoist_precomp(stats_t, cfg)   # eigh ONCE, outside the scan
+        deg_t, tau_t, zeta_t = deg_blk[0], tau_blk[0], zeta_blk[0]
+        slots, own, pmask = slot_blk[0], own_blk[0], pmask_blk[0]
+
+        U0 = compat.pcast(jnp.ones((L, r), dtype), axes_t, to="varying")
+        A0 = compat.pcast(jnp.ones((r, d), dtype), axes_t, to="varying")
+        lam0 = compat.pcast(
+            jnp.zeros((sched.n_slots, L, r), dtype), axes_t, to="varying"
+        )
+
+        def exchange(x):
+            """One bidirectional ppermute per edge-color round: round r
+            delivers the round-r matched partner's x (zeros when idle)."""
+            return [
+                jax.lax.ppermute(x, axes_t, sched.bidir_perms[rr])
+                for rr in range(n_rounds)
+            ]
+
+        def step(carry, _):
+            U, A, lam = carry
+            U_start = U
+            # C_t^T lambda: + the duals this shard owns (unowned slots stay
+            # zero), - every incoming dual, shipped source->dest per round
+            ct_lam = jnp.sum(lam, axis=0)
+            for rr in range(n_rounds):
+                lam_send = own[rr] * lam[slots[rr]]
+                ct_lam = ct_lam - jax.lax.ppermute(
+                    lam_send, axes_t, sched.dir_perms[rr]
+                )
+            u_start_nb = exchange(U_start)      # also resid_old for duals
+            nb = u_start_nb
+            for p in range(n_phases):
+                if p > 0:
+                    nb = exchange(U)            # live U: Gauss-Seidel phases
+                neigh = functools.reduce(jnp.add, nb)
+                msgs = NeighborMsgs(neigh, ct_lam, deg_t, tau_t, zeta_t)
+                U_upd, A_upd = agent_update(
+                    stats_t, AgentState(U, A, lam), msgs, cfg,
+                    m_total=m, precomp=precomp,
+                )
+                mk = pmask[p]
+                U = jnp.where(mk > 0, U_upd, U)
+                A = jnp.where(mk > 0, A_upd, A)
+
+            # dual step on owned edges; diagnostics masked to owned edges so
+            # the host-side cross-shard sum counts each edge once
+            u_new_nb = exchange(U)
+            primal_sq = jnp.zeros((), dtype)
+            gamma_sum = jnp.zeros((), dtype)
+            gamma_min = jnp.asarray(jnp.inf, dtype)
+            lag_pen = jnp.zeros((), dtype)
+            for rr in range(n_rounds):
+                resid_new = U - u_new_nb[rr]            # C_i U^{k+1} on src
+                resid_old = U_start - u_start_nb[rr]    # C_i U^k on src
+                lam_rr = lam[slots[rr]]
+                lam_upd, gamma, primal = dual_step(
+                    lam_rr, resid_old, resid_new, cfg
+                )
+                o = own[rr]
+                lam = lam.at[slots[rr]].set(jnp.where(o > 0, lam_upd, lam_rr))
+                primal_sq = primal_sq + o * primal
+                gamma_sum = gamma_sum + o * gamma
+                gamma_min = jnp.minimum(
+                    gamma_min, jnp.where(o > 0, gamma, jnp.inf)
+                )
+                lag_pen = lag_pen + o * (
+                    jnp.sum(lam_upd * resid_new)
+                    + 0.5 * cfg.rho * jnp.sum(resid_new**2)
+                )
+            diag = {
+                "obj": _local_objective(stats_t, U, A, cfg, m),
+                "lag_pen": lag_pen,
+                "primal_sq": primal_sq,
+                "gamma_sum": gamma_sum,
+                "gamma_min": gamma_min,
+            }
+            return AgentState(U, A, lam), diag
+
+        final, diags = jax.lax.scan(
+            step, AgentState(U0, A0, lam0), None, length=cfg.iters
+        )
+        diags = jax.tree_util.tree_map(lambda x: x[:, None], diags)
+        return final.U[None], final.A[None], diags
+
+    spec_batched = P(axes_t)
+    shard_fn = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec_batched,) * 10,
+        out_specs=(spec_batched, spec_batched, P(None, axes_t)),
+    )
+    U, A, diags = shard_fn(
+        stats.G, stats.R, n_all, t2_all, deg_all, tau_all, zeta_all,
+        slot_all, own_all, pmask_all
+    )
+    return U, A, _assemble_sharded_diags(diags, g.n_edges, L * cfg.r)

@@ -11,19 +11,26 @@ mapped onto nearest-neighbor ICI links.
 Since the refactor to the stats-first engine, all update math lives in
 ``repro.core.engine``: ``engine.ring_iteration`` is the per-shard message
 plumbing around the ONE shared ``engine.agent_update`` body (the same body
-the dense vmap executor runs), and ``engine.fit_sharded`` is the
-shard_map-building driver.  This module keeps the thin, historically-named
-entry points: ``dmtl_fit_from_stats`` (streaming-statistics path used by
+the dense vmap executor runs), ``engine.fit_sharded`` is the torus
+shard_map-building driver, and ``engine.fit_sharded_graph`` compiles ANY
+connected ``Graph`` to a ≤ Δ+1-round ppermute edge schedule (pass ``g=`` to
+either entry point below to run a non-torus topology on the mesh).  This
+module keeps the thin, historically-named entry points:
+``dmtl_fit_from_stats`` (streaming-statistics path used by
 ``repro.core.heads``) and ``dmtl_elm_fit_sharded`` (raw-data path).
 
 Per ADMM iteration each agent communicates 3 x ppermute(U) +
-1 x ppermute(lambda) per agent axis — the paper's O(k L r) communication
-volume (EXPERIMENTS.md reproduces the Fig. 6 trade-off from these counts).
+1 x ppermute(lambda) per agent axis on the torus fast path — the paper's
+O(k L r) communication volume (EXPERIMENTS.md reproduces the Fig. 6
+trade-off from these counts); the compiled-graph path costs
+``rounds * (phases + 1)`` U-ppermutes + ``rounds`` dual-ppermutes with
+``rounds ≤ Δ+1`` (the phase-0 gather doubles as the dual resid_old
+exchange).
 """
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 
@@ -32,6 +39,18 @@ from repro.core import engine
 from repro.core.engine import AgentState as ShardedDMTLState  # noqa: F401
 from repro.core.engine import ConsensusConfig as DMTLELMConfig
 from repro.core.engine import SufficientStats, ring_iteration  # noqa: F401
+from repro.core.graph import Graph
+
+
+def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph]):
+    """Torus fast path when ``g`` is None or matches the mesh torus (up to
+    edge orientation); the compiled edge-schedule executor otherwise."""
+    if g is None:
+        return engine.fit_sharded(stats, mesh, agent_axes, cfg)
+    sizes = [mesh.shape[ax] for ax in agent_axes]
+    if all(s >= 2 for s in sizes) and engine.graph_matches_torus(g, sizes):
+        return engine.fit_sharded(stats, mesh, agent_axes, cfg)
+    return engine.fit_sharded_graph(stats, mesh, agent_axes, g, cfg)
 
 
 def dmtl_fit_from_stats(
@@ -40,6 +59,10 @@ def dmtl_fit_from_stats(
     mesh: jax.sharding.Mesh,
     agent_axes: Sequence[str],
     cfg: DMTLELMConfig,
+    *,
+    n: "jax.Array | None" = None,
+    t2: "jax.Array | None" = None,
+    g: Optional[Graph] = None,
 ):
     """ADMM over precomputed per-agent Gram stats.
 
@@ -49,9 +72,19 @@ def dmtl_fit_from_stats(
     the Pallas ``gram`` kernel on TPU) and solve by consensus ADMM — the
     dataset itself never moves between agents, exactly the paper's privacy /
     communication constraint.
+
+    ``n`` (per-agent sample counts) and ``t2`` (per-agent sum of squared
+    targets) are threaded through the shard_map when given, so the
+    'objective'/'lagrangian' diagnostics are exact; without them the fit is
+    unchanged but those diagnostics are offset by the (constant) ||T||^2
+    term.  ``g`` selects a non-torus consensus topology (compiled to a
+    ppermute edge schedule); None keeps the mesh ring/torus.
     """
-    stats = SufficientStats(G=G_all, R=HtT_all)
-    return engine.fit_sharded(stats, mesh, agent_axes, cfg)
+    stats = SufficientStats(
+        G=G_all, R=HtT_all,
+        n=0.0 if n is None else n, t2=0.0 if t2 is None else t2,
+    )
+    return _dispatch_sharded(stats, mesh, agent_axes, cfg, g)
 
 
 def dmtl_elm_fit_sharded(
@@ -60,11 +93,15 @@ def dmtl_elm_fit_sharded(
     mesh: jax.sharding.Mesh,
     agent_axes: Sequence[str],
     cfg: DMTLELMConfig,
+    *,
+    g: Optional[Graph] = None,
 ):
     """Driver: H (m, N, L), T (m, N, d) sharded over agent axes; scan ADMM.
 
     Returns (U (m,L,r), A (m,r,d), diagnostics) with leading axis sharded the
-    same way. ``m`` must equal the product of the agent-axis sizes.
+    same way. ``m`` must equal the product of the agent-axis sizes.  ``g``
+    selects a non-torus consensus topology (compiled to a ppermute edge
+    schedule by ``engine.fit_sharded_graph``); None keeps the ring/torus.
     """
     stats = engine.sufficient_stats(H, T, precision=cfg.stats_precision)
-    return engine.fit_sharded(stats, mesh, agent_axes, cfg)
+    return _dispatch_sharded(stats, mesh, agent_axes, cfg, g)

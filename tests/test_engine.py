@@ -32,9 +32,13 @@ _PARITY_SCRIPT = textwrap.dedent(
     import jax, numpy as np
     import jax.numpy as jnp
     from repro.core.engine import (
-        ConsensusConfig, fit_dense, fit_sharded, sufficient_stats,
+        ConsensusConfig, fit_colored, fit_dense, fit_sharded,
+        fit_sharded_graph, sufficient_stats,
     )
-    from repro.core.graph import ring
+    from repro.core.graph import Graph, chain, erdos, paper_fig2a, ring, star
+
+    DIAG_KEYS = {"objective", "lagrangian", "consensus", "gamma",
+                 "gamma_min", "primal_sq"}
 
     m, N, L, d = 8, 24, 12, 3
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
@@ -104,14 +108,172 @@ _PARITY_SCRIPT = textwrap.dedent(
             np.asarray(U_f), np.asarray(dense_f.U), rtol=1e-4, atol=1e-4,
             err_msg=f"fuzz seed={seed} m={m_f} solver={solver} iters={iters}",
         )
+
+    # ---- executor 4: compiled edge schedule on ARBITRARY graphs ----------
+    # fit_sharded_graph must track fit_dense through the SAME body on every
+    # non-torus topology (the acceptance bar: >= 3 of them), and report the
+    # shared diagnostics contract to tolerance, key for key.
+    def mesh_of(m_g):
+        return jax.sharding.Mesh(np.array(jax.devices()[:m_g]), ("agents",))
+
+    graph_zoo = [
+        ("chain", chain(8), 8),
+        ("star", star(8), 8),
+        ("fig2a", paper_fig2a(), 5),
+        ("erdos", erdos(8, 0.4, seed=3), 8),
+    ]
+    cfg_g = ConsensusConfig(r=2, iters=3, tau=2.0, zeta=1.0, delta=10.0)
+    for name, g, m_g in graph_zoo:
+        kg1, kg2 = jax.random.split(jax.random.PRNGKey(42))
+        Hg = jax.random.normal(kg1, (m_g, N, L)) / jnp.sqrt(L)
+        Tg = jax.random.normal(kg2, (m_g, N, d))
+        stats_g = sufficient_stats(Hg, Tg)
+        dense_g, diag_d = fit_dense(stats_g, g, cfg_g)
+        U_g, A_g, diag_g = fit_sharded_graph(
+            stats_g, mesh_of(m_g), ("agents",), g, cfg_g)
+        np.testing.assert_allclose(
+            np.asarray(U_g), np.asarray(dense_g.U), rtol=1e-5, atol=1e-5,
+            err_msg=f"sharded-graph U mismatch on {name}")
+        np.testing.assert_allclose(
+            np.asarray(A_g), np.asarray(dense_g.A), rtol=1e-5, atol=1e-5,
+            err_msg=f"sharded-graph A mismatch on {name}")
+        assert set(diag_g) == set(diag_d) == DIAG_KEYS, (name, diag_g.keys())
+        for key in sorted(DIAG_KEYS):
+            np.testing.assert_allclose(
+                np.asarray(diag_g[key]), np.asarray(diag_d[key]),
+                rtol=1e-4, atol=1e-5,
+                err_msg=f"diagnostics parity {name}/{key}")
+
+    # the degenerate 2-agent mesh through the compiler path (single edge,
+    # one ppermute round, agent 1 owns no dual slot)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    H2 = jax.random.normal(k1, (2, N, L)) / jnp.sqrt(L)
+    T2 = jax.random.normal(k2, (2, N, d))
+    stats2g = sufficient_stats(H2, T2)
+    cfg2g = ConsensusConfig(r=2, iters=5, tau=2.0, zeta=1.0, delta=10.0)
+    dense2g, _ = fit_dense(stats2g, chain(2), cfg2g)
+    U2g, A2g, _ = fit_sharded_graph(
+        stats2g, mesh_of(2), ("agents",), chain(2), cfg2g)
+    np.testing.assert_allclose(
+        np.asarray(U2g), np.asarray(dense2g.U), rtol=1e-5, atol=1e-5,
+        err_msg="2-agent mesh through the edge-schedule compiler")
+
+    # phase-masked rounds: the chromatic schedule inside shard_map is the
+    # sharded Gauss-Seidel, and must track fit_colored (staleness=0)
+    g5 = paper_fig2a()
+    kg1, kg2 = jax.random.split(jax.random.PRNGKey(7))
+    H5 = jax.random.normal(kg1, (5, N, L)) / jnp.sqrt(L)
+    T5 = jax.random.normal(kg2, (5, N, d))
+    stats5 = sufficient_stats(H5, T5)
+    colored5, cdiag5 = fit_colored(stats5, g5, cfg_g)
+    U5, A5, gdiag5 = fit_sharded_graph(
+        stats5, mesh_of(5), ("agents",), g5, cfg_g,
+        schedule=g5.chromatic_schedule())
+    np.testing.assert_allclose(
+        np.asarray(U5), np.asarray(colored5.U), rtol=1e-5, atol=1e-5,
+        err_msg="sharded Gauss-Seidel vs fit_colored")
+    np.testing.assert_allclose(
+        np.asarray(gdiag5["objective"]), np.asarray(cdiag5["objective"]),
+        rtol=1e-4, atol=1e-5)
+
+    # multi-axis agent grid: flat row-major agent index over ("pod", "data")
+    kg1, kg2 = jax.random.split(jax.random.PRNGKey(11))
+    H8 = jax.random.normal(kg1, (8, N, L)) / jnp.sqrt(L)
+    T8 = jax.random.normal(kg2, (8, N, d))
+    stats8 = sufficient_stats(H8, T8)
+    g8 = star(8)
+    dense8, _ = fit_dense(stats8, g8, cfg_g)
+    mesh24 = jax.make_mesh((2, 4), ("pod", "data"))
+    U8, A8, _ = fit_sharded_graph(
+        stats8, mesh24, ("pod", "data"), g8, cfg_g)
+    np.testing.assert_allclose(
+        np.asarray(U8), np.asarray(dense8.U), rtol=1e-5, atol=1e-5,
+        err_msg="multi-axis mesh star graph")
+
+    # per-agent (m,) tau arrays resolve exactly like the dense executor
+    # (regression: the compiler path used to hand every shard the FULL
+    # (m,) array, a shape error or silent per-column rescale)
+    m_t = 4
+    kt1, kt2 = jax.random.split(jax.random.PRNGKey(31))
+    Ht = jax.random.normal(kt1, (m_t, N, L)) / jnp.sqrt(L)
+    Tt = jax.random.normal(kt2, (m_t, N, d))
+    stats_t = sufficient_stats(Ht, Tt)
+    tau_arr = jnp.asarray([2.0, 3.0, 2.5, 4.0])
+    cfg_t = ConsensusConfig(r=2, iters=3, tau=tau_arr, zeta=1.0)
+    dense_t, _ = fit_dense(stats_t, star(m_t), cfg_t)
+    U_t, A_t, _ = fit_sharded_graph(
+        stats_t, mesh_of(m_t), ("agents",), star(m_t), cfg_t)
+    np.testing.assert_allclose(
+        np.asarray(U_t), np.asarray(dense_t.U), rtol=1e-5, atol=1e-5,
+        err_msg="per-agent tau array through the compiler path")
+
+    # fuzzed arbitrary graphs for the compiler path: family, size and
+    # solver drawn per seed
+    for seed in range(3):
+        rng = npr.default_rng(500 + seed)
+        m_f = int(rng.choice([4, 6, 8]))
+        kind = str(rng.choice(["chain", "star", "erdos"]))
+        g_f = (chain(m_f) if kind == "chain"
+               else star(m_f) if kind == "star"
+               else erdos(m_f, float(rng.uniform(0.2, 0.8)), seed=seed))
+        solver = str(rng.choice(["sylvester", "kron", "cg", "pcg"]))
+        iters = int(rng.integers(2, 4))
+        kf1, kf2 = jax.random.split(jax.random.PRNGKey(200 + seed))
+        Hf = jax.random.normal(kf1, (m_f, N, L)) / jnp.sqrt(L)
+        Tf = jax.random.normal(kf2, (m_f, N, d))
+        stats_f = sufficient_stats(Hf, Tf)
+        cfg_f = ConsensusConfig(r=2, iters=iters, tau=2.0, zeta=1.0,
+                                u_solver=solver)
+        dense_f, _ = fit_dense(stats_f, g_f, cfg_f)
+        U_f, A_f, _ = fit_sharded_graph(
+            stats_f, mesh_of(m_f), ("agents",), g_f, cfg_f)
+        np.testing.assert_allclose(
+            np.asarray(U_f), np.asarray(dense_f.U), rtol=1e-4, atol=1e-4,
+            err_msg=f"graph fuzz seed={seed} {kind}(m={m_f}) "
+                    f"solver={solver} iters={iters}")
+
+    # the ring executor now reports the SAME diagnostics contract
+    cfgr = ConsensusConfig(r=2, iters=3, tau=2.0, zeta=1.0, delta=10.0)
+    dense_r, diag_dr = fit_dense(stats, ring(m), cfgr)
+    _, _, diag_sr = fit_sharded(stats, mesh, ("agents",), cfgr)
+    assert set(diag_sr) == DIAG_KEYS, diag_sr.keys()
+    for key in sorted(DIAG_KEYS):
+        np.testing.assert_allclose(
+            np.asarray(diag_sr[key]), np.asarray(diag_dr[key]),
+            rtol=1e-4, atol=1e-5, err_msg=f"ring diagnostics parity {key}")
+
+    # entry-point routing: a flipped-orientation ring must take the torus
+    # fast path (not be rejected), and a star must route to the compiler
+    from repro.core.dmtl_elm import fit
+    flipped = Graph(m=4, edges=((1, 0), (1, 2), (2, 3), (3, 0)))
+    kf1, kf2 = jax.random.split(jax.random.PRNGKey(3))
+    H4 = jax.random.normal(kf1, (4, N, L)) / jnp.sqrt(L)
+    T4 = jax.random.normal(kf2, (4, N, d))
+    cfg4 = ConsensusConfig(r=2, iters=3, tau=2.0, zeta=1.0)
+    mesh4 = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("agents",))
+    dense4, _ = fit_dense(sufficient_stats(H4, T4), ring(4), cfg4)
+    U4, A4, _ = fit(H4, T4, flipped, cfg4, executor="sharded",
+                    mesh=mesh4, agent_axes=("agents",))
+    np.testing.assert_allclose(
+        np.asarray(U4), np.asarray(dense4.U), rtol=1e-5, atol=1e-5,
+        err_msg="flipped-orientation ring wrongly diverged from fast path")
+    U4s, _, _ = fit(H4, T4, star(4), cfg4, executor="sharded",
+                    mesh=mesh4, agent_axes=("agents",))
+    dense4s, _ = fit_dense(sufficient_stats(H4, T4), star(4), cfg4)
+    np.testing.assert_allclose(
+        np.asarray(U4s), np.asarray(dense4s.U), rtol=1e-5, atol=1e-5,
+        err_msg="star graph through fit(executor='sharded')")
     print("ENGINE_EXECUTORS_MATCH")
     """
 )
 
 
 def test_vmap_and_shardmap_executors_match():
-    """(U, A) parity between fit_dense and fit_sharded from identical
-    SufficientStats on an 8-device host-platform ring mesh (rtol 1e-5)."""
+    """(U, A) parity between fit_dense and the shard_map executors (the
+    ppermute ring AND the compiled-edge-schedule graph executor, incl. its
+    phase-masked Gauss-Seidel mode) from identical SufficientStats on an
+    8-device host-platform mesh (rtol 1e-5), plus the shared diagnostics
+    contract across all of them."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     proc = subprocess.run(
@@ -606,9 +768,72 @@ def test_fit_entry_point_dispatches_executors():
         fo_dmtl_elm_fit(H, T, g, cfg, schedule=jacobian_schedule(m))
     with pytest.raises(ValueError, match="sharded"):
         fit(H, T, g, cfg, executor="colored", agent_axes=("agents",))
-    # sharded consensus runs on the mesh ring/torus: a different g must be
-    # rejected, not silently replaced
+    # sharded consensus accepts ANY connected graph now (the compiler
+    # path), but the mesh must still carry one shard per agent
     mesh1 = jax.make_mesh((1,), ("agents",))
-    with pytest.raises(ValueError, match="ring/torus"):
+    with pytest.raises(ValueError, match="prod"):
         fit(H, T, g, cfg, executor="sharded", mesh=mesh1,
             agent_axes=("agents",))
+    # schedule= now also applies to the sharded executor, but not to dense
+    with pytest.raises(ValueError, match="schedule"):
+        fit(H, T, g, cfg, executor="dense", schedule=jacobian_schedule(m))
+
+
+def test_graph_matches_torus_orientation_insensitive():
+    """Regression: the sharded topology check was orientation-sensitive —
+    the same undirected ring written with a flipped edge, e.g.
+    Graph(m=4, edges=((1, 0), (1, 2), (2, 3), (3, 0))), was wrongly
+    rejected.  The match must compare undirected edge sets."""
+    from repro.core.engine import graph_matches_torus, torus_edges
+    from repro.core.graph import Graph
+
+    flipped = Graph(m=4, edges=((1, 0), (1, 2), (2, 3), (3, 0)))
+    assert graph_matches_torus(flipped, [4])
+    assert graph_matches_torus(ring(4), [4])
+    assert graph_matches_torus(ring(2), [2])
+    # a genuinely different topology still fails the match
+    assert not graph_matches_torus(star(4), [4])
+    assert not graph_matches_torus(paper_fig2a(), [5])
+    # a doubled edge (second orientation) is not the simple torus
+    dup = Graph(m=3, edges=((0, 1), (1, 0), (1, 2), (2, 0)))
+    assert not graph_matches_torus(dup, [3])
+    # 2x2 torus: each axis contributes its single degenerate-ring edge
+    tor22 = Graph(m=4, edges=tuple(torus_edges([2, 2])))
+    assert graph_matches_torus(tor22, [2, 2])
+
+
+DIAG_KEYS = {"objective", "lagrangian", "consensus", "gamma", "gamma_min",
+             "primal_sq"}
+
+
+def test_diagnostics_contract_dense_and_colored():
+    """The cross-executor diagnostics contract on the single-device
+    executors: identical key sets, every key a (iters,) trajectory, and
+    gamma within (0, gamma_cap] (the §IV rule is observable now instead of
+    being discarded by every executor)."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=12, tau=2.0, zeta=1.0)
+    _, ddiag = fit_dense(stats, g, cfg)
+    _, cdiag = fit_colored(stats, g, cfg)
+    assert set(ddiag) == set(cdiag) == DIAG_KEYS
+    for k in DIAG_KEYS:
+        assert np.asarray(ddiag[k]).shape == (cfg.iters,), k
+        assert np.isfinite(np.asarray(ddiag[k])).all(), k
+    gamma = np.asarray(ddiag["gamma"])
+    gamma_min = np.asarray(ddiag["gamma_min"])
+    assert (gamma > 0).all() and (gamma <= cfg.gamma_cap + 1e-7).all()
+    assert (gamma_min <= gamma + 1e-7).all()
+    # primal_sq is the unnormalized consensus: sqrt(primal/(E L r)) == RMS
+    E = g.n_edges
+    np.testing.assert_allclose(
+        np.asarray(ddiag["consensus"]),
+        np.sqrt(np.asarray(ddiag["primal_sq"]) / (E * 12 * cfg.r)),
+        rtol=1e-6, atol=1e-7,
+    )
+    # gamma responds to gamma_floor: flooring at the cap pins gamma there
+    import dataclasses
+    _, fdiag = fit_dense(
+        stats, g, dataclasses.replace(cfg, gamma_floor=cfg.gamma_cap))
+    np.testing.assert_allclose(np.asarray(fdiag["gamma"]), cfg.gamma_cap,
+                               rtol=1e-6)

@@ -81,6 +81,60 @@ def _run(script):
     return proc.stdout
 
 
+_GRAPH_ENTRY_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from repro.core import (
+        DMTLELMConfig, dmtl_elm_fit, dmtl_elm_fit_sharded, dmtl_fit_from_stats,
+        star, sufficient_stats,
+    )
+    from repro.data.synthetic import paper_uniform
+
+    # Non-torus topology end-to-end through the historically-named entry
+    # points: the star (paper Fig. 2b master-slave) on an 8-shard mesh.
+    m = 8
+    H, T = paper_uniform(jax.random.PRNGKey(2), m=m, N=12, L=6, d=2)
+    g = star(m)
+    cfg = DMTLELMConfig(r=2, iters=60, tau=2.0, zeta=1.0, delta=10.0)
+    ref_state, ref_diags = dmtl_elm_fit(H, T, g, cfg)
+    mesh = jax.make_mesh((m,), ("agents",))
+    U, A, diags = dmtl_elm_fit_sharded(H, T, mesh, ("agents",), cfg, g=g)
+    np.testing.assert_allclose(
+        np.asarray(U), np.asarray(ref_state.U), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(A), np.asarray(ref_state.A), rtol=2e-3, atol=2e-4)
+
+    # stats entry point: n/t2 threaded through the shard_map makes the
+    # on-device objective EXACT (regression for the dropped stats leaves)
+    stats = sufficient_stats(H, T)
+    U2, A2, d2 = dmtl_fit_from_stats(
+        stats.G, stats.R, mesh, ("agents",), cfg,
+        n=stats.n, t2=stats.t2, g=g,
+    )
+    np.testing.assert_allclose(
+        np.asarray(d2["objective"]), np.asarray(ref_diags["objective"]),
+        rtol=2e-3, atol=2e-4,
+        err_msg="on-device objective from threaded n/t2 leaves",
+    )
+    # without n/t2 the fit is unchanged, only the objective is offset by
+    # the constant ||T||^2/2 term
+    U3, A3, d3 = dmtl_fit_from_stats(
+        stats.G, stats.R, mesh, ("agents",), cfg, g=g)
+    np.testing.assert_allclose(np.asarray(U3), np.asarray(U2),
+                               rtol=1e-6, atol=1e-6)
+    t2_half = 0.5 * float(jnp.sum(stats.t2))
+    np.testing.assert_allclose(
+        np.asarray(d2["objective"]) - np.asarray(d3["objective"]),
+        t2_half, rtol=1e-4,
+    )
+    print("GRAPH_ENTRY_POINTS_OK")
+    """
+)
+
+
 def test_sharded_matches_reference_ring():
     out = _run(_EQUIV_SCRIPT)
     assert "SHARDED_MATCHES_REFERENCE" in out
@@ -89,3 +143,11 @@ def test_sharded_matches_reference_ring():
 def test_multipod_torus_consensus():
     out = _run(_TORUS_SCRIPT)
     assert "TORUS_CONSENSUS_OK" in out
+
+
+def test_graph_entry_points_star_topology():
+    """Non-torus graphs through dmtl_elm_fit_sharded / dmtl_fit_from_stats
+    (the edge-schedule compiler path), plus the n/t2-threading regression:
+    the on-device objective diagnostic must equal the reference executor's."""
+    out = _run(_GRAPH_ENTRY_SCRIPT)
+    assert "GRAPH_ENTRY_POINTS_OK" in out
