@@ -1,0 +1,95 @@
+"""Async suite: the convergence-vs-delay×drop frontier of the netsim
+executor (``engine.fit_async``) across consensus topologies.
+
+For every topology the synchronous Jacobian run (``fit_dense``) sets the
+yardstick — its iteration-100 objective plus 0.1% of the initial gap (the
+``run_sweeps`` convention) — and each (delay scale × drop rate) cell of the
+sampled ``ChannelModel`` grid reports how many simulated rounds the async
+run needs to close that gap (``-1`` = DNF at the horizon).  Topologies
+cover the mesh-native ring, the paper's star and Fig. 2(a) graphs, and the
+new log-diameter overlays (``expander``/``hypercube``) the Liu et al. 2017
+line motivates: the frontier shows how much delay/drop budget each
+topology's mixing speed buys.
+
+Writes ``experiments/benchmarks/async_frontier.csv`` (the CI artifact) and
+emits the usual ``name,us_per_call,derived`` lines.  ``BENCH_SMOKE=1``
+shrinks the grid/horizon for the CI bench-smoke job.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from repro.core import (
+    DMTLELMConfig, expander, fit_dense, hypercube, paper_fig2a, ring, star,
+    sufficient_stats,
+)
+from repro.core.engine import fit_async
+from repro.data.synthetic import paper_uniform
+from repro.netsim import ChannelModel, gap_target, iters_to_target, tape_summary
+
+from benchmarks.common import emit, timed, write_csv
+
+
+def _grid(smoke: bool):
+    if smoke:
+        return (0.0, 2.0), (0.0, 0.3), 80, 60
+    return (0.0, 1.0, 3.0), (0.0, 0.2, 0.5), 300, 100
+
+
+def run():
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    scales, drops, iters, target_at = _grid(smoke)
+    L, d, r = 10, 3, 2
+    topologies = [
+        ("ring", ring(8)),
+        ("star", star(8)),
+        ("fig2a", paper_fig2a()),
+        ("expander_d3", expander(8, 3, seed=0)),
+        ("hypercube_3", hypercube(3)),
+    ]
+    rows = []
+    for topo_i, (name, g) in enumerate(topologies):
+        H, T = paper_uniform(jax.random.PRNGKey(17), m=g.m, N=40, L=L, d=d)
+        stats = sufficient_stats(H, T)
+        cfg = DMTLELMConfig(r=r, tau=2.0, zeta=1.0, delta=10.0, iters=iters)
+        (_, diag_j), t_j = timed(lambda: fit_dense(stats, g, cfg))
+        obj_j = np.asarray(diag_j["objective"])
+        target = gap_target(obj_j, at=target_at)
+        base_iters = iters_to_target(obj_j, target)
+        emit(f"async/{name}/sync_baseline", t_j * 1e6,
+             f"target={target:.4f};iters_to_target={base_iters}")
+        # the straggler point rides the geometric channel mid-grid
+        cells = [("geometric", s, p, 0.0) for s in scales for p in drops]
+        cells.append(("geometric", scales[1], drops[1], 0.3))
+        cells.append(("heavy_tail", scales[-1], 0.0, 0.0))
+        for cell_i, (dist, scale, drop, straggle) in enumerate(cells):
+            ch = ChannelModel(
+                delay=dist, scale=scale, drop=drop,
+                straggler_prob=straggle, seed=1000 * topo_i + cell_i,
+            )
+            tape = ch.sample(g, iters)
+            summ = tape_summary(tape)
+            (_, diag_a), t_a = timed(lambda: fit_async(stats, g, cfg, tape))
+            obj_a = np.asarray(diag_a["objective"])
+            it_a = iters_to_target(obj_a, target)
+            cons = float(np.asarray(diag_a["consensus"])[-1])
+            rows.append([
+                name, g.m, g.n_edges, dist, scale, drop, straggle,
+                summ["mean_age"], summ["max_age"], summ["active_frac"],
+                target, base_iters, it_a, float(obj_a[-1]), cons,
+            ])
+            emit(
+                f"async/{name}/{dist}_s{scale}_p{drop}_st{straggle}",
+                t_a * 1e6,
+                f"iters_to_target={it_a};mean_age={summ['mean_age']:.2f};"
+                f"final_consensus={cons:.2e}",
+            )
+    write_csv("async_frontier",
+              ["topology", "m", "edges", "delay_dist", "delay_scale",
+               "drop", "straggler_prob", "mean_age", "max_age",
+               "active_frac", "target_obj", "sync_iters", "async_iters",
+               "final_obj", "final_consensus"], rows)

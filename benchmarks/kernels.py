@@ -29,6 +29,7 @@ write back fp32 once per tile.
 from __future__ import annotations
 
 import json
+import shutil
 from pathlib import Path
 
 import jax
@@ -44,11 +45,31 @@ from repro.kernels.swa.ref import swa_ref
 
 from benchmarks.common import OUT_DIR, emit, timed, write_csv
 
-BENCH_JSON = OUT_DIR / "BENCH_kernels.json"
+# Both snapshot locations are anchored to the repo root via __file__ (NOT
+# the cwd, unlike the per-suite CSVs): the single-writer guarantee below
+# must hold no matter where the bench process was launched from.
+_REPO_ROOT = Path(__file__).resolve().parents[1]
+BENCH_JSON = _REPO_ROOT / "experiments" / "benchmarks" / "BENCH_kernels.json"
 # The same snapshot, committed at the repo root so the perf trajectory is
 # discoverable without digging into experiments/ (the CI bench-smoke job
 # regenerates and uploads both).
-ROOT_BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+ROOT_BENCH_JSON = _REPO_ROOT / "BENCH_kernels.json"
+
+
+def write_bench_snapshot(results: dict,
+                         canonical: Path = BENCH_JSON,
+                         mirror: Path = ROOT_BENCH_JSON) -> Path:
+    """The ONE writer of the kernel-bench snapshot.
+
+    Serializes ``results`` once to the canonical ``experiments/benchmarks/``
+    location and byte-copies that file to the repo-root mirror — two paths,
+    one serialization, so the committed copies cannot drift (asserted by
+    ``tests/test_kernels.py::test_bench_snapshot_copies_identical``).
+    """
+    canonical.parent.mkdir(parents=True, exist_ok=True)
+    canonical.write_text(json.dumps(results, indent=1, sort_keys=False))
+    shutil.copyfile(canonical, mirror)
+    return canonical
 
 
 def _mode() -> str:
@@ -273,10 +294,7 @@ def run():
     record_timing("rglru/jnp_ref", dt_ref)
     emit("kernels/rglru", dt_op * 1e6, f"mode={mode};maxerr_vs_ref={err:.2e}")
 
-    OUT_DIR.mkdir(parents=True, exist_ok=True)
-    payload = json.dumps(results, indent=1, sort_keys=False)
-    BENCH_JSON.write_text(payload)
-    ROOT_BENCH_JSON.write_text(payload)
+    write_bench_snapshot(results)
     min_ratio_256 = min(
         r["flops_ratio_G_dense_over_tri"] for r in results["gram_model"]
         if r["L"] >= 256 and r["nl"] >= 16

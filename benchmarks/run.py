@@ -10,7 +10,11 @@ experiments/benchmarks/.
   fig6   communication-vs-accuracy trade-off
   precision  ADMM convergence from fp32 vs bf16 Gram statistics
   schedule  comm-rounds-vs-topology: compiled ppermute edge schedules
-            (rounds vs the Δ+1 bound, message volume per iteration)
+            (rounds vs the Δ+1 bound, message volume per iteration),
+            incl. the expander/hypercube log-diameter overlays
+  async     convergence-vs-delay×drop frontier of the netsim event-tape
+            executor (fit_async) across topologies → async_frontier.csv
+            (BENCH_SMOKE=1 shrinks the grid for CI)
   roofline  aggregated dry-run roofline table (deliverable g) + the
             analytic Gram-engine roofline (tri vs dense vs two-matmul)
   kernels   Pallas-kernel correctness probes, op timings (labeled
@@ -26,8 +30,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
-        communication, consensus, convergence, generalization, kernels,
-        roofline, topology,
+        asynchrony, communication, consensus, convergence, generalization,
+        kernels, roofline, topology,
     )
 
     suites = [
@@ -39,6 +43,7 @@ def main() -> None:
         ("precision", convergence.run_precision),
         ("topology", topology.run),
         ("schedule", topology.run_schedule),
+        ("async", asynchrony.run),
         ("kernels", kernels.run),
         ("roofline", roofline.run),
     ]

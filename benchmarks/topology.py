@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core import (
     DMTLELMConfig, chain, compile_edge_schedule, complete, dmtl_elm_fit,
-    erdos, paper_fig2a, ring, star,
+    erdos, expander, hypercube, paper_fig2a, ring, star,
 )
 from repro.data.synthetic import paper_uniform
 
@@ -76,6 +76,11 @@ def run_schedule():
         "complete": complete(10),
         "fig2a": paper_fig2a(),
         "erdos_p0.4": erdos(10, 0.4, seed=1),
+        # log(m)-diameter overlays: constant degree, so the compiled round
+        # count stays ~Δ+1 while the mixing diameter drops to O(log m) —
+        # the overlay trade the async suite sweeps end to end
+        "hypercube_4": hypercube(4),
+        "expander_16_d3": expander(16, 3, seed=1),
     }
     rows = []
     for name, g in graphs.items():

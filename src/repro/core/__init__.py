@@ -2,11 +2,12 @@
 
 Organized stats-first: ``repro.core.engine`` holds the shared
 ``SufficientStats`` type, the ONE per-agent ADMM body (``agent_update``)
-and its four executors (``fit_dense``: vmap + dense incidence;
+and its five executors (``fit_dense``: vmap + dense incidence;
 ``fit_sharded``: shard_map + ppermute ring/torus; ``fit_colored``:
 Gauss-Seidel colored sweeps; ``fit_sharded_graph``: any connected Graph
-compiled to a ≤ Δ+1-round ppermute edge schedule).  The modules below are
-thin, paper-named entry points over that engine.
+compiled to a ≤ Δ+1-round ppermute edge schedule; ``fit_async``: the
+``repro.netsim`` event-tape executor for delay/drop/straggler asynchrony).
+The modules below are thin, paper-named entry points over that engine.
 """
 
 from repro.core.elm import (
@@ -26,6 +27,7 @@ from repro.core.engine import (
     accumulate_stats_chunked,
     agent_update,
     dual_step,
+    fit_async,
     fit_colored,
     fit_dense,
     fit_sharded,
@@ -44,6 +46,8 @@ from repro.core.graph import (
     compile_edge_schedule,
     complete,
     erdos,
+    expander,
+    hypercube,
     paper_fig2a,
     ring,
     star,
@@ -72,10 +76,11 @@ from repro.core.sharded_dmtl import dmtl_elm_fit_sharded, dmtl_fit_from_stats
 __all__ = [
     "ELMFeatureMap", "elm_fit", "elm_objective", "elm_predict", "make_feature_map",
     "EdgeSchedule", "Graph", "chain", "compile_edge_schedule", "complete",
-    "erdos", "paper_fig2a", "ring", "star",
+    "erdos", "expander", "hypercube", "paper_fig2a", "ring", "star",
     "AgentState", "ConsensusConfig", "NeighborMsgs", "SufficientStats",
     "U_SOLVERS", "accumulate_stats", "accumulate_stats_chunked", "agent_update",
-    "dual_step", "fit_colored", "fit_dense", "fit_sharded", "fit_sharded_graph",
+    "dual_step", "fit_async", "fit_colored", "fit_dense", "fit_sharded",
+    "fit_sharded_graph",
     "graph_matches_torus", "init_stats",
     "jacobian_schedule", "objective_from_stats", "register_u_solver",
     "sufficient_stats",

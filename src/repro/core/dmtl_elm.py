@@ -15,7 +15,9 @@ dispatches into ``engine.fit_dense`` — the vmap + dense-incidence executor
 wrapped around the ONE shared ``engine.agent_update`` body.  The shard_map
 executors (``repro.core.sharded_dmtl`` / ``engine.fit_sharded`` for the
 mesh ring/torus, ``engine.fit_sharded_graph`` for any connected graph via
-the compiled ppermute edge schedule) wrap the *same* body, so all
+the compiled ppermute edge schedule), the Gauss-Seidel sweeps
+(``engine.fit_colored``) and the event-driven network simulator
+(``engine.fit_async`` / ``repro.netsim``) wrap the *same* body, so all
 execution modes agree by construction.
 
 Solver choice (cfg.u_solver — the ``engine.U_SOLVERS`` registry):
@@ -104,15 +106,21 @@ def fit(
     agent_axes=None,
     schedule=None,
     staleness: int = 0,
+    order: str = "fixed",
+    tape=None,
+    channel=None,
+    aged_duals: bool = False,
 ):
-    """One entry point, four executors over the SAME ``agent_update`` body.
+    """One entry point, five executors over the SAME ``agent_update`` body.
 
     * ``executor="dense"``   — Jacobian sweep, vmap + edge-list gathering
       (``engine.fit_dense``); the paper's synchronous scheme.
     * ``executor="colored"`` — Gauss-Seidel colored sweeps
       (``engine.fit_colored``); ``schedule`` overrides the greedy
-      ``g.chromatic_schedule()`` and ``staleness`` delays neighbor messages
-      by k rounds (see the engine docstring for the trade-off).
+      ``g.chromatic_schedule()``, ``staleness`` delays neighbor messages
+      by k rounds, and ``order="gauss_southwell"`` resweeps the classes
+      largest-primal-residual-first each iteration (see the engine
+      docstring for the trade-offs).
     * ``executor="sharded"`` — one agent per shard of ``mesh[agent_axes]``
       (``engine.fit_sharded`` / ``engine.fit_sharded_graph``).  ANY
       connected ``g`` is accepted: when ``g`` is the mesh ring/torus (up
@@ -122,32 +130,43 @@ def fit(
       ``engine.fit_sharded_graph``.  ``schedule`` (e.g.
       ``g.chromatic_schedule()``) runs phase-masked Gauss-Seidel sweeps
       inside shard_map via the compiler path.
+    * ``executor="async"``   — event-driven asynchrony
+      (``engine.fit_async`` / ``repro.netsim``): pass either a precompiled
+      ``tape=`` (an ``EventTape``) or a ``channel=`` (a ``ChannelModel``,
+      sampled here over ``cfg.iters`` ticks of ``g``); ``aged_duals=True``
+      additionally ships the received duals through the lossy channel.
 
-    Executor-specific kwargs are validated: ``staleness`` only applies to
-    "colored", ``schedule`` to "colored"/"sharded", and
-    ``mesh``/``agent_axes`` only to "sharded"; passing them elsewhere
-    raises rather than silently ignoring them.
+    Executor-specific kwargs are validated: ``staleness``/``order`` only
+    apply to "colored", ``schedule`` to "colored"/"sharded",
+    ``mesh``/``agent_axes`` only to "sharded", and ``tape``/``channel``/
+    ``aged_duals`` only to "async"; passing them elsewhere raises rather
+    than silently ignoring them.
 
-    dense/colored return ``(DMTLELMState, diagnostics)``; sharded returns
-    the engine's ``(U, A, diagnostics)`` sharded-output contract.  All
-    executors report the same diagnostics keys ('objective', 'lagrangian',
-    'consensus', 'gamma', 'gamma_min', 'primal_sq').
+    dense/colored/async return ``(DMTLELMState, diagnostics)``; sharded
+    returns the engine's ``(U, A, diagnostics)`` sharded-output contract.
+    All executors report the same diagnostics keys ('objective',
+    'lagrangian', 'consensus', 'gamma', 'gamma_min', 'primal_sq').
     """
     # All validation happens BEFORE the Gram reduction: a bad call must not
     # pay the O(m N L^2) stats pass just to raise.
-    if executor not in ("dense", "sharded", "colored"):
+    if executor not in ("dense", "sharded", "colored", "async"):
         raise ValueError(
-            f"unknown executor {executor!r}; expected 'dense', 'sharded' or "
-            f"'colored'"
+            f"unknown executor {executor!r}; expected 'dense', 'sharded', "
+            f"'colored' or 'async'"
         )
-    if executor == "dense" and schedule is not None:
+    if executor not in ("colored", "sharded") and schedule is not None:
         raise ValueError(
             "schedule= only applies to executor='colored' or 'sharded', "
-            "got executor='dense'"
+            f"got executor={executor!r}"
         )
     if executor != "colored" and staleness != 0:
         raise ValueError(
             f"staleness= only applies to executor='colored', "
+            f"got executor={executor!r}"
+        )
+    if executor != "colored" and order != "fixed":
+        raise ValueError(
+            f"order= only applies to executor='colored', "
             f"got executor={executor!r}"
         )
     if executor != "sharded" and (mesh is not None or agent_axes is not None):
@@ -155,6 +174,21 @@ def fit(
             f"mesh=/agent_axes= only apply to executor='sharded', "
             f"got executor={executor!r}"
         )
+    if executor != "async" and (
+        tape is not None or channel is not None or aged_duals
+    ):
+        raise ValueError(
+            f"tape=/channel=/aged_duals= only apply to executor='async', "
+            f"got executor={executor!r}"
+        )
+    if executor == "async":
+        if (tape is None) == (channel is None):
+            raise ValueError(
+                "executor='async' needs exactly one of tape= (a precompiled "
+                "EventTape) or channel= (a ChannelModel to sample)"
+            )
+        if channel is not None:
+            tape = channel.sample(g, cfg.iters)
     use_graph_path = False
     if executor == "sharded":
         if mesh is None or agent_axes is None:
@@ -182,8 +216,11 @@ def fit(
         return engine.fit_dense(stats, g, cfg)
     if executor == "colored":
         return engine.fit_colored(
-            stats, g, cfg, schedule=schedule, staleness=staleness
+            stats, g, cfg, schedule=schedule, staleness=staleness,
+            order=order,
         )
+    if executor == "async":
+        return engine.fit_async(stats, g, cfg, tape, aged_duals=aged_duals)
     if use_graph_path:
         return engine.fit_sharded_graph(
             stats, mesh, agent_axes, g, cfg, schedule=schedule

@@ -55,8 +55,33 @@ backend:
       per-edge duals live on the edge's source shard (slot table).  An
       optional vertex ``schedule`` runs ``fit_colored``-style phase-masked
       Gauss-Seidel sweeps inside shard_map.
+  ``fit_async``
+      Executor 5: event-driven asynchrony (``repro.netsim``) — a
+      ``ChannelModel`` (per-edge delay distribution, message drops,
+      compute stragglers) is sampled up front into a fixed-shape
+      ``EventTape`` and the whole simulated run is one ``jax.lax.scan``
+      around the same body, with stale neighbor views served from a ring
+      buffer of published subspaces.
 
-The executor contract: all four return per-iteration diagnostics with the
+Executor matrix — one ``agent_update`` body, five message schedules, each
+pinned to the reference by a parity oracle (all asserted in tests):
+
+  1. ``fit_dense``          vmap + edge-list segment sums; the reference.
+  2. ``fit_sharded``        ring/torus ppermute; ≡ ``fit_dense`` on the
+                            mesh torus (up to edge orientation).
+  3. ``fit_colored``        sequential color phases; ``staleness=1`` or
+                            the single-class ``jacobian_schedule`` ≡
+                            ``fit_dense`` (bitwise).
+  4. ``fit_sharded_graph``  compiled ≤ Δ+1 ppermute rounds on any graph;
+                            ``schedule=None`` ≡ ``fit_dense``, a chromatic
+                            ``schedule`` ≡ ``fit_colored(staleness=0)``.
+  5. ``fit_async``          event-tape scan; ``zero_delay_tape`` ≡
+                            ``fit_dense`` (bitwise), ``constant_tape(k)``
+                            ≡ ``fit_colored(staleness=k)``, an all-dropped
+                            channel ≡ ``fit_colored(staleness>=iters)``
+                            (every view pinned at U^0).
+
+The executor contract: all five return per-iteration diagnostics with the
 SAME keys — ``objective`` (primal, eq. 12), ``lagrangian`` (eq. 13),
 ``consensus`` (RMS edge disagreement), ``gamma``/``gamma_min`` (mean/min
 adaptive dual step over edges — the ``cfg.gamma_floor`` observable) and
@@ -664,6 +689,7 @@ def fit_colored(
     *,
     schedule: Sequence[Sequence[int]] | None = None,
     staleness: int = 0,
+    order: str = "fixed",
 ) -> tuple[DenseState, dict]:
     """Gauss-Seidel / colored-sweep executor around the same ``agent_update``.
 
@@ -693,6 +719,20 @@ def fit_colored(
     the edge duals (duals are per-iteration, exactly as in ``fit_dense``, so
     the single-class schedule is bit-for-bit the Jacobian path).
 
+    ``order`` picks the sweep order of the color classes:
+
+      * ``order="fixed"`` (default): classes run in schedule order every
+        iteration — bitwise the pre-existing behavior.
+      * ``order="gauss_southwell"``: classes are reordered EVERY iteration
+        by their primal residual (the summed squared consensus violation
+        of each class's incident edges, largest first) — the classic
+        Gauss-Southwell largest-violation-first sweep.  Requires
+        ``staleness=0`` (with frozen views the phases are independent and
+        order cannot matter).  The order is data-dependent, so this path
+        pads classes to a common width and gathers with traced indices to
+        stay inside one ``jax.lax.scan``; per-iteration gather work is
+        O(c·E) instead of the fixed path's O(E).
+
     Because the sweep solves the frozen-dual subproblem faster than the
     Jacobian iteration, the paper's §IV adaptive gamma (which shrinks with
     iterate movement) can collapse before consensus is enforced; set
@@ -704,11 +744,23 @@ def fit_colored(
     """
     if staleness < 0:
         raise ValueError(f"staleness must be >= 0, got {staleness}")
+    if order not in ("fixed", "gauss_southwell"):
+        raise ValueError(
+            f"unknown order {order!r}; expected 'fixed' or 'gauss_southwell'"
+        )
     m = stats.G.shape[0]
     if schedule is None:
         schedule = g.chromatic_schedule()
     schedule = tuple(tuple(int(t) for t in cls) for cls in schedule)
     _validate_schedule(schedule, m)
+    if order == "gauss_southwell":
+        if staleness != 0:
+            raise ValueError(
+                "order='gauss_southwell' requires staleness=0: with frozen "
+                "k-round-old views every phase reads the same snapshot, so "
+                "the class order cannot affect the sweep"
+            )
+        return _fit_colored_southwell(stats, g, cfg, schedule)
 
     es = _edge_setup(stats, g, cfg)
     stats = es.stats
@@ -786,6 +838,118 @@ def fit_colored(
         length=cfg.iters,
     )
     return DenseState(U, A, lam), diags
+
+
+def _fit_colored_southwell(
+    stats: SufficientStats,
+    g: Graph,
+    cfg: ConsensusConfig,
+    schedule: tuple[tuple[int, ...], ...],
+) -> tuple[DenseState, dict]:
+    """Adaptive Gauss-Southwell sweep order (``fit_colored(order=...)``).
+
+    Each iteration scores every color class by the summed squared residual
+    of its incident edges on the CURRENT iterate and runs the classes
+    largest-violation-first.  The chosen order is traced data, so classes
+    are padded to a common width ``K`` with an out-of-range sentinel agent
+    ``m``: gathers clamp the sentinel (the garbage row is computed but
+    discarded), writebacks use scatter ``mode="drop"`` so the sentinel rows
+    never land.  Numerics per phase otherwise mirror ``fit_colored``'s
+    staleness=0 path (live full-graph ``neighbor_sum`` regathered between
+    phases, one shared :func:`dual_step` per iteration).
+    """
+    import numpy as np
+
+    es = _edge_setup(stats, g, cfg)
+    stats = es.stats
+    m = stats.G.shape[0]
+    n_cls = len(schedule)
+    K = max(len(cls) for cls in schedule)
+    pad_np = np.full((n_cls, K), m, np.int32)       # m = dropped sentinel
+    cls_of = np.empty(m, np.int64)
+    for p, cls in enumerate(schedule):
+        pad_np[p, : len(cls)] = cls
+        for t in cls:
+            cls_of[t] = p
+    # class-edge incidence: a proper coloring puts each edge's endpoints in
+    # two different classes, so each edge scores both
+    inc_np = np.zeros((n_cls, g.n_edges), np.float32)
+    for j, (s, e) in enumerate(g.edges):
+        inc_np[cls_of[s], j] = 1.0
+        inc_np[cls_of[e], j] = 1.0
+    pad_idx = jnp.asarray(pad_np)
+    clamp_idx = jnp.minimum(pad_idx, m - 1)
+    inc = jnp.asarray(inc_np)
+
+    def step(state, _):
+        U, A, lam = state
+        U_start = U
+        ct_lam_full = es.ct_transpose(lam)
+        edge_sq = jnp.sum(es.edge_diff(U) ** 2, axis=(-2, -1))   # (E,)
+        # ties (e.g. iteration 0's zero residuals) keep schedule order:
+        # argsort is stable, so the all-tied case equals order="fixed"
+        sweep = jnp.argsort(-(inc @ edge_sq))                    # (n_cls,)
+        for p in range(n_cls):
+            c = sweep[p]
+            idx, idxc = pad_idx[c], clamp_idx[c]
+            stats_c = SufficientStats(
+                G=stats.G[idxc], R=stats.R[idxc],
+                n=stats.n[idxc], t2=stats.t2[idxc],
+            )
+            precomp_c = (
+                None if es.precomp is None
+                else jax.tree_util.tree_map(lambda x: x[idxc], es.precomp)
+            )
+            msgs = NeighborMsgs(
+                es.neighbor_sum(U)[idxc], ct_lam_full[idxc],
+                es.deg[idxc], es.tau_t[idxc], es.zeta_t[idxc],
+            )
+            U_c, A_c = es.body(
+                stats_c, AgentState(U[idxc], A[idxc], None), msgs, precomp_c
+            )
+            U = U.at[idx].set(U_c, mode="drop")
+            A = A.at[idx].set(A_c, mode="drop")
+        resid_old = es.edge_diff(U_start)
+        resid_new = es.edge_diff(U)
+        lam_new, gamma, primal = dual_step(lam, resid_old, resid_new, cfg)
+        diag = _iteration_diag(
+            stats, cfg, U, A, lam_new, resid_new, gamma, primal
+        )
+        return (U, A, lam_new), diag
+
+    (U, A, lam), diags = jax.lax.scan(
+        step, (es.init.U, es.init.A, es.init.lam), None, length=cfg.iters
+    )
+    return DenseState(U, A, lam), diags
+
+
+# --------------------------------------------------------------------------
+# Executor 5: event-driven asynchrony (delay/drop/straggler event tapes)
+# --------------------------------------------------------------------------
+
+
+def fit_async(
+    stats: SufficientStats,
+    g: Graph,
+    cfg: ConsensusConfig,
+    tape,
+    *,
+    aged_duals: bool = False,
+) -> tuple[DenseState, dict]:
+    """Executor 5: the ``repro.netsim`` event-tape executor.
+
+    Drives the same :func:`agent_update` body under simulated asynchrony —
+    per-edge random delays, dropped messages (the receiver keeps its last
+    delivered view), compute stragglers — precompiled into a fixed-shape
+    ``EventTape`` so the whole run is one ``jax.lax.scan``.  Parity
+    oracles: ``netsim.zero_delay_tape`` is bitwise :func:`fit_dense`;
+    ``netsim.constant_tape(k)`` reproduces ``fit_colored(staleness=k)``.
+    See ``repro.netsim.executor`` (imported lazily: the engine stays free
+    of a netsim dependency cycle) for the tape semantics.
+    """
+    from repro.netsim.executor import fit_async as _netsim_fit_async
+
+    return _netsim_fit_async(stats, g, cfg, tape, aged_duals=aged_duals)
 
 
 # --------------------------------------------------------------------------

@@ -356,6 +356,72 @@ def paper_fig2a() -> Graph:
     return Graph(m=5, edges=((0, 1), (1, 2), (2, 3), (3, 4), (4, 0), (1, 4)))
 
 
+def hypercube(d: int) -> Graph:
+    """``d``-dimensional hypercube overlay: ``m = 2^d`` agents, degree ``d``,
+    diameter ``d = log2(m)`` — the classic log-diameter overlay (Liu et al.
+    2017's motivation for non-mesh topologies).  Vertices are bit strings;
+    each edge flips one bit and is oriented low-to-high, so the edge list is
+    deterministic and ``m * d / 2`` long.
+    """
+    if d < 1:
+        raise ValueError(f"hypercube needs d >= 1, got {d}")
+    m = 1 << d
+    edges = tuple(
+        (t, t | (1 << b))
+        for t in range(m)
+        for b in range(d)
+        if not t & (1 << b)
+    )
+    return Graph(m=m, edges=edges)
+
+
+def expander(m: int, deg: int, seed: int = 0) -> Graph:
+    """Random ``deg``-regular graph — w.h.p. an expander for ``deg >= 3``,
+    giving O(log m) diameter at constant per-agent degree.
+
+    Sampled with the pairing (configuration) model: ``deg`` stubs per
+    vertex, shuffled and paired; pairs that would form a self-loop or
+    parallel edge throw their stubs back and the leftovers are re-shuffled
+    until all are placed (a dead end — or a disconnected result — restarts
+    the whole draw).  Every random draw comes from a fresh
+    ``(seed, attempt)``-indexed stream, so the result is deterministic for
+    a given ``seed`` regardless of how many attempts were burned.  Edges
+    are oriented low-to-high and sorted — a canonical edge list.
+    """
+    if not 2 <= deg < m:
+        raise ValueError(f"expander needs 2 <= deg < m, got deg={deg} m={m}")
+    if (m * deg) % 2:
+        raise ValueError(f"m * deg must be even, got m={m} deg={deg}")
+    for attempt in range(100):
+        rng = np.random.default_rng((seed, attempt))
+        stubs = np.repeat(np.arange(m), deg)
+        und: set[tuple[int, int]] = set()
+        while stubs.size:
+            rng.shuffle(stubs)
+            leftover = []
+            for a, b in stubs.reshape(-1, 2):
+                a, b = int(a), int(b)
+                edge = (min(a, b), max(a, b))
+                if a == b or edge in und:
+                    leftover.extend((a, b))     # throw the stubs back
+                else:
+                    und.add(edge)
+            if len(leftover) == stubs.size:     # dead end: restart the draw
+                und = None
+                break
+            stubs = np.asarray(leftover, dtype=np.int64)
+        if und is None:
+            continue
+        try:
+            return Graph(m=m, edges=tuple(sorted(und)))
+        except ValueError:     # disconnected draw — resample
+            continue
+    raise ValueError(
+        f"no connected simple {deg}-regular graph on m={m} vertices found "
+        f"in 100 pairing-model draws (seed={seed}); raise deg"
+    )
+
+
 def erdos(m: int, p: float, seed: int = 0) -> Graph:
     """G(m, p) random graph, made connected deterministically.
 

@@ -1,0 +1,38 @@
+"""Event-driven network simulator for decentralized consensus ADMM.
+
+The paper's DMTL-ELM assumes lossless synchronous rounds; this subsystem
+models the deployment regime real geo-distributed agents face — random
+per-link delays, dropped messages, compute stragglers — without touching
+the update math:
+
+* ``channels.ChannelModel`` — per-edge delay distribution (deterministic /
+  geometric / heavy-tail), i.i.d. drop probability, per-agent straggler
+  model; sampled ONCE on the host.
+* ``events.EventTape``     — the sampled run as fixed-shape per-tick arrays
+  (message ages, active mask) with validated invariants, so the simulation
+  is jittable and reproducible.
+* ``executor.fit_async``   — executor 5: one ``jax.lax.scan`` over the tape
+  around the unchanged ``engine.agent_update`` body, stale views served
+  from a ring buffer of published subspaces (and optionally duals).
+* ``frontier``             — iters-to-gap bookkeeping for the
+  ``benchmarks/asynchrony`` convergence-vs-delay frontier.
+"""
+
+from repro.netsim.channels import DELAY_KINDS, ChannelModel
+from repro.netsim.events import (
+    EventTape,
+    ages_from_arrivals,
+    constant_tape,
+    validate_tape,
+    zero_delay_tape,
+)
+from repro.netsim.executor import fit_async
+from repro.netsim.frontier import gap_target, iters_to_target, tape_summary
+
+__all__ = [
+    "DELAY_KINDS", "ChannelModel",
+    "EventTape", "ages_from_arrivals", "constant_tape", "validate_tape",
+    "zero_delay_tape",
+    "fit_async",
+    "gap_target", "iters_to_target", "tape_summary",
+]

@@ -1,0 +1,133 @@
+"""Channel models: stochastic link/compute behavior sampled into event tapes.
+
+A :class:`ChannelModel` describes a geo-distributed deployment the paper's
+synchronous rounds idealize away (cf. Baytas et al. 2016 AMTL; Liu et al.
+2017 DMTRL): per-directed-edge random message delays, i.i.d. message drops,
+and per-agent compute-time stragglers.  ``sample`` rolls the whole run out
+on the host into a fixed-shape :class:`~repro.netsim.events.EventTape`, so
+the simulated execution itself (``engine.fit_async``) is one deterministic
+``jax.lax.scan`` — resampling the channel is cheap, re-running a tape is
+reproducible.
+
+Delay distributions (``delay`` / ``scale``), all in extra rounds on top of
+the inherent one-round latency of a synchronous-round simulation:
+
+* ``"deterministic"`` — every message exactly ``round(scale)`` rounds late:
+  ``scale = 0`` is the lossless synchronous channel (the ``fit_dense``
+  oracle), ``scale = d`` samples exactly ``constant_tape(d + 1)`` (the
+  ``fit_colored(staleness=d + 1)`` oracle).
+* ``"geometric"``     — memoryless links: extra delay ~ Geometric with mean
+  ``scale`` (the Baytas-style bounded-expectation delay).
+* ``"heavy_tail"``    — Pareto-like links: extra delay = floor(scale *
+  (Z - 1)) with Z ~ Pareto(alpha); rare but enormous stalls, the regime
+  where mean-delay intuition fails.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.netsim.events import EventTape, ages_from_arrivals, validate_tape
+
+DELAY_KINDS = ("deterministic", "geometric", "heavy_tail")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """Per-edge delay + drop and per-agent straggler model (see module docs).
+
+    ``drop`` is the i.i.d. probability that a published message never
+    arrives; the receiver then keeps computing from the last delivered view
+    (never from zeros — at worst the initial ``U^0``).  ``straggler_prob``
+    is the per-completed-update probability that the agent stalls, drawing
+    a Geometric busy time with mean ``straggler_mean`` rounds during which
+    it republishes its unchanged state.
+    """
+
+    delay: str = "deterministic"   # DELAY_KINDS
+    scale: float = 0.0             # mean extra rounds (exact for deterministic)
+    drop: float = 0.0              # i.i.d. message-drop probability
+    straggler_prob: float = 0.0    # P(an update is followed by a stall)
+    straggler_mean: float = 3.0    # mean stall length, rounds (geometric)
+    alpha: float = 1.5             # heavy_tail shape (smaller = heavier)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.delay not in DELAY_KINDS:
+            raise ValueError(
+                f"unknown delay kind {self.delay!r}; expected one of "
+                f"{DELAY_KINDS}"
+            )
+        if self.scale < 0:
+            raise ValueError(f"scale must be >= 0, got {self.scale}")
+        if not 0.0 <= self.drop <= 1.0:
+            raise ValueError(f"drop must be in [0, 1], got {self.drop}")
+        if not 0.0 <= self.straggler_prob <= 1.0:
+            raise ValueError(
+                f"straggler_prob must be in [0, 1], got {self.straggler_prob}"
+            )
+        if self.straggler_mean < 1.0:
+            raise ValueError(
+                f"straggler_mean must be >= 1 round, got {self.straggler_mean}"
+            )
+        if self.alpha <= 1.0:
+            raise ValueError(
+                f"alpha must be > 1 (finite-mean Pareto), got {self.alpha}"
+            )
+
+    def _extra_delays(self, rng: np.random.Generator, shape) -> np.ndarray:
+        if self.delay == "deterministic":
+            return np.full(shape, int(round(self.scale)), np.int64)
+        if self.scale == 0.0:
+            return np.zeros(shape, np.int64)
+        if self.delay == "geometric":
+            # np geometric counts trials to first success (>= 1); extra
+            # delay is failures-before-success so the mean is `scale`
+            p = 1.0 / (1.0 + self.scale)
+            return rng.geometric(p, shape).astype(np.int64) - 1
+        # heavy_tail: floor(scale * (Z - 1)), Z ~ Pareto(alpha) >= 1
+        z = 1.0 + rng.pareto(self.alpha, shape)
+        return np.floor(self.scale * (z - 1.0)).astype(np.int64)
+
+    def sample(self, g: Graph, iters: int) -> EventTape:
+        """Roll ``iters`` rounds of this channel on ``g`` into an EventTape.
+
+        Per directed edge and publish tick ``q``: the message published at
+        the end of tick ``q`` arrives at ``q + 1 + extra_delay`` unless
+        dropped; :func:`ages_from_arrivals` reduces the arrival schedule to
+        the freshest-delivered age per tick.  Per agent: a busy-time walk
+        turns ``straggler_prob``/``straggler_mean`` into the active mask.
+        """
+        if iters < 0:
+            raise ValueError(f"iters must be >= 0, got {iters}")
+        rng = np.random.default_rng(self.seed)
+        shape = (iters, 2, g.n_edges)
+        arrival = (
+            np.arange(iters, dtype=np.float64)[:, None, None]
+            + 1.0
+            + self._extra_delays(rng, shape)
+        )
+        if self.drop > 0.0:
+            arrival = np.where(
+                rng.uniform(size=shape) < self.drop, np.inf, arrival
+            )
+        age = ages_from_arrivals(arrival)
+
+        active = np.ones((iters, g.m), np.float32)
+        if self.straggler_prob > 0.0:
+            busy = np.zeros(g.m, np.int64)
+            for k in range(iters):
+                working = busy > 0
+                active[k, working] = 0.0
+                busy[working] -= 1
+                done = ~working
+                stall = done & (rng.uniform(size=g.m) < self.straggler_prob)
+                busy[stall] = rng.geometric(
+                    1.0 / self.straggler_mean, g.m
+                )[stall]
+        tape = EventTape(age=age, active=active)
+        validate_tape(tape, g, iters)
+        return tape

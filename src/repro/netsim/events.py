@@ -1,0 +1,140 @@
+"""Event tapes: the precompiled, fixed-shape schedule of an async run.
+
+The network simulator never branches on randomness inside the ADMM scan.
+A :class:`ChannelModel` (``repro.netsim.channels``) is sampled ONCE on the
+host into an :class:`EventTape` — dense arrays indexed by tick — and the
+whole simulated run is one ``jax.lax.scan`` over the tape rows, so the
+executor stays jittable and bit-reproducible for a given tape.
+
+Tape semantics (per tick ``k`` = one global ADMM round):
+
+``age[k, dir, j]``
+    Staleness, in rounds, of the freshest *delivered* message on directed
+    edge ``j`` (direction 0: ``e -> s``, direction 1: ``s -> e`` for edge
+    ``(s, e)``).  ``age = a`` means the receiver computes its tick-``k``
+    update from the sender's subspace as it stood ``a`` publishes ago:
+    the ``U`` published at the end of tick ``k - a``.  ``a = 1`` is the
+    freshest a synchronous-round simulation allows (the previous round's
+    publish) and reproduces the Jacobian sweep; ``a = k + 1`` means
+    nothing has ever been delivered and the receiver still holds the
+    initial ``U^0`` — the drop-fallback view.  The unit is chosen so the
+    tape age IS ``fit_colored``'s ``staleness``: a constant-``k`` tape
+    reproduces ``fit_colored(staleness=k)`` exactly.
+
+``active[k, t]``
+    1.0 iff agent ``t`` completes its local update at tick ``k``; a
+    straggling agent (0.0) republishes its unchanged state instead.
+
+Invariants (established by the samplers, asserted by :func:`validate_tape`,
+fuzzed in the tests):
+
+* ``1 <= age[k] <= k + 1`` — a message cannot be fresher than last round's
+  publish, nor older than "never delivered";
+* ``age[k + 1] <= age[k] + 1`` — the held view never gets older by more
+  than the one round that just elapsed (dropped/late messages fall back to
+  the PREVIOUS delivered view, they never rewind further or zero out);
+* ``active`` is a {0, 1} mask.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+class EventTape(NamedTuple):
+    """A fixed-shape async schedule: one row per tick (see module docs)."""
+
+    age: np.ndarray     # (iters, 2, E) int32, in [1, k + 1] at tick k
+    active: np.ndarray  # (iters, m) float32, {0, 1}
+
+    @property
+    def iters(self) -> int:
+        return self.age.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.age.shape[2]
+
+    @property
+    def depth(self) -> int:
+        """Ring-buffer depth the executor needs: the oldest view any tick
+        serves (>= 1; the zero-delay tape needs only the previous publish)."""
+        return max(1, int(self.age.max())) if self.age.size else 1
+
+
+def validate_tape(tape: EventTape, g: Graph, iters: int | None = None) -> None:
+    """Assert the tape invariants against ``g`` (raises ValueError)."""
+    age, active = np.asarray(tape.age), np.asarray(tape.active)
+    if age.ndim != 3 or age.shape[1] != 2 or age.shape[2] != g.n_edges:
+        raise ValueError(
+            f"age must be (iters, 2, E={g.n_edges}), got {age.shape}"
+        )
+    n_iters = age.shape[0]
+    if iters is not None and n_iters != iters:
+        raise ValueError(f"tape has {n_iters} ticks but the run wants {iters}")
+    if active.shape != (n_iters, g.m):
+        raise ValueError(
+            f"active must be ({n_iters}, m={g.m}), got {active.shape}"
+        )
+    if n_iters == 0:
+        return
+    if age.min() < 1:
+        raise ValueError(f"age must be >= 1 (got min {age.min()})")
+    ticks = np.arange(n_iters)[:, None, None]
+    if (age > ticks + 1).any():
+        k = int(np.argwhere(age > ticks + 1)[0][0])
+        raise ValueError(
+            f"age at tick {k} exceeds k + 1: no message can predate U^0"
+        )
+    if (np.diff(age, axis=0) > 1).any():
+        raise ValueError(
+            "age increased by more than 1 in one tick: a held view can only "
+            "age by the round that elapsed (drop fallback never rewinds)"
+        )
+    if not np.isin(active, (0.0, 1.0)).all():
+        raise ValueError("active must be a {0, 1} mask")
+
+
+def zero_delay_tape(iters: int, g: Graph) -> EventTape:
+    """The lossless synchronous tape: every message one round old, every
+    agent active — ``fit_async`` on it is bitwise ``fit_dense`` (parity
+    oracle 1)."""
+    return EventTape(
+        age=np.ones((iters, 2, g.n_edges), np.int32),
+        active=np.ones((iters, g.m), np.float32),
+    )
+
+
+def constant_tape(iters: int, g: Graph, k: int) -> EventTape:
+    """Every message exactly ``k`` rounds stale (clipped to the pre-history
+    ``U^0`` while tick + 1 < k), every agent active — ``fit_async`` on it
+    reproduces ``fit_colored(staleness=k)`` (parity oracle 2)."""
+    if k < 1:
+        raise ValueError(f"constant tape staleness must be >= 1, got {k}")
+    age = np.minimum(k, np.arange(iters, dtype=np.int32)[:, None, None] + 1)
+    return EventTape(
+        age=np.broadcast_to(age, (iters, 2, g.n_edges)).astype(np.int32),
+        active=np.ones((iters, g.m), np.float32),
+    )
+
+
+def ages_from_arrivals(arrival: np.ndarray) -> np.ndarray:
+    """Reduce per-publish arrival ticks to the per-tick delivered age.
+
+    ``arrival[q, ...]`` is the tick at which the message PUBLISHED at the
+    end of tick ``q`` is delivered (``np.inf`` = dropped; deliveries may
+    arrive out of order).  The receiver always computes from the freshest
+    delivered publish: ``age[k] = k - max{q : arrival[q] <= k}``, falling
+    back to ``k + 1`` (the initial view) while nothing has arrived.
+    """
+    iters = arrival.shape[0]
+    age = np.empty(arrival.shape, np.int32)
+    q_idx = np.arange(iters).reshape((iters,) + (1,) * (arrival.ndim - 1))
+    for k in range(iters):
+        delivered = np.where(arrival[: k + 1] <= k, q_idx[: k + 1], -1)
+        age[k] = k - delivered.max(axis=0)
+    return age

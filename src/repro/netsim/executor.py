@@ -1,0 +1,134 @@
+"""Executor 5: event-driven asynchrony over the unchanged ADMM agent body.
+
+``fit_async`` drives ``engine.agent_update`` — the SAME per-agent round
+every other executor wraps — under a precompiled :class:`EventTape`: the
+whole simulated run is one ``jax.lax.scan`` whose per-tick inputs are the
+tape rows (per-directed-edge message ages, per-agent active mask), so
+delay/drop/straggler simulation costs no retracing and no host round trips.
+
+Mechanics per tick ``k``:
+
+* A ``depth``-deep ring buffer of published subspaces serves each directed
+  edge the *stale* neighbor view the tape dictates: ``age = a`` reads the
+  ``U`` published at the end of tick ``k - a`` (slot ``(k - a) mod depth``;
+  slots the run has not reached yet still hold the initial ``U^0``, which
+  is exactly the "nothing delivered yet" / all-dropped fallback — a dropped
+  message leaves the receiver on its last delivered view, never on zeros).
+* The shared body runs vmapped over ALL agents; the tape's ``active`` mask
+  then keeps stragglers' ``(U, A)`` unchanged (they republish their old
+  state).
+* The edge duals are the executor's synchronous bookkeeping, exactly as in
+  ``fit_colored``'s staleness mode: ``dual_step`` runs on the true edge
+  residuals each tick.  ``aged_duals=True`` additionally ships the
+  *received* dual through the same lossy channel (a second ring buffer of
+  dual views, aged like the ``s -> e`` message it rides) — the fully
+  message-faithful protocol; it is off by default because the
+  ``fit_colored(staleness=k)`` parity oracle uses live duals.
+
+Parity oracles (asserted in tests/test_netsim.py):
+
+* ``zero_delay_tape``  -> bitwise ``engine.fit_dense``;
+* ``constant_tape(k)`` -> ``engine.fit_colored(staleness=k)``;
+* all-dropped channel  -> ``fit_colored(staleness >= iters)`` (every view
+  pinned at ``U^0``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.engine import (
+    AgentState,
+    ConsensusConfig,
+    DenseState,
+    NeighborMsgs,
+    SufficientStats,
+    dual_step,
+)
+from repro.core.graph import Graph
+from repro.netsim.events import EventTape, validate_tape
+
+
+def fit_async(
+    stats: SufficientStats,
+    g: Graph,
+    cfg: ConsensusConfig,
+    tape: EventTape,
+    *,
+    aged_duals: bool = False,
+) -> tuple[DenseState, dict]:
+    """Run consensus ADMM under the simulated asynchrony of ``tape``.
+
+    Same input/output contract as :func:`engine.fit_dense` (final stacked
+    ``DenseState`` plus the shared per-iteration diagnostics keys); the
+    tape must carry exactly ``cfg.iters`` ticks for ``g``'s edge list.
+    """
+    validate_tape(tape, g, cfg.iters)
+    es = engine._edge_setup(stats, g, cfg)
+    stats = es.stats
+    m, E = stats.G.shape[0], g.n_edges
+    src = jnp.asarray([e[0] for e in g.edges], jnp.int32)
+    dst = jnp.asarray([e[1] for e in g.edges], jnp.int32)
+    depth = tape.depth
+    ages = jnp.asarray(np.asarray(tape.age), jnp.int32)
+    active = jnp.asarray(np.asarray(tape.active), stats.G.dtype)
+
+    # Ring buffer of published subspaces: slot j holds the U published at
+    # the end of tick j (mod depth).  Ages are in [1, depth], so slot
+    # (k - a) mod depth is never overwritten before tick k reads it, and
+    # pre-history reads (k - a < 0) land on slots the run has not written
+    # yet — still the initial U^0, the drop fallback.
+    hist0 = jnp.broadcast_to(es.init.U, (depth,) + es.init.U.shape)
+    lam_hist0 = (
+        jnp.zeros((depth,) + es.init.lam.shape, es.init.lam.dtype)
+        if aged_duals else None
+    )
+    edge_ids = jnp.arange(E, dtype=jnp.int32)
+
+    def step(carry, xs):
+        U, A, lam, hist, lam_hist = carry
+        age_k, act_k, k = xs
+        slot0 = jnp.mod(k - age_k[0], depth)           # e -> s views
+        slot1 = jnp.mod(k - age_k[1], depth)           # s -> e views
+        # aged neighbor views per directed edge, summed per receiving agent
+        # in the same s-side/e-side segment order as fit_dense's
+        # neighbor_sum — the zero-delay tape stays bitwise-identical
+        view0 = hist[slot0, dst]                       # (E, L, r)
+        view1 = hist[slot1, src]
+        neigh = jax.ops.segment_sum(view0, src, m) + jax.ops.segment_sum(
+            view1, dst, m
+        )
+        if aged_duals:
+            # the non-owner endpoint sees the dual that rode the s -> e
+            # message; the owner reads its own live dual
+            lam_view = lam_hist[slot1, edge_ids]
+            ct_lam = jax.ops.segment_sum(lam, src, m) - jax.ops.segment_sum(
+                lam_view, dst, m
+            )
+        else:
+            ct_lam = es.ct_transpose(lam)
+        msgs = NeighborMsgs(neigh, ct_lam, es.deg, es.tau_t, es.zeta_t)
+        U_upd, A_upd = es.body(stats, AgentState(U, A, None), msgs, es.precomp)
+        on = act_k[:, None, None] > 0
+        U_new = jnp.where(on, U_upd, U)                # stragglers republish
+        A_new = jnp.where(on, A_upd, A)
+        resid_old = es.edge_diff(U)
+        resid_new = es.edge_diff(U_new)
+        lam_new, gamma, primal = dual_step(lam, resid_old, resid_new, cfg)
+        hist = hist.at[jnp.mod(k, depth)].set(U_new)
+        if aged_duals:
+            lam_hist = lam_hist.at[jnp.mod(k, depth)].set(lam_new)
+        diag = engine._iteration_diag(
+            stats, cfg, U_new, A_new, lam_new, resid_new, gamma, primal
+        )
+        return (U_new, A_new, lam_new, hist, lam_hist), diag
+
+    (U, A, lam, _, _), diags = jax.lax.scan(
+        step,
+        (es.init.U, es.init.A, es.init.lam, hist0, lam_hist0),
+        (ages, active, jnp.arange(cfg.iters, dtype=jnp.int32)),
+    )
+    return DenseState(U, A, lam), diags

@@ -560,6 +560,75 @@ def test_colored_schedule_validation():
         fit_colored(stats, g, cfg, schedule=((0, 1, 2, 3, 7),))
     with pytest.raises(ValueError, match="staleness"):
         fit_colored(stats, g, cfg, staleness=-1)
+    with pytest.raises(ValueError, match="unknown order"):
+        fit_colored(stats, g, cfg, order="southwell")
+    with pytest.raises(ValueError, match="staleness=0"):
+        fit_colored(stats, g, cfg, order="gauss_southwell", staleness=2)
+
+
+def test_gauss_southwell_ties_keep_fixed_order():
+    """Iteration 0 starts from all-equal subspaces, so every class residual
+    ties; stable argsort must keep schedule order and the adaptive sweep's
+    first iteration must equal order='fixed' exactly (padded-path gathers
+    included)."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=1, tau=2.0, zeta=1.0)
+    fixed, _ = fit_colored(stats, g, cfg)
+    gs, _ = fit_colored(stats, g, cfg, order="gauss_southwell")
+    np.testing.assert_array_equal(np.asarray(gs.U), np.asarray(fixed.U))
+    np.testing.assert_array_equal(np.asarray(gs.A), np.asarray(fixed.A))
+
+
+def test_gauss_southwell_single_class_matches_fixed():
+    """With one class there is nothing to reorder: the padded path must
+    reproduce the fixed path (which itself is the fit_dense oracle)."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=15, tau=2.0, zeta=1.0)
+    fixed, _ = fit_colored(stats, g, cfg, schedule=jacobian_schedule(g.m))
+    gs, _ = fit_colored(stats, g, cfg, schedule=jacobian_schedule(g.m),
+                        order="gauss_southwell")
+    np.testing.assert_allclose(np.asarray(gs.U), np.asarray(fixed.U),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_gauss_southwell_reorders_and_converges():
+    """On a multi-class graph whose classes touch DIFFERENT edge subsets
+    the largest-violation-first sweep must stay finite, report the shared
+    diagnostics contract, track the fixed order to a comparable objective,
+    and actually diverge from it (the order is data-dependent after
+    iteration 0).  A star would not do: both its classes are incident to
+    every edge, so the scores tie forever and the order never changes."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=40, tau=2.0, zeta=1.0)
+    fixed, fdiag = fit_colored(stats, g, cfg)
+    gs, gdiag = fit_colored(stats, g, cfg, order="gauss_southwell")
+    assert set(gdiag) == set(fdiag) == DIAG_KEYS
+    obj = np.asarray(gdiag["objective"])
+    assert np.isfinite(np.asarray(gs.U)).all()
+    assert np.isfinite(obj).all()
+    # same frozen-dual problem: plateaus within trajectory-chaos noise
+    f_obj = np.asarray(fdiag["objective"])
+    assert abs(obj[-1] - f_obj[-1]) < 5e-2 * abs(f_obj[-1])
+    # ... but a genuinely different sweep
+    assert not np.allclose(np.asarray(gs.U), np.asarray(fixed.U))
+
+
+def test_fit_entry_point_order_kwarg():
+    from repro.core.dmtl_elm import fit
+
+    m, N, L, d = 5, 16, 8, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(23))
+    H = jax.random.normal(k1, (m, N, L)) / jnp.sqrt(L)
+    T = jax.random.normal(k2, (m, N, d))
+    g = star(m)
+    cfg = ConsensusConfig(r=2, iters=5, tau=2.0, zeta=1.0)
+    gs, _ = fit(H, T, g, cfg, executor="colored", order="gauss_southwell")
+    assert np.isfinite(np.asarray(gs.U)).all()
+    with pytest.raises(ValueError, match="order"):
+        fit(H, T, g, cfg, order="gauss_southwell")     # dense rejects it
 
 
 @pytest.mark.parametrize("seed", range(6))
@@ -758,9 +827,18 @@ def test_fit_entry_point_dispatches_executors():
     assert np.isfinite(np.asarray(fo_gs.U)).all()
     assert not np.allclose(np.asarray(fo_gs.U), np.asarray(fo_dense.U))
     with pytest.raises(ValueError, match="unknown executor"):
-        fit(H, T, g, cfg, executor="async")
+        fit(H, T, g, cfg, executor="jacobi")
     with pytest.raises(ValueError, match="mesh"):
         fit(H, T, g, cfg, executor="sharded")
+    # executor="async" is real now: it demands exactly one of tape/channel,
+    # and its kwargs are rejected everywhere else
+    with pytest.raises(ValueError, match="tape.*channel|channel.*tape"):
+        fit(H, T, g, cfg, executor="async")
+    with pytest.raises(ValueError, match="async"):
+        fit(H, T, g, cfg, aged_duals=True)
+    with pytest.raises(ValueError, match="async"):
+        from repro.netsim import zero_delay_tape
+        fit(H, T, g, cfg, executor="colored", tape=zero_delay_tape(10, g))
     # executor-specific kwargs must not be silently dropped
     with pytest.raises(ValueError, match="colored"):
         fit(H, T, g, cfg, staleness=3)            # dense ignores staleness

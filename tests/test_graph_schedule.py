@@ -17,6 +17,8 @@ from repro.core.graph import (
     compile_edge_schedule,
     complete,
     erdos,
+    expander,
+    hypercube,
     paper_fig2a,
     ring,
     star,
@@ -28,6 +30,8 @@ ZOO = [
     erdos(10, 0.3, seed=1), erdos(10, 0.7, seed=2), erdos(6, 0.0),
     erdos(12, 0.5, seed=7), erdos(16, 0.2, seed=9),
     Graph(m=4, edges=((1, 0), (1, 2), (2, 3), (3, 0))),  # flipped ring
+    hypercube(2), hypercube(4), expander(8, 3, seed=0),
+    expander(16, 4, seed=2),
 ]
 
 
@@ -117,3 +121,73 @@ def test_star_schedule_is_sequential_and_ring_is_wide():
     r = compile_edge_schedule(ring(8))
     assert r.n_rounds <= 3
     assert max(len(c) for c in r.rounds) >= 3
+
+
+# --------------------------------------------------------------------------
+# Overlay generators: hypercube and expander (log-diameter topologies)
+# --------------------------------------------------------------------------
+
+
+def _diameter(g: Graph) -> int:
+    adj = g.adjacency() > 0
+    diam = 0
+    for s in range(g.m):
+        dist = np.full(g.m, -1)
+        dist[s] = 0
+        frontier = [s]
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in np.nonzero(adj[u])[0]:
+                    if dist[v] < 0:
+                        dist[v] = dist[u] + 1
+                        nxt.append(int(v))
+            frontier = nxt
+        diam = max(diam, int(dist.max()))
+    return diam
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4])
+def test_hypercube_structure(d):
+    """2^d vertices, d-regular, m*d/2 edges oriented low-to-high, diameter
+    exactly d = log2(m) — the log-diameter overlay contract."""
+    g = hypercube(d)
+    assert g.m == 2 ** d
+    assert g.n_edges == g.m * d // 2
+    assert set(g.degrees()) == {float(d)}
+    for (s, e) in g.edges:
+        assert s < e and bin(s ^ e).count("1") == 1   # one bit flipped
+    assert _diameter(g) == d
+    with pytest.raises(ValueError, match="d >= 1"):
+        hypercube(0)
+
+
+@pytest.mark.parametrize("m,deg", [(8, 3), (10, 3), (16, 4), (12, 5)])
+def test_expander_regular_connected_deterministic(m, deg):
+    g = expander(m, deg, seed=0)
+    assert g.m == m and set(g.degrees()) == {float(deg)}
+    assert g.n_edges == m * deg // 2
+    und = {frozenset(e) for e in g.edges}
+    assert len(und) == g.n_edges                       # simple
+    # deterministic for a seed, different across seeds
+    assert expander(m, deg, seed=0).edges == g.edges
+    assert expander(m, deg, seed=1).edges != g.edges
+    # constant degree keeps the compiled schedule at <= deg + 1 rounds
+    assert compile_edge_schedule(g).n_rounds <= deg + 1
+
+
+def test_expander_beats_ring_diameter():
+    """The point of the overlay: at m=16 a random cubic expander's diameter
+    is far below the ring's m/2 = 8 (w.h.p. O(log m); the seed is fixed,
+    so this is deterministic here)."""
+    g = expander(16, 3, seed=0)
+    assert _diameter(g) <= 5 < _diameter(ring(16))
+
+
+def test_expander_validation():
+    with pytest.raises(ValueError, match="2 <= deg < m"):
+        expander(8, 1)
+    with pytest.raises(ValueError, match="2 <= deg < m"):
+        expander(4, 4)
+    with pytest.raises(ValueError, match="even"):
+        expander(5, 3)

@@ -195,3 +195,31 @@ def test_rglru_identity_decay():
     expect = jnp.cumsum(b, axis=1) + h0[:, None]
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5,
                                atol=1e-5)
+
+
+# ------------------------ bench snapshot writer ----------------------------
+
+def test_bench_snapshot_single_writer_copies_identical(tmp_path):
+    """BENCH_kernels.json bugfix: the snapshot has ONE writer that
+    serializes once and byte-copies to the mirror path, so the two
+    locations cannot drift."""
+    from benchmarks.kernels import write_bench_snapshot
+
+    canonical = tmp_path / "experiments" / "BENCH_kernels.json"
+    mirror = tmp_path / "BENCH_kernels.json"
+    results = {"schema": "bench_kernels/v2", "timings": [{"name": "x"}]}
+    out = write_bench_snapshot(results, canonical=canonical, mirror=mirror)
+    assert out == canonical
+    assert canonical.read_bytes() == mirror.read_bytes()
+    import json
+    assert json.loads(canonical.read_text()) == results
+
+
+def test_committed_bench_snapshots_identical():
+    """The committed repo-root mirror must be byte-identical to the
+    canonical experiments/benchmarks/ snapshot (i.e. both came out of the
+    single writer on the last bench run)."""
+    from benchmarks.kernels import BENCH_JSON, ROOT_BENCH_JSON
+
+    assert BENCH_JSON.exists() and ROOT_BENCH_JSON.exists()
+    assert BENCH_JSON.read_bytes() == ROOT_BENCH_JSON.read_bytes()

@@ -1,0 +1,341 @@
+"""Network simulator: tape invariants, channel sampling, and the executor-5
+parity oracles.
+
+The async executor's contract is anchored by three exact oracles — the
+zero-delay tape IS ``fit_dense`` (bitwise), a constant-``k`` tape IS
+``fit_colored(staleness=k)``, and an all-dropped channel IS
+``fit_colored(staleness >= iters)`` (every receiver pinned at the initial
+``U^0``: the drop fallback serves the last delivered view, never zeros).
+Everything stochastic is fuzzed against the tape invariants instead.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    ConsensusConfig, fit_colored, fit_dense, sufficient_stats,
+)
+from repro.core.graph import chain, erdos, paper_fig2a, ring, star
+from repro.netsim import (
+    ChannelModel,
+    EventTape,
+    constant_tape,
+    fit_async,
+    gap_target,
+    iters_to_target,
+    tape_summary,
+    validate_tape,
+    zero_delay_tape,
+)
+
+DIAG_KEYS = {"objective", "lagrangian", "consensus", "gamma", "gamma_min",
+             "primal_sq"}
+
+
+def _problem(m=5, N=24, L=12, d=3, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    H = jax.random.normal(k1, (m, N, L)) / jnp.sqrt(L)
+    T = jax.random.normal(k2, (m, N, d))
+    return sufficient_stats(H, T)
+
+
+# --------------------------------------------------------------------------
+# Tapes and channels
+# --------------------------------------------------------------------------
+
+
+def test_tape_constructors_shapes_and_invariants():
+    g = paper_fig2a()
+    for tape in (zero_delay_tape(10, g), constant_tape(10, g, 3),
+                 constant_tape(10, g, 30)):
+        validate_tape(tape, g, 10)
+        assert tape.age.shape == (10, 2, g.n_edges)
+        assert tape.active.shape == (10, g.m)
+    assert zero_delay_tape(10, g).depth == 1
+    assert constant_tape(10, g, 3).depth == 3
+    # constant ages clip to the pre-history bound: age[k] <= k + 1
+    t30 = constant_tape(10, g, 30)
+    assert (t30.age[0] == 1).all() and (t30.age[-1] == 10).all()
+    with pytest.raises(ValueError, match=">= 1"):
+        constant_tape(10, g, 0)
+
+
+def test_validate_tape_rejects_broken_invariants():
+    g = ring(4)
+    good = constant_tape(8, g, 2)
+    with pytest.raises(ValueError, match="ticks"):
+        validate_tape(good, g, 9)
+    with pytest.raises(ValueError, match="E="):
+        validate_tape(good, star(4), 8)     # 3 edges, tape has 4
+    bad = EventTape(age=good.age * 0, active=good.active)
+    with pytest.raises(ValueError, match=">= 1"):
+        validate_tape(bad, g, 8)
+    age = good.age.copy()
+    age[0, 0, 0] = 5                        # older than "never delivered"
+    with pytest.raises(ValueError, match="k \\+ 1"):
+        validate_tape(EventTape(age=age, active=good.active), g, 8)
+    age = good.age.copy()
+    age[5, 1, 2] = 1
+    age[6, 1, 2] = 4                        # aged by 3 in one tick
+    with pytest.raises(ValueError, match="more than 1"):
+        validate_tape(EventTape(age=age, active=good.active), g, 8)
+    act = good.active.copy()
+    act[3, 1] = 0.5
+    with pytest.raises(ValueError, match="mask"):
+        validate_tape(EventTape(age=good.age, active=act), g, 8)
+
+
+def test_channel_model_validation():
+    for bad in (dict(delay="uniform"), dict(scale=-1.0), dict(drop=1.5),
+                dict(straggler_prob=-0.1), dict(straggler_mean=0.5),
+                dict(alpha=1.0)):
+        with pytest.raises(ValueError):
+            ChannelModel(**bad)
+
+
+def test_deterministic_channel_is_the_constant_tape():
+    """ChannelModel(deterministic, scale=d) samples exactly constant_tape
+    (d + 1): d extra rounds on top of the inherent one-round latency —
+    i.e. the fit_colored(staleness=d+1) oracle — and scale=0 is exactly
+    the zero-delay (fit_dense) tape."""
+    g = star(6)
+    for d in (0, 2, 5):
+        tape = ChannelModel(delay="deterministic", scale=float(d)).sample(g, 12)
+        want = constant_tape(12, g, d + 1) if d else zero_delay_tape(12, g)
+        np.testing.assert_array_equal(tape.age, want.age)
+        np.testing.assert_array_equal(tape.active, want.active)
+
+
+def test_channel_sampling_deterministic_and_seed_sensitive():
+    g = ring(6)
+    ch = ChannelModel(delay="geometric", scale=2.0, drop=0.2,
+                      straggler_prob=0.3, seed=7)
+    t1, t2 = ch.sample(g, 30), ch.sample(g, 30)
+    np.testing.assert_array_equal(t1.age, t2.age)
+    np.testing.assert_array_equal(t1.active, t2.active)
+    t3 = dataclasses.replace(ch, seed=8).sample(g, 30)
+    assert not (np.array_equal(t1.age, t3.age)
+                and np.array_equal(t1.active, t3.active))
+
+
+def test_channel_delay_scale_orders_mean_age():
+    g = ring(8)
+    ages = {}
+    for s in (0.0, 2.0, 6.0):
+        tape = ChannelModel(delay="geometric", scale=s, seed=3).sample(g, 60)
+        validate_tape(tape, g, 60)
+        ages[s] = tape_summary(tape)["mean_age"]
+    assert ages[0.0] == 1.0 < ages[2.0] < ages[6.0]
+    heavy = ChannelModel(delay="heavy_tail", scale=3.0, seed=3).sample(g, 60)
+    validate_tape(heavy, g, 60)
+    assert tape_summary(heavy)["mean_age"] > 1.0
+
+
+def test_all_dropped_channel_pins_views_at_initial():
+    """drop=1.0: nothing is ever delivered, so every age is the maximal
+    k + 1 — the receiver holds the LAST DELIVERED view (here: the initial
+    U^0) forever, never zeros."""
+    g = paper_fig2a()
+    tape = ChannelModel(drop=1.0).sample(g, 15)
+    ticks = np.arange(15)[:, None, None]
+    np.testing.assert_array_equal(tape.age, np.broadcast_to(
+        ticks + 1, tape.age.shape))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_channel_fuzz_tape_invariants_and_finite_run(seed):
+    """Randomized ChannelModel fuzz (ISSUE satellite): delay kind, scale,
+    drop, straggler and graph family all drawn per seed — the sampled tape
+    must satisfy every invariant (validate_tape), and the executor must
+    stay finite and report the shared diagnostics contract."""
+    rng = np.random.default_rng(400 + seed)
+    m = int(rng.integers(3, 8))
+    g = {0: lambda: ring(max(m, 2)), 1: lambda: star(max(m, 3)),
+         2: lambda: chain(max(m, 2)),
+         3: lambda: erdos(max(m, 3), float(rng.uniform(0.2, 0.8)), seed=seed),
+         }[int(rng.integers(0, 4))]()
+    ch = ChannelModel(
+        delay=str(rng.choice(["deterministic", "geometric", "heavy_tail"])),
+        scale=float(rng.uniform(0.0, 4.0)),
+        drop=float(rng.uniform(0.0, 0.9)),
+        straggler_prob=float(rng.uniform(0.0, 0.5)),
+        straggler_mean=float(rng.uniform(1.0, 4.0)),
+        seed=seed,
+    )
+    iters = int(rng.integers(3, 12))
+    tape = ch.sample(g, iters)
+    validate_tape(tape, g, iters)
+    stats = _problem(m=g.m, seed=seed)
+    cfg = ConsensusConfig(r=2, iters=iters, tau=2.0, zeta=1.0)
+    state, diag = fit_async(stats, g, cfg, tape,
+                            aged_duals=bool(rng.integers(0, 2)))
+    assert set(diag) == DIAG_KEYS
+    assert np.isfinite(np.asarray(state.U)).all()
+    assert np.isfinite(np.asarray(diag["objective"])).all()
+
+
+# --------------------------------------------------------------------------
+# Executor 5: parity oracles
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("aged", [False, True], ids=["live_duals", "aged_duals"])
+def test_zero_tape_is_bitwise_fit_dense(aged):
+    """Parity oracle 1: the lossless synchronous tape must reproduce
+    fit_dense bit for bit — state AND every diagnostics trajectory — in
+    both dual-shipping modes (age 1 delivers the live dual)."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=25, tau=2.0, zeta=1.0)
+    dense, ddiag = fit_dense(stats, g, cfg)
+    got, adiag = fit_async(stats, g, cfg, zero_delay_tape(cfg.iters, g),
+                           aged_duals=aged)
+    np.testing.assert_array_equal(np.asarray(got.U), np.asarray(dense.U))
+    np.testing.assert_array_equal(np.asarray(got.A), np.asarray(dense.A))
+    np.testing.assert_array_equal(np.asarray(got.lam), np.asarray(dense.lam))
+    assert set(adiag) == set(ddiag) == DIAG_KEYS
+    for k in sorted(DIAG_KEYS):
+        np.testing.assert_array_equal(np.asarray(adiag[k]),
+                                      np.asarray(ddiag[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("g", [paper_fig2a(), ring(6), star(5)],
+                         ids=["fig2a", "ring6", "star5"])
+@pytest.mark.parametrize("k", [2, 4])
+def test_constant_tape_is_fit_colored_staleness(g, k):
+    """Parity oracle 2: a constant-k tape == fit_colored(staleness=k) —
+    the tape age IS the staleness, in rounds."""
+    stats = _problem(m=g.m)
+    cfg = ConsensusConfig(r=2, iters=20, tau=2.0, zeta=1.0)
+    colored, cdiag = fit_colored(stats, g, cfg, staleness=k)
+    got, adiag = fit_async(stats, g, cfg, constant_tape(cfg.iters, g, k))
+    np.testing.assert_array_equal(np.asarray(got.U), np.asarray(colored.U))
+    np.testing.assert_array_equal(np.asarray(got.A), np.asarray(colored.A))
+    np.testing.assert_array_equal(np.asarray(adiag["objective"]),
+                                  np.asarray(cdiag["objective"]))
+
+
+def test_all_dropped_run_holds_last_delivered_view():
+    """Drop-fallback semantics end to end: with every message dropped the
+    neighbor views stay pinned at the initial U^0 for the whole run, which
+    is exactly fit_colored with staleness >= iters (whose frozen history is
+    U^0 throughout).  A zeros fallback would break this equality by the
+    first iteration."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=15, tau=2.0, zeta=1.0)
+    tape = ChannelModel(drop=1.0).sample(g, cfg.iters)
+    got, _ = fit_async(stats, g, cfg, tape)
+    oracle, _ = fit_colored(stats, g, cfg, staleness=cfg.iters)
+    np.testing.assert_array_equal(np.asarray(got.U), np.asarray(oracle.U))
+    np.testing.assert_array_equal(np.asarray(got.A), np.asarray(oracle.A))
+    # and the run is NOT the synchronous one (the fallback view matters)
+    dense, _ = fit_dense(stats, g, cfg)
+    assert not np.allclose(np.asarray(got.U), np.asarray(dense.U))
+
+
+def test_single_edge_drop_fallback_freezes_that_view_only():
+    """Dropping every message on ONE directed edge from tick t0 on: the
+    receiver keeps that sender's tick-t0 view (ages grow by exactly 1 per
+    tick) while every other edge stays synchronous — and the run differs
+    from fit_dense but matches it until t0."""
+    stats = _problem()
+    g = ring(5)
+    cfg = ConsensusConfig(r=2, iters=12, tau=2.0, zeta=1.0)
+    t0 = 4
+    tape = zero_delay_tape(cfg.iters, g)
+    age = tape.age.copy()
+    age[t0:, 0, 2] = 1 + np.arange(cfg.iters - t0)   # held view ages by 1/tick
+    tape = EventTape(age=age, active=tape.active)
+    validate_tape(tape, g, cfg.iters)
+    got, gdiag = fit_async(stats, g, cfg, tape)
+    dense, ddiag = fit_dense(stats, g, cfg)
+    np.testing.assert_array_equal(np.asarray(gdiag["objective"][:t0 + 1]),
+                                  np.asarray(ddiag["objective"][:t0 + 1]))
+    assert not np.allclose(np.asarray(got.U), np.asarray(dense.U))
+    assert np.isfinite(np.asarray(got.U)).all()
+
+
+def test_straggler_mask_freezes_agents():
+    """An agent inactive for the whole run must end exactly at its initial
+    state (it republishes U^0/A^0 every tick) while the others move."""
+    stats = _problem()
+    g = ring(5)
+    cfg = ConsensusConfig(r=2, iters=10, tau=2.0, zeta=1.0)
+    tape = zero_delay_tape(cfg.iters, g)
+    active = tape.active.copy()
+    active[:, 2] = 0.0
+    got, _ = fit_async(stats, g, cfg, EventTape(age=tape.age, active=active))
+    U = np.asarray(got.U)
+    np.testing.assert_array_equal(U[2], np.ones_like(U[2]))
+    assert not np.allclose(U[0], np.ones_like(U[0]))
+
+
+def test_aged_duals_channel_matters_under_delay():
+    """With real delays the dual messages ride the same lossy channel:
+    aged_duals=True must produce a different (still finite) trajectory
+    than the live-dual bookkeeping."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=20, tau=2.0, zeta=1.0)
+    tape = constant_tape(cfg.iters, g, 3)
+    live, _ = fit_async(stats, g, cfg, tape)
+    aged, _ = fit_async(stats, g, cfg, tape, aged_duals=True)
+    assert np.isfinite(np.asarray(aged.U)).all()
+    assert not np.allclose(np.asarray(aged.U), np.asarray(live.U))
+
+
+def test_fit_async_rejects_mismatched_tape():
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=10, tau=2.0, zeta=1.0)
+    with pytest.raises(ValueError, match="ticks"):
+        fit_async(stats, g, cfg, zero_delay_tape(8, g))
+    with pytest.raises(ValueError, match="E="):
+        fit_async(stats, g, cfg, zero_delay_tape(10, ring(5)))
+
+
+# --------------------------------------------------------------------------
+# Frontier helpers
+# --------------------------------------------------------------------------
+
+
+def test_frontier_helpers():
+    objs = np.array([10.0, 5.0, 2.0, 1.0, 0.5, 0.4, 0.4])
+    target = gap_target(objs, at=4)
+    assert target == pytest.approx(1.0 + 1e-3 * 9.0)
+    assert iters_to_target(objs, target) == 4
+    assert iters_to_target(objs, 0.1) == -1
+    assert gap_target(objs, at=100) == pytest.approx(0.4 + 1e-3 * 9.6)
+    g = ring(4)
+    s = tape_summary(zero_delay_tape(6, g))
+    assert s == {"mean_age": 1.0, "max_age": 1, "active_frac": 1.0}
+    s3 = tape_summary(ChannelModel(drop=1.0).sample(g, 6))
+    assert s3["max_age"] == 6 and s3["mean_age"] > 1.0
+
+
+def test_async_convergence_degrades_gracefully_with_delay():
+    """The frontier's qualitative shape on a ring: more delay can only slow
+    the gap-closing iteration count (within the sampled-band), and even a
+    heavily delayed run still converges to a finite objective."""
+    stats = _problem(m=6)
+    g = ring(6)
+    cfg = ConsensusConfig(r=2, iters=200, tau=2.0, zeta=1.0)
+    _, ddiag = fit_dense(stats, g, cfg)
+    target = gap_target(np.asarray(ddiag["objective"]), at=100)
+    its = []
+    for k in (1, 3, 4):
+        _, adiag = fit_async(stats, g, cfg, constant_tape(cfg.iters, g, k))
+        its.append(iters_to_target(np.asarray(adiag["objective"]), target))
+    assert all(i > 0 for i in its), its       # moderate delay closes the gap
+    assert its[0] <= its[1] <= its[2], its    # monotone in staleness
+    # extreme staleness stalls on a higher plateau — still finite, but the
+    # gap stays open at this horizon (the frontier's cliff edge)
+    _, sdiag = fit_async(stats, g, cfg, constant_tape(cfg.iters, g, 8))
+    stale_obj = np.asarray(sdiag["objective"])
+    assert np.isfinite(stale_obj).all()
+    assert iters_to_target(stale_obj, target) == -1
