@@ -73,23 +73,31 @@ def run():
             )
             tape = ch.sample(g, iters)
             summ = tape_summary(tape)
-            (_, diag_a), t_a = timed(lambda: fit_async(stats, g, cfg, tape))
-            obj_a = np.asarray(diag_a["objective"])
-            it_a = iters_to_target(obj_a, target)
-            cons = float(np.asarray(diag_a["consensus"])[-1])
-            rows.append([
-                name, g.m, g.n_edges, dist, scale, drop, straggle,
-                summ["mean_age"], summ["max_age"], summ["active_frac"],
-                target, base_iters, it_a, float(obj_a[-1]), cons,
-            ])
-            emit(
-                f"async/{name}/{dist}_s{scale}_p{drop}_st{straggle}",
-                t_a * 1e6,
-                f"iters_to_target={it_a};mean_age={summ['mean_age']:.2f};"
-                f"final_consensus={cons:.2e}",
-            )
+            # each cell runs twice: fresh duals vs duals shipped through
+            # the same lossy channel (aged_duals) — the grid column shows
+            # how much dual staleness costs on top of message staleness
+            for aged in (False, True):
+                (_, diag_a), t_a = timed(
+                    lambda: fit_async(stats, g, cfg, tape, aged_duals=aged))
+                obj_a = np.asarray(diag_a["objective"])
+                it_a = iters_to_target(obj_a, target)
+                cons = float(np.asarray(diag_a["consensus"])[-1])
+                rows.append([
+                    name, g.m, g.n_edges, dist, scale, drop, straggle,
+                    int(aged), summ["mean_age"], summ["max_age"],
+                    summ["active_frac"], target, base_iters, it_a,
+                    float(obj_a[-1]), cons,
+                ])
+                emit(
+                    f"async/{name}/{dist}_s{scale}_p{drop}_st{straggle}"
+                    + ("_aged" if aged else ""),
+                    t_a * 1e6,
+                    f"iters_to_target={it_a};"
+                    f"mean_age={summ['mean_age']:.2f};"
+                    f"final_consensus={cons:.2e}",
+                )
     write_csv("async_frontier",
               ["topology", "m", "edges", "delay_dist", "delay_scale",
-               "drop", "straggler_prob", "mean_age", "max_age",
-               "active_frac", "target_obj", "sync_iters", "async_iters",
-               "final_obj", "final_consensus"], rows)
+               "drop", "straggler_prob", "aged_duals", "mean_age",
+               "max_age", "active_frac", "target_obj", "sync_iters",
+               "async_iters", "final_obj", "final_consensus"], rows)

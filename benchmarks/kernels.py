@@ -28,6 +28,7 @@ write back fp32 once per tile.
 
 from __future__ import annotations
 
+import datetime
 import json
 import shutil
 from pathlib import Path
@@ -36,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.gram.ops import gram, gram_batched
+from repro.kernels.gram.ops import gram, gram_batched, gram_fused
 from repro.kernels.gram.ref import gram_ref
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_scan_ref
@@ -54,6 +55,10 @@ BENCH_JSON = _REPO_ROOT / "experiments" / "benchmarks" / "BENCH_kernels.json"
 # discoverable without digging into experiments/ (the CI bench-smoke job
 # regenerates and uploads both).
 ROOT_BENCH_JSON = _REPO_ROOT / "BENCH_kernels.json"
+# The append-only trajectory: every snapshot write ALSO appends one dated
+# JSON line here, so the perf history survives snapshot overwrites and is
+# diffable/plottable across PRs without digging through git.
+BENCH_HISTORY = BENCH_JSON.parent / "BENCH_history.jsonl"
 
 
 def write_bench_snapshot(results: dict,
@@ -65,10 +70,24 @@ def write_bench_snapshot(results: dict,
     location and byte-copies that file to the repo-root mirror — two paths,
     one serialization, so the committed copies cannot drift (asserted by
     ``tests/test_kernels.py::test_bench_snapshot_copies_identical``).
+
+    Additionally appends one ``bench_history/v1`` line (UTC date + the full
+    results dict) to ``BENCH_history.jsonl`` NEXT TO the canonical snapshot
+    — same directory, so redirected writers (tests, tmp dirs) get their own
+    history file and the committed trajectory only grows from real runs.
     """
     canonical.parent.mkdir(parents=True, exist_ok=True)
     canonical.write_text(json.dumps(results, indent=1, sort_keys=False))
     shutil.copyfile(canonical, mirror)
+    entry = {
+        "schema": "bench_history/v1",
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "results": results,
+    }
+    history = canonical.parent / BENCH_HISTORY.name
+    with history.open("a") as f:
+        f.write(json.dumps(entry, sort_keys=False) + "\n")
     return canonical
 
 
@@ -83,10 +102,10 @@ def _mode() -> str:
 # --------------------------------------------------------------------------
 
 
-def gram_cost_model(L: int, N: int, D: int, *, block_l: int = 128,
-                    block_n: int = 512, m: int = 1,
+def gram_cost_model(L: int, N: int, D: int, *, d_in: int = 256,
+                    block_l: int = 128, block_n: int = 512, m: int = 1,
                     precision: str = "fp32") -> dict:
-    """MXU FLOPs and HBM traffic of the three Gram strategies, per launch
+    """MXU FLOPs and HBM traffic of the four Gram strategies, per launch
     covering all ``m`` agents.
 
     Strategies (all tiled identically: (BN, BL) input tiles, fp32
@@ -94,25 +113,50 @@ def gram_cost_model(L: int, N: int, D: int, *, block_l: int = 128,
 
     * ``two_matmul``  — separate H^T H and H^T T passes: the G grid visits
       all nl^2 block pairs AND the R pass re-reads H once more.
-    * ``dense``       — the fused baseline kernel: same nl^2 G tiles, but R
-      rides the j == 0 column, saving the second full H read.
+    * ``dense``       — the single-pass baseline kernel: same nl^2 G tiles,
+      but R rides the j == 0 column, saving the second full H read.
     * ``tri``         — the symmetry-aware kernel: only the nl(nl+1)/2
-      lower-triangular block pairs are visited; the upper triangle is a
-      VPU-side mirror (O(L^2) elementwise, counted in ``mirror_bytes``).
+      lower-triangular block pairs are visited; the upper triangle is
+      written from the SAME VMEM accumulator in-kernel (transposed flush),
+      so full-G output costs nl(nl+1) tile writes and zero extra reads.
+    * ``fused``       — the feature→Gram pipeline: hidden tiles
+      ``act(X W + b)`` are computed inside the triangular kernel from raw
+      (BN, d_in) X tiles, so H is NEVER materialized — the N·L fp32 H
+      write (``h_materialize_write_bytes``) and every H stream read
+      disappear, paid for with recomputed feature FLOPs
+      (``mxu_flops_feature``: each column tile is rebuilt at every grid
+      step that touches it) and per-step X refetches (the X BlockSpec
+      index rides the inner n axis).  Per grid step the X tile is
+      BN·d_in·4 bytes against the materialized kernel's two BN·BL H
+      tiles, so fused traffic wins exactly when ``block_l > d_in / 2``
+      (at fp32) — choose ``block_l >= d_in`` at backbone scale.  Absent
+      at int8 (its maxabs scale pass needs a materialized H).
 
-    bf16 streaming halves the input-read bytes; accumulators stay fp32.
+    The three materialized strategies carry the one-time feature pass
+    (``mxu_flops_feature`` = 2 N d_in L, ``h_materialize_write_bytes`` =
+    N L fp32) so end-to-end pipelines compare like-for-like;
+    ``hbm_saved_by_fused_bytes`` = (tri stream read + H write) − fused
+    stream read is the headline fused saving.
+
+    bf16 streaming halves the H-tile read bytes and int8 quarters them
+    (per-tile scales, T streamed bf16; the one-off quantize pass over the
+    materialized H is ``quant_pass_bytes``); accumulators stay fp32.
     The nl*nn T-tile read count is the kernels' ACTUAL fetch count: their
     T BlockSpec pins the block index outside the j == 0 column, so the
     pipeline does not refetch the (unread) T tile on non-R grid steps.
     """
-    in_bytes = 2 if precision == "bf16" else 4
+    in_bytes = {"fp32": 4, "bf16": 2, "int8": 1}[precision]
+    t_bytes = 4 if precision == "fp32" else 2    # int8 streams T in bf16
     nl = -(-L // block_l)
     nn = -(-N // block_n)
     tri = nl * (nl + 1) // 2
     tile_flops_g = 2 * block_n * block_l * block_l   # one (i, j, n) MAC tile
     tile_read = block_n * block_l * in_bytes         # one streamed H tile
-    t_read = block_n * D * in_bytes                  # one streamed T tile
+    t_read = block_n * D * t_bytes                   # one streamed T tile
     flops_r = 2 * N * L * D * m
+    h_write = N * L * 4 * m        # the fp32 H materialize of unfused paths
+    # in-kernel mirror: both triangles flushed from VMEM, nl(nl+1) tiles
+    full_g_tiles = nl * (nl + 1)
 
     def strategy(g_steps: int, h_reads_r_pass: int, g_tiles_out: int) -> dict:
         flops_g = g_steps * nn * tile_flops_g * m
@@ -123,6 +167,8 @@ def gram_cost_model(L: int, N: int, D: int, *, block_l: int = 128,
         return {
             "mxu_flops_G": flops_g,
             "mxu_flops_R": flops_r,
+            "mxu_flops_feature": 2 * N * d_in * L * m,   # one-time X W + b
+            "h_materialize_write_bytes": h_write,
             "hbm_read_bytes": read,
             "hbm_write_bytes": write,
             "intensity_flops_per_byte": (flops_g + flops_r) / max(
@@ -131,20 +177,49 @@ def gram_cost_model(L: int, N: int, D: int, *, block_l: int = 128,
         }
 
     dense = strategy(nl * nl, 0, nl * nl)
+    tri_s = strategy(tri, 0, full_g_tiles)
     out = {
-        "L": L, "N": N, "D": D, "m": m,
+        "L": L, "N": N, "D": D, "d_in": d_in, "m": m,
         "block_l": block_l, "block_n": block_n, "nl": nl,
         "precision": precision,
         # the R pass of two_matmul re-reads H once (h_reads_r_pass=1)
         "two_matmul": strategy(nl * nl, 1, nl * nl),
         "dense": dense,
-        "tri": strategy(tri, 0, tri),
+        "tri": tri_s,
         "launches": 1,           # agent-batched: ONE launch covers all m
         "launches_vmapped_baseline": m,
     }
-    out["tri"]["mirror_bytes"] = 2 * L * L * 4 * m   # read+write the mirror
+    if precision != "int8":
+        # per (i, j, n) step: ONE X tile (both hidden columns share the
+        # rows) + two W column panels; hidden tiles are recomputed per
+        # visit (2 per step), never stored
+        x_read = block_n * d_in * 4
+        w_read = d_in * block_l * 4
+        fused_read = (tri * nn * (x_read + 2 * w_read)
+                      + nl * nn * t_read) * m
+        fused_write = (full_g_tiles * block_l * block_l + L * D) * 4 * m
+        fused_flops_g = tri * nn * tile_flops_g * m
+        fused_flops_feat = tri * nn * 2 * (2 * block_n * d_in * block_l) * m
+        out["fused"] = {
+            "mxu_flops_G": fused_flops_g,
+            "mxu_flops_R": flops_r,
+            "mxu_flops_feature": fused_flops_feat,
+            "h_materialize_write_bytes": 0,
+            "hbm_read_bytes": fused_read,
+            "hbm_write_bytes": fused_write,
+            "intensity_flops_per_byte": (
+                fused_flops_g + flops_r + fused_flops_feat
+            ) / max(fused_read + fused_write, 1),
+        }
+        out["hbm_saved_by_fused_bytes"] = (
+            tri_s["hbm_read_bytes"] + h_write - fused_read
+        )
+    else:
+        # one-off pass over the materialized H: read fp32, write int8
+        # tiles + one fp32 scale per (BN, BL) tile
+        out["quant_pass_bytes"] = (N * L * (4 + 1) + nl * nn * 4) * m
     out["flops_ratio_G_dense_over_tri"] = (
-        dense["mxu_flops_G"] / out["tri"]["mxu_flops_G"]
+        dense["mxu_flops_G"] / tri_s["mxu_flops_G"]
     )
     return out
 
@@ -153,14 +228,22 @@ def gram_model_sweep() -> list[dict]:
     """The modeled trajectory: L >= 256 with the block grid refined so
     nl = L / block_l = 16 at every point (triangular FLOPs ratio
     2*16/17 = 1.88x >= 1.8x), plus the coarse MXU-native BL=128 points
-    showing how the ratio degrades when the grid is only 2-8 blocks wide."""
+    showing how the ratio degrades when the grid is only 2-8 blocks wide.
+    Every point is modeled at fp32 / bf16 / int8 streaming precision (int8
+    rows halve bf16's H-read bytes; fp32/bf16 rows carry the fused
+    strategy and its HBM saving).  The BL=256 points are the fused
+    regime: block_l >= d_in = 256 makes the per-step X refetch at most
+    half the two H tiles it replaces, so ``hbm_saved_by_fused_bytes``
+    goes strongly positive there (it is ~zero at BL=128 = d_in/2 — the
+    trade-off the sweep exists to show)."""
     rows = []
     for L, block_l in [(256, 16), (512, 32), (1024, 64), (2048, 128),
-                       (4096, 128), (256, 128), (1024, 128)]:
-        for precision in ("fp32", "bf16"):
+                       (4096, 128), (256, 128), (1024, 128),
+                       (512, 256), (2048, 256), (4096, 256)]:
+        for precision in ("fp32", "bf16", "int8"):
             rows.append(gram_cost_model(
-                L, N=4 * L, D=8, block_l=block_l, block_n=512, m=8,
-                precision=precision,
+                L, N=4 * L, D=8, d_in=256, block_l=block_l, block_n=512,
+                m=8, precision=precision,
             ))
     return rows
 
@@ -182,7 +265,7 @@ def _time_op(fn, repeats: int = 10) -> float:
 def run():
     mode = _mode()
     results: dict = {
-        "schema": "bench_kernels/v2",
+        "schema": "bench_kernels/v3",
         "backend": jax.default_backend(),
         "mode": mode,
         "timings": [],
@@ -248,22 +331,121 @@ def run():
          f"mode={mode};m={m};one_launch=True;maxerr={err_b:.2e}")
     emit("kernels/gram/jnp_ref", dt_ref * 1e6, "reference_path=True")
 
+    # ---- fused producer + int8 streaming at backbone scale --------------
+    # L in {512, 2048}: the fused kernel must match the materialized
+    # triangular kernel BITWISE at fp32 (same tiles, same order — tol 0.0),
+    # int8 must land within its stochastic-rounding envelope; timings are
+    # interpret-mode health numbers off-TPU, labeled as such.
+    from repro.core.elm import make_feature_map
+
+    for L2 in (512, 2048):
+        # block_l = 256 = d_in: the fused-winning tiling (see the cost
+        # model — at block_l <= d_in/2 the per-step X refetch cancels the
+        # H-read saving); parity compares both kernels at the SAME tiling
+        N2, m2, D2, d_in2, bl2 = 256, 2, 8, 256, 256
+        kx, kf, kt = jax.random.split(jax.random.PRNGKey(10 + L2), 3)
+        X2 = jax.random.normal(kx, (m2, N2, d_in2)) / jnp.sqrt(d_in2)
+        fmap = make_feature_map(kf, d_in2, L2, dist="normal")
+        T2 = jax.random.normal(kt, (m2, N2, D2))
+        H2 = fmap(X2)
+        Gm, Rm = gram_batched(H2, T2, block_l=bl2, block_n=128)
+        Gf, Rf = gram_fused(X2, fmap.W, fmap.b, T2,
+                            activation=fmap.activation,
+                            block_l=bl2, block_n=128)
+        err_f = float(jnp.max(jnp.maximum(jnp.abs(Gf - Gm),
+                                          jnp.max(jnp.abs(Rf - Rm)))))
+        record_err(f"gram/fused_bitwise_vs_materialized_L{L2}", err_f, 0.0)
+        Gq, Rq = gram_batched(H2, T2, precision="int8",
+                              block_l=bl2, block_n=128)
+        Gx = jax.vmap(gram_ref)(H2, T2)[0]
+        err_q = float(jnp.max(jnp.abs(Gq - Gx)) / jnp.max(jnp.abs(Gx)))
+        record_err(f"gram/int8_rel_vs_fp32_L{L2}", err_q, 5e-2)
+
+        dt_mat = _time_op(lambda: gram_batched(H2, T2, block_l=bl2,
+                                               block_n=128), repeats=3)
+        dt_fus = _time_op(lambda: gram_fused(
+            X2, fmap.W, fmap.b, T2, activation=fmap.activation,
+            block_l=bl2, block_n=128), repeats=3)
+        dt_q = _time_op(lambda: gram_batched(H2, T2, precision="int8",
+                                             block_l=bl2, block_n=128),
+                        repeats=3)
+        shape2 = [m2, N2, L2, D2]
+        record_timing(f"gram/op_materialized_L{L2}", dt_mat, shape=shape2)
+        record_timing(f"gram/op_fused_L{L2}", dt_fus, shape=shape2,
+                      d_in=d_in2)
+        record_timing(f"gram/op_int8_L{L2}", dt_q, shape=shape2)
+        model = gram_cost_model(L2, N=4 * L2, D=8, d_in=d_in2,
+                                block_l=bl2, block_n=512, m=8)
+        model8 = gram_cost_model(L2, N=4 * L2, D=8, d_in=d_in2,
+                                 block_l=bl2, block_n=512, m=8,
+                                 precision="bf16")
+        emit(f"kernels/gram/op_fused_L{L2}", dt_fus * 1e6,
+             f"mode={mode};bitwise_err={err_f:.1e};"
+             f"model_hbm_saved_bytes={model['hbm_saved_by_fused_bytes']}")
+        emit(f"kernels/gram/op_int8_L{L2}", dt_q * 1e6,
+             f"mode={mode};rel_err={err_q:.2e};"
+             f"model_read_vs_bf16="
+             f"{gram_cost_model(L2, N=4*L2, D=8, d_in=d_in2, block_l=bl2, block_n=512, m=8, precision='int8')['tri']['hbm_read_bytes']}"
+             f"/{model8['tri']['hbm_read_bytes']}")
+
+    # ---- PCG convergence budget at L=2048 -------------------------------
+    # the backbone-scale U solve in the regime that motivates the Jacobi
+    # preconditioner (the test_solvers "backbone-scale problem", scaled to
+    # L=2048): a FULL-RANK Gram (N >= L) whose conditioning lives on
+    # diag(G) — feature columns spanning a 10^3 scale range, the typical
+    # un-normalized activation spectrum — with a small proximal shift.
+    # The recorded iteration counts ARE the per-ADMM-step solve budget;
+    # plain CG not converging inside maxiter here is the datum that makes
+    # "pcg" the backbone-scale solver choice.
+    from repro.core.solvers import sum_sylvester_cg
+
+    L3, N3, r3 = 2048, 4096, 8
+    k1c, k2c, k3c = jax.random.split(jax.random.PRNGKey(17), 3)
+    scales3 = jnp.logspace(0, 3, L3)
+    H3 = jax.random.normal(k1c, (N3, L3)) / jnp.sqrt(N3) * scales3
+    G3 = H3.T @ H3
+    A3 = jax.random.normal(k2c, (r3, r3)) / jnp.sqrt(r3)
+    M3 = A3 @ A3.T + 0.1 * jnp.eye(r3)
+    rhs3 = jax.random.normal(k3c, (L3, r3))
+    c3, tol3, maxiter3 = 1e-2, 1e-6, 1000
+    _, it_cg = sum_sylvester_cg(G3, M3, rhs3, c3, tol=tol3,
+                                maxiter=maxiter3, return_info=True)
+    _, it_pcg = sum_sylvester_cg(G3, M3, rhs3, c3, tol=tol3,
+                                 maxiter=maxiter3, precond="jacobi",
+                                 return_info=True)
+    results["pcg_budget"] = {
+        "L": L3, "N": N3, "r": r3, "c": c3, "tol": tol3,
+        "maxiter": maxiter3, "iters_cg": int(it_cg),
+        "iters_pcg": int(it_pcg),
+        "cg_converged": int(it_cg) < maxiter3,
+        "pcg_converged": int(it_pcg) < maxiter3,
+    }
+    emit("kernels/pcg_budget/L2048", float(it_pcg),
+         f"iters_cg={int(it_cg)};iters_pcg={int(it_pcg)};tol={tol3};"
+         f"maxiter={maxiter3}")
+
     # modeled trajectory rows (the acceptance contract: >= 1.8x at L >= 256)
     model_rows = []
     for row in results["gram_model"]:
         ratio = row["flops_ratio_G_dense_over_tri"]
+        fused = row.get("fused")
         model_rows.append([
             row["L"], row["block_l"], row["nl"], row["precision"],
             row["dense"]["mxu_flops_G"], row["tri"]["mxu_flops_G"], ratio,
             row["dense"]["hbm_read_bytes"], row["tri"]["hbm_read_bytes"],
+            fused["hbm_read_bytes"] if fused else "",
+            row["tri"]["h_materialize_write_bytes"],
+            row.get("hbm_saved_by_fused_bytes", ""),
         ])
         if row["precision"] == "fp32":
             emit(f"kernels/gram_model/L{row['L']}_bl{row['block_l']}", 0.0,
-                 f"flops_ratio_G={ratio:.2f};nl={row['nl']}")
+                 f"flops_ratio_G={ratio:.2f};nl={row['nl']};"
+                 f"fused_saves={row['hbm_saved_by_fused_bytes']}")
     write_csv("gram_model",
               ["L", "block_l", "nl", "precision", "flops_G_dense",
                "flops_G_tri", "flops_ratio_G", "hbm_read_dense",
-               "hbm_read_tri"], model_rows)
+               "hbm_read_tri", "hbm_read_fused", "h_materialize_write",
+               "hbm_saved_by_fused"], model_rows)
 
     # ---- swa -----------------------------------------------------------
     q = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 256, 64))

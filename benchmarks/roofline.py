@@ -28,32 +28,44 @@ def load_results():
 
 
 def run_gram():
-    """Roofline placement of the three Gram strategies: compute-time vs
+    """Roofline placement of the Gram strategies: compute-time vs
     memory-time per modeled config, and the dominant resource.  The
     triangular kernel halves the compute leg at fixed HBM traffic, so
     at backbone scale (compute-dominated L >= 2048) the modeled speedup
-    approaches the FLOPs ratio; bf16 halves the memory leg instead."""
+    approaches the FLOPs ratio; bf16 halves the memory leg, int8 quarters
+    it (unfused only), and the fused strategy trades the H materialize
+    write + stream reads for recomputed feature FLOPs — its memory leg
+    covers X/W traffic only (``mxu_flops_feature`` is counted for every
+    strategy: one-time for the materialized ones, per-visit for fused;
+    materialized rows also pay the H write in the memory leg)."""
     from benchmarks.kernels import gram_model_sweep
 
     rows = []
     for row in gram_model_sweep():
-        for strat in ("two_matmul", "dense", "tri"):
+        by_strat = {}
+        for strat in ("two_matmul", "dense", "tri", "fused"):
+            if strat not in row:
+                continue
             s = row[strat]
-            flops = s["mxu_flops_G"] + s["mxu_flops_R"]
-            bytes_total = s["hbm_read_bytes"] + s["hbm_write_bytes"]
+            flops = (s["mxu_flops_G"] + s["mxu_flops_R"]
+                     + s["mxu_flops_feature"])
+            bytes_total = (s["hbm_read_bytes"] + s["hbm_write_bytes"]
+                           + s["h_materialize_write_bytes"])
             compute_s = flops / PEAK_FLOPS
             memory_s = bytes_total / PEAK_HBM_BPS
+            by_strat[strat] = max(compute_s, memory_s)
             rows.append([
                 row["L"], row["block_l"], row["precision"], strat, flops,
                 bytes_total, compute_s, memory_s,
                 "compute" if compute_s >= memory_s else "memory",
             ])
         if row["precision"] == "fp32":
-            dense_t = max(rows[-2][6], rows[-2][7])
-            tri_t = max(rows[-1][6], rows[-1][7])
             emit(
                 f"roofline/gram/L{row['L']}_bl{row['block_l']}", 0.0,
-                f"model_speedup_tri_vs_dense={dense_t / tri_t:.2f};"
+                f"model_speedup_tri_vs_dense="
+                f"{by_strat['dense'] / by_strat['tri']:.2f};"
+                f"model_speedup_fused_vs_tri="
+                f"{by_strat['tri'] / by_strat['fused']:.2f};"
                 f"flops_ratio_G={row['flops_ratio_G_dense_over_tri']:.2f};"
                 f"dom={rows[-1][8]}",
             )

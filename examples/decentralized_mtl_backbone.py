@@ -1,44 +1,52 @@
-"""End-to-end driver: decentralized multi-task learning over a ~100M frozen
-transformer backbone — the paper's technique at framework scale
-(DESIGN.md §3), on a simulated 8-device mesh.
+"""End-to-end driver: decentralized multi-task learning over a frozen
+transformer backbone with a 2048-wide ELM hidden layer — the paper's
+technique at backbone scale (DESIGN.md §3), on the fused stats pipeline.
 
-Pipeline (a few hundred "steps" = feature batches + ADMM rounds):
-  1. build a ~100M-param qwen3-style backbone, randomly initialized and
-     frozen (the ELM philosophy: untrained features + analytic heads);
-  2. 8 agents (mesh data axis), each with a private classification task
-     over its own token streams — data never leaves the agent;
-  3. stream batches through the backbone, accumulate per-agent Gram
-     statistics (Pallas `gram` kernel on TPU; jnp path here);
-  4. fit (U_t, A_t) with sharded DMTL-ELM: ring consensus via ppermute;
-  5. compare against Local-ELM heads (no sharing).
+Pipeline:
+  1. build a small qwen3-style backbone, randomly initialized and frozen
+     (the ELM philosophy: untrained features + analytic heads);
+  2. 4 agents, each with a private classification task over its own token
+     streams — data never leaves the agent;
+  3. stream batches through the backbone to pooled d_model features, then
+     fold them into per-agent Gram statistics with the FUSED producer: the
+     frozen ELM hidden layer ``H = sigmoid(X W + b)`` (d_model -> L=2048)
+     is computed INSIDE the triangular Pallas Gram kernel, so the
+     (N, 2048) hidden features never materialize in HBM;
+  4. fit (U_t, A_t) with DMTL-ELM ring consensus, ``u_solver="pcg"`` —
+     matrix-free Jacobi-preconditioned CG, the L=2048-scale solver (no
+     O(L^3) factorization ever forms);
+  5. compare against Local-ELM heads (no sharing) on held-out data.
 
 Run:  PYTHONPATH=src python examples/decentralized_mtl_backbone.py
+(CPU interpret-mode Pallas; a few minutes, dominated by the PCG solves.)
 """
 
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.dmtl_elm import DMTLELMConfig
-from repro.core.heads import (
-    accumulate_stats, fit_head, init_stats, pooled_features,
-)
+from repro.core.elm import make_feature_map
+from repro.core.graph import ring
+from repro.core.heads import pooled_features
+from repro.data.pipeline import stream_sufficient_stats
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_model, param_count
 
-N_AGENTS = 8
+N_AGENTS = 4
 N_CLASSES = 4
-BATCH, SEQ = 16, 64
-N_BATCHES = 12          # feature-accumulation rounds per agent
-ADMM_ITERS = 300
+L_HIDDEN = 2048         # ELM hidden width — the paper's L, backbone scale
+BATCH, SEQ = 64, 64
+N_BATCHES = 4           # feature-accumulation rounds per agent
+ADMM_ITERS = 8          # each iteration runs a full PCG solve per agent
 
 
 def backbone_config():
     return ModelConfig(
-        name="backbone-100m", family="dense", n_layers=8, d_model=640,
-        n_heads=10, n_kv_heads=5, d_ff=2560, vocab_size=32000,
+        name="backbone-12m", family="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=4, d_ff=1024, vocab_size=32000,
         qk_norm=True, dtype="float32",
     )
 
@@ -58,62 +66,81 @@ def make_task_batch(key, task_id, n=BATCH):
     return tokens.astype(jnp.int32), jax.nn.one_hot(labels, N_CLASSES)
 
 
-def main():
-    cfg = backbone_config()
-    params = init_model(jax.random.PRNGKey(0), cfg)
-    print(f"backbone params: {param_count(params)/1e6:.1f}M (frozen)")
-
-    mesh = jax.make_mesh((N_AGENTS,), ("data",))
-    d = cfg.d_model
-
-    stats = init_stats(N_AGENTS, d, N_CLASSES)
-    for b in range(N_BATCHES):
-        keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(1), b),
-                                N_AGENTS)
+def agent_batches(params, cfg, n_batches=N_BATCHES):
+    """Yield (X, T) stream batches: pooled backbone features (m, B, d_model)
+    + one-hot targets. The RAW-feature stream the fused producer consumes —
+    no (N, L) hidden activations are ever formed here."""
+    for b in range(n_batches):
+        keys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(1), b), N_AGENTS)
         toks, labs = [], []
         for t in range(N_AGENTS):
             tok, lab = make_task_batch(keys[t], t)
             toks.append(tok)
             labs.append(lab)
-        toks = jnp.stack(toks)      # (m, B, S)
-        labs = jnp.stack(labs)      # (m, B, C)
-        feats = pooled_features(params, cfg, toks)
-        stats = accumulate_stats(stats, feats, labs)
-        print(f"  batch {b+1}/{N_BATCHES}: accumulated "
-              f"{int(stats.n[0])} samples/agent", end="\r")
-    print()
+        feats = pooled_features(params, cfg, jnp.stack(toks))  # (m, B, d)
+        yield feats, jnp.stack(labs)
 
-    cfg_admm = DMTLELMConfig(r=8, mu1=1.0, mu2=1.0, tau=2.0, zeta=1.0,
-                             iters=ADMM_ITERS)
-    head, diags = fit_head(stats, mesh, ("data",), cfg_admm)
-    print(f"ADMM consensus primal residual: "
-          f"{float(diags['primal_sq'][0]):.3e} -> "
-          f"{float(diags['primal_sq'][-1]):.3e}")
 
-    # evaluation on fresh data
+def main():
+    cfg = backbone_config()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    print(f"backbone params: {param_count(params)/1e6:.1f}M (frozen)")
+
+    # frozen ELM hidden layer d_model -> L, shared across agents; applied
+    # INSIDE the Gram kernel by the fused producer
+    fmap = make_feature_map(
+        jax.random.PRNGKey(7), cfg.d_model, L_HIDDEN, dist="normal")
+    print(f"ELM hidden layer: {cfg.d_model} -> L={fmap.L} (fused into the "
+          f"Gram kernel; H never materializes)")
+
+    t0 = time.time()
+    stats = stream_sufficient_stats(
+        agent_batches(params, cfg),
+        producer="fused", feature_map=fmap, use_pallas=True,
+    )
+    print(f"streamed {int(stats.n[0])} samples/agent into (G, R) stats "
+          f"[{time.time()-t0:.1f}s, G: {stats.G.shape}]")
+
+    cfg_admm = DMTLELMConfig(
+        r=8, mu1=1.0, mu2=1.0, tau=2.0, zeta=1.0, iters=ADMM_ITERS,
+        u_solver="pcg", stats_producer="fused",
+    )
+    t0 = time.time()
+    state, diags = engine.fit_dense(stats, ring(N_AGENTS), cfg_admm)
+    jax.block_until_ready(state.U)
+    print(f"DMTL-ELM fit (pcg, {ADMM_ITERS} iters) in {time.time()-t0:.1f}s")
+    print(f"  objective: {float(diags['objective'][0]):.1f} -> "
+          f"{float(diags['objective'][-1]):.1f}")
+    print(f"  consensus residual: {float(diags['consensus'][0]):.3e} -> "
+          f"{float(diags['consensus'][-1]):.3e}")
+
+    # evaluation on fresh data — eval features ARE materialized (eval is
+    # small); training-side H never was
     keys = jax.random.split(jax.random.PRNGKey(99), N_AGENTS)
     toks, labs = [], []
     for t in range(N_AGENTS):
         tok, lab = make_task_batch(keys[t], t, n=64)
         toks.append(tok)
         labs.append(lab)
-    toks, labs = jnp.stack(toks), jnp.stack(labs)
-    feats = pooled_features(params, cfg, toks)
+    labs = jnp.stack(labs)
+    feats = pooled_features(params, cfg, jnp.stack(toks))
+    H = fmap(feats)                                        # (m, B, L)
 
-    pred = head.predict_all(feats)
+    pred = jnp.einsum("mbl,mlr,mrd->mbd", H, state.U, state.A)
     acc_dmtl = float(jnp.mean(
         jnp.argmax(pred, -1) == jnp.argmax(labs, -1)))
 
     # Local-ELM heads: per-agent ridge on its own stats only
-    eye = jnp.eye(d)
-    beta = jnp.linalg.solve(stats.G + 1.0 * eye, stats.R)
+    eye = jnp.eye(L_HIDDEN)
+    beta = jnp.linalg.solve(stats.G + cfg_admm.mu2 * eye, stats.R)
     acc_local = float(jnp.mean(
-        jnp.argmax(jnp.einsum("mbl,mld->mbd", feats, beta), -1)
+        jnp.argmax(jnp.einsum("mbl,mld->mbd", H, beta), -1)
         == jnp.argmax(labs, -1)))
 
     print(f"Local-ELM heads accuracy: {acc_local:.3f}")
     print(f"DMTL-ELM  heads accuracy: {acc_dmtl:.3f}")
-    print("decentralized shared-subspace heads fitted over the mesh ✓")
+    print("fused-stats decentralized heads fitted at L=2048 ✓")
 
 
 if __name__ == "__main__":

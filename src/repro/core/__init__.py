@@ -36,8 +36,11 @@ from repro.core.engine import (
     init_stats,
     jacobian_schedule,
     objective_from_stats,
+    produce_stats,
     register_u_solver,
+    STATS_PRODUCERS,
     sufficient_stats,
+    sufficient_stats_fused,
 )
 from repro.core.graph import (
     EdgeSchedule,
@@ -50,6 +53,7 @@ from repro.core.graph import (
     hypercube,
     paper_fig2a,
     ring,
+    spectral_gap,
     star,
 )
 from repro.core.mtl_elm import (
@@ -76,14 +80,16 @@ from repro.core.sharded_dmtl import dmtl_elm_fit_sharded, dmtl_fit_from_stats
 __all__ = [
     "ELMFeatureMap", "elm_fit", "elm_objective", "elm_predict", "make_feature_map",
     "EdgeSchedule", "Graph", "chain", "compile_edge_schedule", "complete",
-    "erdos", "expander", "hypercube", "paper_fig2a", "ring", "star",
+    "erdos", "expander", "hypercube", "paper_fig2a", "ring", "spectral_gap",
+    "star",
     "AgentState", "ConsensusConfig", "NeighborMsgs", "SufficientStats",
     "U_SOLVERS", "accumulate_stats", "accumulate_stats_chunked", "agent_update",
     "dual_step", "fit_async", "fit_colored", "fit_dense", "fit_sharded",
     "fit_sharded_graph",
     "graph_matches_torus", "init_stats",
-    "jacobian_schedule", "objective_from_stats", "register_u_solver",
-    "sufficient_stats",
+    "jacobian_schedule", "objective_from_stats", "produce_stats",
+    "register_u_solver", "STATS_PRODUCERS", "sufficient_stats",
+    "sufficient_stats_fused",
     "MTLELMConfig", "MTLELMState", "mtl_elm_fit", "mtl_elm_fit_from_stats",
     "mtl_elm_predict", "mtl_objective",
     "DMTLELMConfig", "DMTLELMState", "augmented_lagrangian", "consensus_residual",

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.engine import ConsensusConfig, DenseState, sufficient_stats
+from repro.core.engine import ConsensusConfig, DenseState
 from repro.core.graph import Graph
 
 # Public names kept for API compatibility: the config and stacked-state types
@@ -82,6 +82,7 @@ def dmtl_elm_fit(
     T: jax.Array,
     g: Graph,
     cfg: DMTLELMConfig,
+    feature_map=None,
 ) -> tuple[DMTLELMState, dict]:
     """Run Algorithm 2 (or Algorithm 3 if cfg.first_order) to cfg.iters.
 
@@ -89,9 +90,15 @@ def dmtl_elm_fit(
     per-iteration 'objective' (primal, eq. 12), 'lagrangian' (eq. 13) and
     'consensus' residuals.  The Gram reduction honors
     ``cfg.stats_precision`` ("bf16" streams H/T tiles at half HBM traffic
-    with fp32 accumulators).
+    with fp32 accumulators, "int8" per-tile-quantized 1-byte tiles) and
+    ``cfg.stats_producer`` — with ``stats_producer="fused"`` the first
+    argument is the RAW input X (m, N, d_in) and ``feature_map=`` (the
+    frozen hidden layer, applied inside the Gram kernel) is required.
     """
-    stats = sufficient_stats(H, T, precision=cfg.stats_precision)
+    stats = engine.produce_stats(
+        H, T, producer=cfg.stats_producer, feature_map=feature_map,
+        precision=cfg.stats_precision,
+    )
     return engine.fit_dense(stats, g, cfg)
 
 
@@ -110,6 +117,7 @@ def fit(
     tape=None,
     channel=None,
     aged_duals: bool = False,
+    feature_map=None,
 ):
     """One entry point, five executors over the SAME ``agent_update`` body.
 
@@ -136,10 +144,16 @@ def fit(
       sampled here over ``cfg.iters`` ticks of ``g``); ``aged_duals=True``
       additionally ships the received duals through the lossy channel.
 
+    The stats pass honors ``cfg.stats_producer``: with ``"fused"`` the
+    first argument is the RAW per-agent input X (m, N, d_in) and
+    ``feature_map=`` is required — the frozen ELM hidden layer runs inside
+    the Gram kernel, so H never materializes (``engine.produce_stats``).
+
     Executor-specific kwargs are validated: ``staleness``/``order`` only
     apply to "colored", ``schedule`` to "colored"/"sharded",
-    ``mesh``/``agent_axes`` only to "sharded", and ``tape``/``channel``/
-    ``aged_duals`` only to "async"; passing them elsewhere raises rather
+    ``mesh``/``agent_axes`` only to "sharded", ``tape``/``channel``/
+    ``aged_duals`` only to "async", and ``feature_map`` only to
+    ``cfg.stats_producer="fused"``; passing them elsewhere raises rather
     than silently ignoring them.
 
     dense/colored/async return ``(DMTLELMState, diagnostics)``; sharded
@@ -149,6 +163,21 @@ def fit(
     """
     # All validation happens BEFORE the Gram reduction: a bad call must not
     # pay the O(m N L^2) stats pass just to raise.
+    if cfg.stats_producer not in engine.STATS_PRODUCERS:
+        raise ValueError(
+            f"unknown cfg.stats_producer {cfg.stats_producer!r}; expected "
+            f"one of {engine.STATS_PRODUCERS}"
+        )
+    if cfg.stats_producer == "fused" and feature_map is None:
+        raise ValueError(
+            "cfg.stats_producer='fused' needs feature_map= (the frozen "
+            "ELMFeatureMap applied inside the Gram kernel)"
+        )
+    if cfg.stats_producer != "fused" and feature_map is not None:
+        raise ValueError(
+            "feature_map= only applies to cfg.stats_producer='fused', got "
+            f"stats_producer={cfg.stats_producer!r}"
+        )
     if executor not in ("dense", "sharded", "colored", "async"):
         raise ValueError(
             f"unknown executor {executor!r}; expected 'dense', 'sharded', "
@@ -211,7 +240,10 @@ def fit(
             or any(s < 2 for s in sizes)
             or not engine.graph_matches_torus(g, sizes)
         )
-    stats = sufficient_stats(H, T, precision=cfg.stats_precision)
+    stats = engine.produce_stats(
+        H, T, producer=cfg.stats_producer, feature_map=feature_map,
+        precision=cfg.stats_precision,
+    )
     if executor == "dense":
         return engine.fit_dense(stats, g, cfg)
     if executor == "colored":

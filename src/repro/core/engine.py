@@ -10,18 +10,38 @@ so the engine is organized around a shared :class:`SufficientStats` type and
 a single pure per-agent round, instead of one implementation per execution
 backend:
 
-  ``sufficient_stats`` / ``accumulate_stats``
-      The single stats producer — the fused Pallas ``gram`` kernel (TPU) or
-      its jnp oracle (``use_pallas=False``).  On the Pallas path a stacked
+  ``sufficient_stats`` / ``sufficient_stats_fused`` / ``accumulate_stats``
+      The stats producers — the Pallas ``gram`` kernels (TPU) or their jnp
+      oracles (``use_pallas=False``).  On the Pallas path a stacked
       (m, N, L) input is ONE agent-batched triangular-grid kernel launch
-      (``gram_batched``: grid (m, tri, n), mirroring G's symmetric tiles)
-      rather than m vmapped launches.  ``precision="bf16"`` streams H/T
-      tiles in bf16 with fp32 accumulators (half the stats-pass HBM read
-      traffic; ~4e-3 relative error on G/R — see
-      ``benchmarks/convergence.run_precision`` for the ADMM impact).
+      (``gram_batched``: grid (m, tri, n + 1), the trailing step mirroring
+      G's symmetric tiles in-kernel) rather than m vmapped launches.
       Streaming accumulation is chunked addition of producer outputs, so
       chunked == one-shot exactly; ``compensated=True`` upgrades the
       chunked fold to Kahan summation for long low-magnitude streams.
+      ``produce_stats`` dispatches on the producer/precision matrix
+      (``cfg.stats_producer`` x ``cfg.stats_precision`` — oracle relations
+      asserted in tests):
+
+        materialized fp32   H computed in XLA, streamed by the triangular
+                            kernel.  The parity oracle for every row below
+                            (== ``gram_ref``, the jnp path).
+        materialized bf16   bf16 tiles, fp32 accumulators: half the H read
+                            traffic, ~4e-3 relative error on G/R — see
+                            ``benchmarks/convergence.run_precision`` for
+                            the ADMM impact.
+        materialized int8   per-(BN, BL)-tile maxabs/127 scales +
+                            stochastic rounding, int8 MXU tiles with exact
+                            int32 tile sums (half of bf16 again).
+                            ``quant_seed`` selects the rounding stream;
+                            the mean over seeds converges to the fp32
+                            truth (unbiased).
+        fused fp32          H = act(X W + b) computed INSIDE the kernel
+                            from raw features; H never hits HBM.
+                            Bitwise-identical to materialized fp32.
+        fused bf16          in-kernel hidden tiles rounded to bf16 before
+                            the MXU — matches the materialized bf16
+                            stream bit for bit.
   ``agent_update``
       The one ADMM round body for ONE agent (paper eqs. 19/23 + 21): U-solve
       through the solver registry (``kron`` | ``sylvester`` | ``cg`` |
@@ -146,7 +166,16 @@ class SufficientStats(NamedTuple):
 
 
 def _gram_one(H: jax.Array, T: jax.Array, use_pallas: bool,
-              precision: str = "fp32"):
+              precision: str = "fp32", quant_seed=0):
+    if precision == "int8":
+        # int8 always routes through the kernels package — the quantization
+        # (per-tile scales + stochastic rounding) is part of the op; with
+        # use_pallas=False the op's own jnp emulation runs instead of the
+        # int8-streaming kernel.
+        from repro.kernels.gram.ops import gram as gram_op
+
+        return gram_op(H, T, precision="int8", force_ref=not use_pallas,
+                       quant_seed=quant_seed)
     if use_pallas:
         from repro.kernels.gram.ops import gram as gram_op
 
@@ -164,31 +193,112 @@ def _gram_one(H: jax.Array, T: jax.Array, use_pallas: bool,
 
 def sufficient_stats(
     H: jax.Array, T: jax.Array, use_pallas: bool = False,
-    precision: str = "fp32",
+    precision: str = "fp32", quant_seed=0,
 ) -> SufficientStats:
-    """The single stats producer. H: (N, L) or (m, N, L); T matches.
+    """The MATERIALIZED stats producer. H: (N, L) or (m, N, L); T matches.
 
     Routes through the fused Pallas ``gram`` kernel when requested (one HBM
     pass for both products on TPU) and its jnp oracle otherwise.  A stacked
     (m, N, L) input on the Pallas path is ONE agent-batched triangular
     kernel launch (``gram_batched``) covering all m agents, not m vmapped
     launches.  ``precision="bf16"`` streams the feature/target tiles in
-    bf16 with fp32 accumulation; ``t2`` (a scalar diagnostics reduction)
-    always stays fp32.
+    bf16 with fp32 accumulation; ``precision="int8"`` streams per-tile-
+    quantized 1-byte tiles (stochastic rounding over ``quant_seed``; see
+    ``repro.kernels.gram.ops``); ``t2`` (a scalar diagnostics reduction)
+    always stays fp32.  See :func:`sufficient_stats_fused` for the producer
+    that never materializes H at all.
     """
     if H.ndim == 2:
-        G, R = _gram_one(H, T, use_pallas, precision)
+        G, R = _gram_one(H, T, use_pallas, precision, quant_seed)
         n = jnp.asarray(H.shape[0], jnp.float32)
-    elif use_pallas:
+    elif use_pallas or precision == "int8":
         from repro.kernels.gram.ops import gram_batched
 
-        G, R = gram_batched(H, T, precision=precision)
+        G, R = gram_batched(H, T, precision=precision,
+                            force_ref=not use_pallas, quant_seed=quant_seed)
         n = jnp.full(H.shape[:-2], H.shape[-2], jnp.float32)
     else:
         G, R = jax.vmap(lambda h, t: _gram_one(h, t, False, precision))(H, T)
         n = jnp.full(H.shape[:-2], H.shape[-2], jnp.float32)
     t2 = jnp.sum(jnp.square(T.astype(jnp.float32)), axis=(-2, -1))
     return SufficientStats(G=G, R=R, n=n, t2=t2)
+
+
+def sufficient_stats_fused(
+    X: jax.Array, feature_map, T: jax.Array, use_pallas: bool = False,
+    precision: str = "fp32",
+) -> SufficientStats:
+    """The FUSED stats producer: statistics straight from raw features.
+
+    X: (N, d_in) or (m, N, d_in) raw (backbone) inputs; ``feature_map`` a
+    frozen :class:`repro.core.elm.ELMFeatureMap` shared across agents; T
+    matches X's leading shape.  The hidden layer ``H = act(X W + b)`` is
+    computed INSIDE the Gram kernel (``gram_fused``) and never written to
+    HBM at full precision — the O(N L) materialize write + re-read of the
+    unfused pipeline disappears.  Bitwise-identical to
+    ``sufficient_stats(feature_map(X), T)`` in fp32 (asserted in tests);
+    ``precision="bf16"`` rounds the in-kernel hidden tiles like the
+    materialized bf16 stream.  int8 is not offered fused (its maxabs
+    scale pass needs a materialized H — use the unfused int8 stream).
+    """
+    from repro.kernels.gram.ops import gram_fused
+
+    G, R = gram_fused(
+        X, feature_map.W, feature_map.b, T,
+        activation=feature_map.activation, precision=precision,
+        force_ref=not use_pallas,
+    )
+    if X.ndim == 2:
+        n = jnp.asarray(X.shape[0], jnp.float32)
+    else:
+        n = jnp.full(X.shape[:-2], X.shape[-2], jnp.float32)
+    t2 = jnp.sum(jnp.square(T.astype(jnp.float32)), axis=(-2, -1))
+    return SufficientStats(G=G, R=R, n=n, t2=t2)
+
+
+STATS_PRODUCERS = ("materialized", "fused")
+
+
+def produce_stats(
+    batch: jax.Array, T: jax.Array, *, producer: str = "materialized",
+    feature_map=None, use_pallas: bool = False, precision: str = "fp32",
+    quant_seed=0,
+) -> SufficientStats:
+    """Dispatch ONE batch through the configured stats producer.
+
+    ``producer="materialized"`` treats ``batch`` as the hidden features H;
+    ``producer="fused"`` treats it as raw inputs X and needs
+    ``feature_map=`` (the frozen ELM hidden layer, applied in-kernel).
+    This is the single validation point for the
+    ``cfg.stats_producer`` plumbing (``dmtl_elm.fit``,
+    ``data.pipeline.stream_sufficient_stats``).
+    """
+    if producer not in STATS_PRODUCERS:
+        raise ValueError(
+            f"unknown stats producer {producer!r}; expected one of "
+            f"{STATS_PRODUCERS}"
+        )
+    if producer == "fused":
+        if feature_map is None:
+            raise ValueError(
+                "producer='fused' needs feature_map= (the frozen "
+                "ELMFeatureMap whose hidden layer runs in-kernel)"
+            )
+        if precision == "int8":
+            raise ValueError(
+                "precision='int8' is the unfused (materialized) stream; "
+                "the fused producer supports fp32/bf16"
+            )
+        return sufficient_stats_fused(batch, feature_map, T,
+                                      use_pallas=use_pallas,
+                                      precision=precision)
+    if feature_map is not None:
+        raise ValueError(
+            "feature_map= only applies to producer='fused', got "
+            f"producer={producer!r}"
+        )
+    return sufficient_stats(batch, T, use_pallas=use_pallas,
+                            precision=precision, quant_seed=quant_seed)
 
 
 def init_stats(m: int, L: int, d: int, dtype=jnp.float32) -> SufficientStats:
@@ -203,9 +313,15 @@ def init_stats(m: int, L: int, d: int, dtype=jnp.float32) -> SufficientStats:
 def accumulate_stats(
     stats: SufficientStats, H: jax.Array, T: jax.Array,
     use_pallas: bool = False, precision: str = "fp32",
+    producer: str = "materialized", feature_map=None, quant_seed=0,
 ) -> SufficientStats:
-    """Fold one feature batch into running stats (streaming accumulation)."""
-    b = sufficient_stats(H, T, use_pallas=use_pallas, precision=precision)
+    """Fold one feature batch into running stats (streaming accumulation).
+
+    ``producer="fused"`` (with ``feature_map=``) accepts raw-input batches
+    and runs the hidden layer in-kernel — see :func:`produce_stats`."""
+    b = produce_stats(H, T, producer=producer, feature_map=feature_map,
+                      use_pallas=use_pallas, precision=precision,
+                      quant_seed=quant_seed)
     return SufficientStats(
         G=stats.G + b.G, R=stats.R + b.R, n=stats.n + b.n, t2=stats.t2 + b.t2
     )
@@ -222,15 +338,18 @@ def _kahan_add(total: jax.Array, comp: jax.Array, delta: jax.Array):
 def accumulate_stats_chunked(
     stats: SufficientStats, H: jax.Array, T: jax.Array,
     chunk: int, use_pallas: bool = False, precision: str = "fp32",
-    compensated: bool = False,
+    compensated: bool = False, producer: str = "materialized",
+    feature_map=None, quant_seed=0,
 ) -> SufficientStats:
     """Fold a long batch in ``chunk``-row pieces (bounded peak memory).
 
-    The tail chunk is zero-padded; zero rows contribute nothing to G, R or
-    t2, so chunked accumulation equals one-shot accumulation exactly.  The
-    sample count ``n`` uses the true (unpadded) batch size and — like every
-    other leaf — comes out per-agent ``(m,)``, identical in shape and value
-    to the one-shot :func:`accumulate_stats` path.
+    The scan walks the full chunks; a ragged tail is folded by one extra
+    producer call on the true tail rows.  (Zero-padding the tail would be
+    wrong for the fused producer: its hidden layer maps zero input rows to
+    ``act(b) != 0``, which would pollute G.)  The sample count ``n`` uses
+    the true batch size and — like every other leaf — comes out per-agent
+    ``(m,)``, identical in shape and value to the one-shot
+    :func:`accumulate_stats` path.
 
     ``compensated=True`` switches the chunk fold to Kahan summation: the
     fp32 accumulators carry a running compensation term, so the per-chunk
@@ -238,15 +357,26 @@ def accumulate_stats_chunked(
     count — the natural companion of ``precision="bf16"`` streams, whose
     per-chunk contributions are already rounded and would otherwise lose
     their low bits against a large running total.
+
+    ``producer="fused"`` (with ``feature_map=``) chunks raw-input rows the
+    same way — the hidden layer runs in-kernel per chunk.  int8 chunks
+    fold with per-chunk rounding seeds (``quant_seed + chunk index``) so
+    chunk errors stay independent.
     """
     m, B = H.shape[0], H.shape[1]
-    k = -(-B // chunk)
-    pad = k * chunk - B
-    Hp = jnp.pad(H, ((0, 0), (0, pad), (0, 0)))
-    Tp = jnp.pad(T, ((0, 0), (0, pad), (0, 0)))
-    # (k, m, chunk, ...) so the scan walks chunks
-    Hc = Hp.reshape(m, k, chunk, H.shape[-1]).swapaxes(0, 1)
-    Tc = Tp.reshape(m, k, chunk, T.shape[-1]).swapaxes(0, 1)
+    k = B // chunk
+    tail = B - k * chunk
+    # (k, m, chunk, ...) so the scan walks the full chunks
+    Hc = H[:, :k * chunk].reshape(m, k, chunk, H.shape[-1]).swapaxes(0, 1)
+    Tc = T[:, :k * chunk].reshape(m, k, chunk, T.shape[-1]).swapaxes(0, 1)
+    seeds = jnp.asarray(quant_seed, jnp.int32) + jnp.arange(k, dtype=jnp.int32)
+    tail_seed = jnp.asarray(quant_seed, jnp.int32) + k
+
+    def chunk_stats(h, t, seed):
+        return produce_stats(h, t, producer=producer,
+                             feature_map=feature_map,
+                             use_pallas=use_pallas, precision=precision,
+                             quant_seed=seed)
     # scalar n/t2 (the (G, R)-only construction) must be broadcast to the
     # per-agent shape the fold produces, or the scan carry types mismatch
     # (and downstream consumers would see a scalar n from the chunked path
@@ -258,27 +388,35 @@ def accumulate_stats_chunked(
         zeros = (jnp.zeros_like(stats.G), jnp.zeros_like(stats.R),
                  jnp.zeros_like(t2_0))
 
-        def fold_kahan(carry, ht):
+        def fold_kahan(carry, hts):
             (G, cG), (R, cR), (t2, ct2) = carry
-            h, t = ht
-            b = sufficient_stats(h, t, use_pallas=use_pallas,
-                                 precision=precision)
+            h, t, seed = hts
+            b = chunk_stats(h, t, seed)
             return (_kahan_add(G, cG, b.G), _kahan_add(R, cR, b.R),
                     _kahan_add(t2, ct2, b.t2)), None
 
-        ((G, _), (R, _), (t2, _)), _ = jax.lax.scan(
+        ((G, cG), (R, cR), (t2, ct2)), _ = jax.lax.scan(
             fold_kahan,
             ((stats.G, zeros[0]), (stats.R, zeros[1]), (t2_0, zeros[2])),
-            (Hc, Tc),
+            (Hc, Tc, seeds),
         )
+        if tail:
+            b = chunk_stats(H[:, k * chunk:], T[:, k * chunk:], tail_seed)
+            (G, _), (R, _), (t2, _) = (
+                _kahan_add(G, cG, b.G), _kahan_add(R, cR, b.R),
+                _kahan_add(t2, ct2, b.t2))
         return SufficientStats(G=G, R=R, n=n_0 + B, t2=t2)
 
-    def fold(carry, ht):
-        h, t = ht
-        b = sufficient_stats(h, t, use_pallas=use_pallas, precision=precision)
+    def fold(carry, hts):
+        h, t, seed = hts
+        b = chunk_stats(h, t, seed)
         return (carry[0] + b.G, carry[1] + b.R, carry[2] + b.t2), None
 
-    (G, R, t2), _ = jax.lax.scan(fold, (stats.G, stats.R, t2_0), (Hc, Tc))
+    (G, R, t2), _ = jax.lax.scan(fold, (stats.G, stats.R, t2_0),
+                                 (Hc, Tc, seeds))
+    if tail:
+        b = chunk_stats(H[:, k * chunk:], T[:, k * chunk:], tail_seed)
+        G, R, t2 = G + b.G, R + b.R, t2 + b.t2
     return SufficientStats(G=G, R=R, n=n_0 + B, t2=t2)
 
 
@@ -343,8 +481,17 @@ class ConsensusConfig:
     # Gram-pass precision for entry points that reduce raw (H, T) to stats:
     # "bf16" streams feature/target tiles in bf16 with fp32 accumulators
     # (half the stats HBM read traffic; see benchmarks/convergence.
-    # run_precision for the measured ADMM convergence impact).
+    # run_precision for the measured ADMM convergence impact); "int8"
+    # streams per-tile-quantized 1-byte tiles with stochastic rounding
+    # (half of bf16 again; unfused path only).
     stats_precision: str = "fp32"
+    # Stats producer for entry points that reduce raw data to stats:
+    # "materialized" computes H = g(X W + b) in XLA and streams it through
+    # the triangular kernel (the parity oracle); "fused" computes the
+    # hidden layer INSIDE the Gram kernel from raw inputs (needs a
+    # feature_map= at the call site), so H never hits HBM — see
+    # ``produce_stats`` / ``sufficient_stats_fused``.
+    stats_producer: str = "materialized"
     first_order: bool = False    # FO-DMTL-ELM (Algorithm 3)
     gamma_cap: float = 1.0       # gamma = min(cap, delta * dual/primal) as in §IV
     # Lower bound on the adaptive gamma (0 = the paper's rule untouched).

@@ -326,6 +326,26 @@ def compile_edge_schedule(g: Graph) -> EdgeSchedule:
     )
 
 
+def spectral_gap(g: Graph) -> float:
+    """Spectral gap of ``g``: λ₂ of the normalized Laplacian
+    ``I - D^{-1/2} A D^{-1/2}``.
+
+    The gap controls the consensus mixing rate — ADMM's dual convergence
+    degrades as the gap closes (long chains/rings: gap ~ 1/m²; good
+    expanders: gap bounded away from 0 as m grows; complete graph:
+    m/(m-1), the maximum for connected graphs before bipartite effects).
+    A connected graph has gap > 0; larger is better-mixing.
+    """
+    if g.m < 2:
+        return 0.0
+    a = g.adjacency()
+    d = a.sum(axis=1)
+    inv_sqrt = 1.0 / np.sqrt(np.maximum(d, 1e-30))
+    lap = np.eye(g.m) - inv_sqrt[:, None] * a * inv_sqrt[None, :]
+    eig = np.linalg.eigvalsh(lap)
+    return float(eig[1])
+
+
 def ring(m: int) -> Graph:
     """Ring graph — embeds natively in a TPU ICI torus (neighbor ppermute)."""
     if m < 2:
@@ -375,7 +395,9 @@ def hypercube(d: int) -> Graph:
     return Graph(m=m, edges=edges)
 
 
-def expander(m: int, deg: int, seed: int = 0) -> Graph:
+def expander(
+    m: int, deg: int, seed: int = 0, min_gap: float | None = None
+) -> Graph:
     """Random ``deg``-regular graph — w.h.p. an expander for ``deg >= 3``,
     giving O(log m) diameter at constant per-agent degree.
 
@@ -387,6 +409,12 @@ def expander(m: int, deg: int, seed: int = 0) -> Graph:
     ``(seed, attempt)``-indexed stream, so the result is deterministic for
     a given ``seed`` regardless of how many attempts were burned.  Edges
     are oriented low-to-high and sorted — a canonical edge list.
+
+    ``min_gap=`` certifies expansion instead of trusting "w.h.p.": draws
+    whose normalized-Laplacian :func:`spectral_gap` falls below the
+    threshold are resampled like disconnected ones, so the returned graph
+    is a *verified* expander.  Alon-Boppana caps what is achievable:
+    λ₂ ≲ 1 - 2√(deg-1)/deg (≈ 0.057 at deg=3), so ask for less than that.
     """
     if not 2 <= deg < m:
         raise ValueError(f"expander needs 2 <= deg < m, got deg={deg} m={m}")
@@ -413,12 +441,17 @@ def expander(m: int, deg: int, seed: int = 0) -> Graph:
         if und is None:
             continue
         try:
-            return Graph(m=m, edges=tuple(sorted(und)))
+            g = Graph(m=m, edges=tuple(sorted(und)))
         except ValueError:     # disconnected draw — resample
             continue
+        if min_gap is not None and spectral_gap(g) < min_gap:
+            continue           # connected but poorly mixing — resample
+        return g
     raise ValueError(
-        f"no connected simple {deg}-regular graph on m={m} vertices found "
-        f"in 100 pairing-model draws (seed={seed}); raise deg"
+        f"no connected simple {deg}-regular graph on m={m} vertices"
+        + (f" with spectral gap >= {min_gap}" if min_gap is not None else "")
+        + f" found in 100 pairing-model draws (seed={seed}); raise deg"
+        + (" or lower min_gap" if min_gap is not None else "")
     )
 
 

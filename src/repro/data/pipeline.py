@@ -79,57 +79,75 @@ def stream_sufficient_stats(
     use_pallas: bool = False,
     precision: str = "fp32",
     compensated: bool = False,
+    producer: str = "materialized",
+    feature_map=None,
 ):
     """Fold a stream of per-agent feature batches into SufficientStats.
 
     feature_batches yields (H, T) with H: (m, B, L), T: (m, B, d) — e.g.
     frozen-backbone pooled features and task targets.  Each batch goes
-    through the engine's single Gram producer (on TPU: the agent-batched
+    through the engine's Gram producer (on TPU: the agent-batched
     triangular Pallas kernel, ONE launch per batch for all m agents);
     ``chunk`` caps the rows folded per inner step so arbitrarily large
     stream batches accumulate at bounded peak memory.  Chunked accumulation
     equals one-shot accumulation exactly (zero-row padding is a no-op).
 
+    ``producer="fused"`` (with ``feature_map=``, the frozen ELM hidden
+    layer) switches the stream to RAW inputs: batches yield (X, T) with
+    X: (m, B, d_in), and ``H = act(X W + b)`` is computed inside the Gram
+    kernel — the hidden features never materialize in HBM, at any point of
+    the stream (``engine.produce_stats``).
+
     ``precision="bf16"`` streams the Gram pass in bf16 with fp32
-    accumulators; ``compensated=True`` switches the running G/R/t2 totals
-    to Kahan summation carried across the WHOLE stream — every batch's
-    contribution (itself reduced from zero, chunked if requested) is folded
-    through one compensated add, so long streams of small batches don't
-    lose low bits against the running totals (recommended together with
-    bf16).
+    accumulators ("int8" streams per-tile-quantized tiles, unfused only);
+    ``compensated=True`` switches the running G/R/t2 totals to Kahan
+    summation carried across the WHOLE stream — every batch's contribution
+    (itself reduced from zero, chunked if requested) is folded through one
+    compensated add, so long streams of small batches don't lose low bits
+    against the running totals (recommended together with bf16).
     """
     from repro.core.engine import (
         SufficientStats, _kahan_add, accumulate_stats,
         accumulate_stats_chunked, init_stats,
     )
 
+    def empty_stats(H, T):
+        L = feature_map.L if producer == "fused" else H.shape[-1]
+        return init_stats(H.shape[0], L, T.shape[-1], jnp.float32)
+
     comp = None
     for H, T in feature_batches:
         if stats is None:
-            stats = init_stats(H.shape[0], H.shape[-1], T.shape[-1],
-                               jnp.float32)
+            stats = empty_stats(H, T)
         if not compensated:
             if chunk is not None and H.shape[1] > chunk:
                 stats = accumulate_stats_chunked(stats, H, T, chunk,
                                                  use_pallas=use_pallas,
-                                                 precision=precision)
+                                                 precision=precision,
+                                                 producer=producer,
+                                                 feature_map=feature_map)
             else:
                 stats = accumulate_stats(stats, H, T, use_pallas=use_pallas,
-                                         precision=precision)
+                                         precision=precision,
+                                         producer=producer,
+                                         feature_map=feature_map)
             continue
         # Compensated: reduce THIS batch alone from zero (its internal sums
         # are same-magnitude, so the plain/chunked fold is fine), then fold
         # it into the running totals through Kahan adds whose compensation
         # persists across batches.
-        zero = init_stats(H.shape[0], H.shape[-1], T.shape[-1], jnp.float32)
+        zero = empty_stats(H, T)
         if chunk is not None and H.shape[1] > chunk:
             b = accumulate_stats_chunked(zero, H, T, chunk,
                                          use_pallas=use_pallas,
                                          precision=precision,
-                                         compensated=True)
+                                         compensated=True,
+                                         producer=producer,
+                                         feature_map=feature_map)
         else:
             b = accumulate_stats(zero, H, T, use_pallas=use_pallas,
-                                 precision=precision)
+                                 precision=precision, producer=producer,
+                                 feature_map=feature_map)
         t2_run = jnp.broadcast_to(
             jnp.asarray(stats.t2, jnp.float32), b.t2.shape)
         if comp is None:

@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the fused Gram kernel."""
+"""Pure-jnp oracles for the fused Gram kernels."""
 
 import jax.numpy as jnp
+
+from repro.kernels.gram.kernel import ACTIVATIONS
 
 
 def gram_ref(H, T):
@@ -8,3 +10,26 @@ def gram_ref(H, T):
     Hf = H.astype(jnp.float32)
     Tf = T.astype(jnp.float32)
     return Hf.T @ Hf, Hf.T @ Tf
+
+
+def gram_fused_ref(X, W, b, T, activation: str = "sigmoid",
+                   precision: str = "fp32"):
+    """Materialized oracle of the fused producer: compute the hidden layer
+    ``H = act(X W + b)`` in XLA, then reduce with :func:`gram_ref`.  The
+    fused fp32 kernel is bitwise-identical to this (same activation, same
+    unpadded-d_in contraction, padding masked to exact zero); bf16 rounds
+    H and T to bf16 storage first, like the materialized bf16 stream."""
+    act = ACTIVATIONS[activation]
+    H = act(X.astype(jnp.float32) @ W.astype(jnp.float32)
+            + b.astype(jnp.float32))
+    if precision == "bf16":
+        H = H.astype(jnp.bfloat16)
+        T = T.astype(jnp.bfloat16)
+    return gram_ref(H, T)
+
+
+def int8_emulated_ref(Hdq, T):
+    """Oracle of the int8 stream given the dequantized H (from
+    ``ops.quantize_dequantize``): fp32 contraction of the dequantized
+    features against the bf16-rounded targets."""
+    return gram_ref(Hdq, T.astype(jnp.bfloat16))

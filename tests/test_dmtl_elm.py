@@ -119,3 +119,60 @@ def test_star_is_master_slave_structure():
     g = star(6)
     assert g.degrees()[0] == 5
     assert all(d == 1 for d in g.degrees()[1:])
+
+
+# ----------------------- stats-producer config path ------------------------
+
+def test_fit_fused_producer_equals_materialized_fit():
+    """cfg.stats_producer='fused' + raw X + feature_map must reproduce the
+    materialized fit on fmap(X) exactly — same stats (bitwise at the
+    oracle level), hence the same ADMM trajectory."""
+    from repro.core.dmtl_elm import fit
+    from repro.core.elm import make_feature_map
+
+    kx, kf, kt = jax.random.split(jax.random.PRNGKey(2), 3)
+    m = 5
+    X = jax.random.normal(kx, (m, 20, 6)) / 2.0
+    fmap = make_feature_map(kf, 6, 12)
+    T = jax.random.normal(kt, (m, 20, 2))
+    g = paper_fig2a()
+    cfg_f = DMTLELMConfig(r=2, iters=12, stats_producer="fused")
+    cfg_m = DMTLELMConfig(r=2, iters=12)
+    st_f, di_f = fit(X, T, g, cfg_f, feature_map=fmap)
+    st_m, di_m = fit(fmap(X), T, g, cfg_m)
+    np.testing.assert_array_equal(np.asarray(st_f.U), np.asarray(st_m.U))
+    np.testing.assert_array_equal(np.asarray(st_f.A), np.asarray(st_m.A))
+    np.testing.assert_array_equal(np.asarray(di_f["objective"]),
+                                  np.asarray(di_m["objective"]))
+
+
+def test_fit_validates_stats_producer_kwargs():
+    from repro.core.dmtl_elm import fit
+    from repro.core.elm import make_feature_map
+
+    H = jnp.ones((5, 8, 4))
+    T = jnp.ones((5, 8, 1))
+    g = paper_fig2a()
+    fmap = make_feature_map(jax.random.PRNGKey(0), 4, 8)
+    with pytest.raises(ValueError, match="stats_producer"):
+        fit(H, T, g, DMTLELMConfig(r=2, iters=2, stats_producer="nope"))
+    with pytest.raises(ValueError, match="feature_map"):
+        fit(H, T, g, DMTLELMConfig(r=2, iters=2, stats_producer="fused"))
+    with pytest.raises(ValueError, match="feature_map"):
+        fit(H, T, g, DMTLELMConfig(r=2, iters=2), feature_map=fmap)
+
+
+def test_int8_stats_admm_objective_close_to_fp32(paper_data):
+    """End-to-end ADMM on int8-streamed statistics: the final primal
+    objective must land within a small relative envelope of the fp32-stats
+    run — quantization noise in (G, R) perturbs, not derails, the
+    consensus fit."""
+    H, T = paper_data
+    g = paper_fig2a()
+    cfg8 = DMTLELMConfig(r=2, iters=60, stats_precision="int8")
+    cfg32 = DMTLELMConfig(r=2, iters=60)
+    _, di8 = dmtl_elm_fit(H, T, g, cfg8)
+    _, di32 = dmtl_elm_fit(H, T, g, cfg32)
+    o8 = float(di8["objective"][-1])
+    o32 = float(di32["objective"][-1])
+    assert abs(o8 - o32) <= 0.05 * abs(o32) + 1e-3, (o8, o32)

@@ -915,3 +915,87 @@ def test_diagnostics_contract_dense_and_colored():
         stats, g, dataclasses.replace(cfg, gamma_floor=cfg.gamma_cap))
     np.testing.assert_allclose(np.asarray(fdiag["gamma"]), cfg.gamma_cap,
                                rtol=1e-6)
+
+
+# ----------------------- fused stats producer ------------------------------
+
+def test_sufficient_stats_fused_bitwise_vs_materialized():
+    """The producer contract at BOTH levels: the fused oracle equals the
+    materialized oracle on fmap(X) bitwise (same XLA ops by construction),
+    and the fused Pallas kernel equals the materialized Pallas kernel
+    bitwise (same tiles, same order)."""
+    from repro.core.elm import make_feature_map
+    from repro.core.engine import sufficient_stats_fused
+
+    kx, kf, kt = jax.random.split(jax.random.PRNGKey(0), 3)
+    X = jax.random.normal(kx, (3, 40, 12)) / 3.0
+    fmap = make_feature_map(kf, 12, 48)
+    T = jax.random.normal(kt, (3, 40, 2))
+    for use_pallas in (False, True):
+        sf = sufficient_stats_fused(X, fmap, T, use_pallas=use_pallas)
+        sm = sufficient_stats(fmap(X), T, use_pallas=use_pallas)
+        np.testing.assert_array_equal(np.asarray(sf.G), np.asarray(sm.G))
+        np.testing.assert_array_equal(np.asarray(sf.R), np.asarray(sm.R))
+        np.testing.assert_array_equal(np.asarray(sf.n), np.asarray(sm.n))
+        np.testing.assert_array_equal(np.asarray(sf.t2), np.asarray(sm.t2))
+
+
+def test_produce_stats_validation():
+    from repro.core.elm import make_feature_map
+    from repro.core.engine import produce_stats
+
+    X = jnp.ones((2, 8, 4))
+    T = jnp.ones((2, 8, 2))
+    fmap = make_feature_map(jax.random.PRNGKey(0), 4, 16)
+    with pytest.raises(ValueError, match="producer"):
+        produce_stats(X, T, producer="nope")
+    with pytest.raises(ValueError, match="feature_map"):
+        produce_stats(X, T, producer="fused")
+    with pytest.raises(ValueError, match="materialized"):
+        produce_stats(X, T, producer="materialized", feature_map=fmap)
+    with pytest.raises(ValueError, match="int8"):
+        produce_stats(X, T, producer="fused", feature_map=fmap,
+                      precision="int8")
+
+
+def test_stream_fused_chunked_equals_one_shot():
+    """The fused producer through the stream bridge: chunked accumulation
+    over raw-X batches matches the one-shot fused reduction (to fp32
+    summation-order tolerance), and the stats come out at the feature map's
+    L (not X's d_in)."""
+    from repro.core.elm import make_feature_map
+    from repro.core.engine import sufficient_stats_fused
+    from repro.data.pipeline import stream_sufficient_stats
+
+    kx, kf, kt = jax.random.split(jax.random.PRNGKey(4), 3)
+    X = jax.random.normal(kx, (2, 60, 8)) / 2.0
+    fmap = make_feature_map(kf, 8, 40)
+    T = jax.random.normal(kt, (2, 60, 3))
+    batches = [(X[:, :28], T[:, :28]), (X[:, 28:], T[:, 28:])]
+    st = stream_sufficient_stats(iter(batches), chunk=16, producer="fused",
+                                 feature_map=fmap)
+    assert st.G.shape == (2, 40, 40)
+    one = sufficient_stats_fused(X, fmap, T)
+    np.testing.assert_allclose(np.asarray(st.G), np.asarray(one.G),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st.R), np.asarray(one.R),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(st.n), np.asarray(one.n))
+
+
+def test_chunked_int8_per_chunk_seeds_differ():
+    """Chunked int8 accumulation must draw a FRESH stochastic-rounding
+    stream per chunk (seeds quant_seed + k): identical chunks must not
+    reuse identical rounding noise, or the noise would correlate instead
+    of averaging out."""
+    H = jnp.tile(jax.random.normal(jax.random.PRNGKey(1), (1, 16, 24)),
+                 (1, 2, 1)) / 4.0
+    T = jnp.ones((1, 32, 2))
+    z = init_stats(1, 24, 2, jnp.float32)
+    chunked = accumulate_stats_chunked(z, H, T, 16, precision="int8")
+    # same data quantized as ONE chunk with the base seed: if per-chunk
+    # seeds were ignored both halves would quantize identically and the
+    # chunked result would be exactly 2x the half-stats
+    half = accumulate_stats(init_stats(1, 24, 2, jnp.float32),
+                            H[:, :16], T[:, :16], precision="int8")
+    assert float(jnp.max(jnp.abs(chunked.G - 2.0 * half.G))) > 0.0

@@ -191,3 +191,50 @@ def test_expander_validation():
         expander(4, 4)
     with pytest.raises(ValueError, match="even"):
         expander(5, 3)
+
+
+# ------------------------------ spectral gap -------------------------------
+
+def test_spectral_gap_complete_graph_closed_form():
+    """Normalized-Laplacian λ₂ of K_m is m/(m-1) exactly."""
+    from repro.core.graph import spectral_gap
+
+    for m in (3, 5, 8):
+        assert abs(spectral_gap(complete(m)) - m / (m - 1)) < 1e-5
+
+
+def test_spectral_gap_orders_topologies():
+    """The gap must rank mixing speed: expander > ring > chain at m=16,
+    and every connected graph has gap > 0."""
+    from repro.core.graph import spectral_gap
+
+    gap_exp = spectral_gap(expander(16, 3, seed=0))
+    gap_ring = spectral_gap(ring(16))
+    gap_chain = spectral_gap(chain(16))
+    assert gap_exp > gap_ring > gap_chain > 0.0
+
+
+def test_spectral_gap_trivial_graph_is_zero():
+    from repro.core.graph import Graph, spectral_gap
+
+    assert spectral_gap(Graph(m=1, edges=())) == 0.0
+
+
+def test_expander_min_gap_resamples_to_certified_draws():
+    """expander(min_gap=) must return only draws whose measured gap clears
+    the threshold, across seeds, while staying deg-regular (the pairing
+    model's invariant)."""
+    from repro.core.graph import spectral_gap
+
+    for seed in range(5):
+        g = expander(16, 3, seed=seed, min_gap=0.15)
+        assert spectral_gap(g) >= 0.15
+        assert g.m == 16
+        np.testing.assert_array_equal(g.degrees(), np.full(16, 3.0))
+
+
+def test_expander_unreachable_min_gap_raises():
+    """A gap no 3-regular graph can reach (above the Alon-Boppana-ish
+    ceiling) must exhaust the draw budget and raise, mentioning min_gap."""
+    with pytest.raises(ValueError, match="gap"):
+        expander(16, 3, seed=0, min_gap=0.9)

@@ -223,3 +223,201 @@ def test_committed_bench_snapshots_identical():
 
     assert BENCH_JSON.exists() and ROOT_BENCH_JSON.exists()
     assert BENCH_JSON.read_bytes() == ROOT_BENCH_JSON.read_bytes()
+
+
+def test_bench_history_appends_dated_lines(tmp_path):
+    """Every snapshot write appends ONE schema-versioned JSON line to the
+    history file next to the canonical path: two writes -> two lines, each
+    dated, the last line's results byte-equal to the snapshot contents."""
+    import json
+    from benchmarks.kernels import BENCH_HISTORY, write_bench_snapshot
+
+    canonical = tmp_path / "experiments" / "BENCH_kernels.json"
+    mirror = tmp_path / "BENCH_kernels.json"
+    history = canonical.parent / BENCH_HISTORY.name
+    r1 = {"schema": "bench_kernels/v3", "timings": [{"name": "a"}]}
+    r2 = {"schema": "bench_kernels/v3", "timings": [{"name": "b"}]}
+    write_bench_snapshot(r1, canonical=canonical, mirror=mirror)
+    write_bench_snapshot(r2, canonical=canonical, mirror=mirror)
+    lines = history.read_text().splitlines()
+    assert len(lines) == 2
+    for line in lines:
+        entry = json.loads(line)
+        assert entry["schema"] == "bench_history/v1"
+        assert entry["date"]  # ISO stamp present
+    last = json.loads(lines[-1])
+    assert last["results"] == r2
+    assert last["results"] == json.loads(canonical.read_text())
+    assert canonical.read_bytes() == mirror.read_bytes()
+
+
+def test_committed_bench_history_consistent_with_snapshot():
+    """The committed history's LAST entry must be the committed snapshot —
+    i.e. both artifacts came out of the same (final) bench run."""
+    import json
+    from benchmarks.kernels import BENCH_HISTORY, BENCH_JSON
+
+    assert BENCH_HISTORY.exists()
+    lines = BENCH_HISTORY.read_text().splitlines()
+    assert len(lines) >= 1
+    for line in lines:
+        assert json.loads(line)["schema"] == "bench_history/v1"
+    last = json.loads(lines[-1])
+    assert last["results"] == json.loads(BENCH_JSON.read_text())
+
+
+# ------------------------ fused feature->Gram ------------------------------
+
+def test_fused_activations_registry_matches_elm():
+    """The in-kernel activation table must stay in lockstep with the ELM
+    feature-map registry: same names, same callables."""
+    from repro.core.elm import ACTIVATIONS as ELM_ACTS
+    from repro.kernels.gram.kernel import ACTIVATIONS as KERNEL_ACTS
+
+    assert KERNEL_ACTS.keys() == ELM_ACTS.keys()
+    for name in ELM_ACTS:
+        assert KERNEL_ACTS[name] is ELM_ACTS[name], name
+
+
+@pytest.mark.parametrize("m,N,d_in,L", [
+    (2, 64, 16, 32), (1, 5, 3, 16), (2, 33, 8, 40),
+    (1, 100, 36, 70), (2, 7, 11, 200),
+])
+@pytest.mark.parametrize("activation", ["sigmoid", "tanh"])
+def test_gram_fused_bitwise_vs_materialized_pallas(m, N, d_in, L, activation):
+    """The fused kernel must agree BITWISE (tol 0.0) with the materialized
+    triangular kernel at the same tiling in fp32 — same tiles, same
+    accumulation order, with the hidden layer computed in-kernel instead of
+    streamed.  Ragged N and L exercise the padded-grid masking: act(0) != 0
+    for sigmoid, so any unmasked padding row/column poisons G."""
+    from repro.core.elm import make_feature_map
+    from repro.kernels.gram.ops import gram_fused
+
+    kx, kf, kt = jax.random.split(jax.random.PRNGKey(m * N + d_in + L), 3)
+    X = jax.random.normal(kx, (m, N, d_in)) / jnp.sqrt(max(d_in, 1))
+    fmap = make_feature_map(kf, d_in, L, activation=activation)
+    T = jax.random.normal(kt, (m, N, 4))
+    Gm, Rm = gram_batched(fmap(X), T, block_l=32, block_n=32)
+    Gf, Rf = gram_fused(X, fmap.W, fmap.b, T, activation=activation,
+                        block_l=32, block_n=32)
+    np.testing.assert_array_equal(np.asarray(Gf), np.asarray(Gm))
+    np.testing.assert_array_equal(np.asarray(Rf), np.asarray(Rm))
+
+
+def test_gram_fused_bf16_bitwise_vs_materialized_bf16():
+    """bf16 fused == bf16 materialized, bitwise: the in-kernel hidden tiles
+    round to bf16 exactly like the materialized stream's cast."""
+    from repro.core.elm import make_feature_map
+    from repro.kernels.gram.ops import gram_fused
+
+    kx, kf, kt = jax.random.split(jax.random.PRNGKey(5), 3)
+    X = jax.random.normal(kx, (2, 48, 16)) / 4.0
+    fmap = make_feature_map(kf, 16, 64)
+    T = jax.random.normal(kt, (2, 48, 3))
+    Gm, Rm = gram_batched(fmap(X), T, block_l=32, block_n=32,
+                          precision="bf16")
+    Gf, Rf = gram_fused(X, fmap.W, fmap.b, T, block_l=32, block_n=32,
+                        precision="bf16")
+    np.testing.assert_array_equal(np.asarray(Gf), np.asarray(Gm))
+    np.testing.assert_array_equal(np.asarray(Rf), np.asarray(Rm))
+
+
+def test_gram_fused_2d_matches_oracle():
+    """Single-matrix (2D) inputs take the singleton-batch path; the oracle
+    relation fused_ref == ref-on-materialized-H holds by construction and
+    the kernel must match it to fp32 tolerance."""
+    from repro.core.elm import make_feature_map
+    from repro.kernels.gram.ops import gram_fused
+    from repro.kernels.gram.ref import gram_fused_ref
+
+    kx, kf, kt = jax.random.split(jax.random.PRNGKey(9), 3)
+    X = jax.random.normal(kx, (40, 12)) / 3.0
+    fmap = make_feature_map(kf, 12, 48)
+    T = jax.random.normal(kt, (40, 2))
+    Gf, Rf = gram_fused(X, fmap.W, fmap.b, T, block_l=16, block_n=16)
+    Go, Ro = gram_fused_ref(X, fmap.W, fmap.b, T)
+    np.testing.assert_allclose(np.asarray(Gf), np.asarray(Go), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Rf), np.asarray(Ro), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_gram_fused_rejects_int8():
+    from repro.kernels.gram.ops import gram_fused
+
+    X = jnp.ones((4, 8))
+    W = jnp.ones((8, 16))
+    with pytest.raises(ValueError, match="int8"):
+        gram_fused(X, W, jnp.ones((16,)), jnp.ones((4, 2)),
+                   precision="int8")
+
+
+# ------------------------------ int8 stream --------------------------------
+
+def test_gram_int8_requires_tri_variant():
+    H = jnp.ones((16, 8))
+    T = jnp.ones((16, 2))
+    with pytest.raises(ValueError, match="tri"):
+        gram(H, T, precision="int8", variant="dense")
+
+
+def test_gram_int8_pallas_matches_emulation():
+    """The int8 Pallas path must match the jnp quantize-dequantize
+    emulation at the SAME quant_seed to fp32 sum-order tolerance: both
+    consume identical quantized tiles, only the accumulation order
+    differs."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    H = jax.random.normal(k1, (2, 96, 48)) / jnp.sqrt(96)
+    T = jax.random.normal(k2, (2, 96, 3))
+    Gq, Rq = gram_batched(H, T, block_l=32, block_n=32, precision="int8",
+                          quant_seed=7)
+    Ge, Re = gram_batched(H, T, block_l=32, block_n=32, precision="int8",
+                          quant_seed=7, force_ref=True)
+    np.testing.assert_allclose(np.asarray(Gq), np.asarray(Ge), atol=2e-5,
+                               rtol=0)
+    np.testing.assert_allclose(np.asarray(Rq), np.asarray(Re), atol=2e-5,
+                               rtol=0)
+
+
+@pytest.mark.parametrize("N,L", [(96, 48), (33, 40)])
+def test_gram_int8_within_quantization_envelope(N, L):
+    """Per-tile-scaled stochastic int8 on normalized features lands within
+    a few percent of the fp32 Gram."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(N + L))
+    H = jax.random.normal(k1, (1, N, L)) / jnp.sqrt(N)
+    T = jax.random.normal(k2, (1, N, 3))
+    Gq, Rq = gram_batched(H, T, block_l=32, block_n=32, precision="int8")
+    Gr, Rr = jax.vmap(gram_ref)(H, T)
+    g_scale = float(jnp.max(jnp.abs(Gr)))
+    r_scale = float(jnp.max(jnp.abs(Rr)))
+    assert float(jnp.max(jnp.abs(Gq - Gr))) <= 5e-2 * g_scale
+    assert float(jnp.max(jnp.abs(Rq - Rr))) <= 5e-2 * r_scale
+
+
+def test_gram_int8_stochastic_rounding_unbiased():
+    """The estimator property that justifies stochastic rounding: averaging
+    the int8 Gram over quant seeds converges on the fp32 truth (the
+    mean error must drop well below the single-seed error — ~1/sqrt(k)
+    scaling), while round-to-nearest would keep a fixed bias."""
+    n_seeds = 32
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    H = jax.random.normal(k1, (1, 64, 32)) / jnp.sqrt(64)
+    T = jax.random.normal(k2, (1, 64, 2))
+    Gr, _ = jax.vmap(gram_ref)(H, T)
+    gs = [gram_batched(H, T, block_l=16, block_n=32, precision="int8",
+                       quant_seed=s, force_ref=True)[0]
+          for s in range(n_seeds)]
+    single_errs = [float(jnp.max(jnp.abs(g - Gr))) for g in gs]
+    mean_err = float(jnp.max(jnp.abs(sum(gs) / n_seeds - Gr)))
+    assert mean_err < 0.5 * (sum(single_errs) / n_seeds), (
+        mean_err, single_errs)
+
+
+def test_quantize_dequantize_zero_padding_exact():
+    """Zero entries (the kernel's padding) must quantize to exactly 0 so
+    padded tiles contribute nothing."""
+    from repro.kernels.gram.ops import quantize_dequantize
+
+    H = jnp.zeros((1, 20, 24))
+    Hdq = quantize_dequantize(H, block_l=16, block_n=16, quant_seed=0)
+    np.testing.assert_array_equal(np.asarray(Hdq), np.zeros((1, 20, 24)))
