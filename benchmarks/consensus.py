@@ -58,3 +58,59 @@ def run():
          f"U_rmse_final={u_d[-1]:.5f};A_rmse_final={a_d[-1]:.5f}")
     emit("fig4/fo_accuracy", t_f * 1e6,
          f"U_rmse_final={u_f[-1]:.5f};A_rmse_final={a_f[-1]:.5f}")
+
+
+def run_resume():
+    """Checkpointable-runtime overhead on the Fig. 2(a) problem: segmented
+    runs with periodic disk snapshots vs the monolithic scan, plus the cost
+    of a mid-run restore — with the bitwise-parity contract asserted on
+    every row (the numbers are only meaningful if the split is free in
+    semantics, so the benchmark doubles as a regression check)."""
+    import tempfile
+
+    from repro.checkpoint import run_checkpointed
+    from repro.core import engine
+
+    g = paper_fig2a()
+    H, T = paper_uniform(jax.random.PRNGKey(0), m=5, N=10, L=5, d=1)
+    stats = sufficient_stats(H, T)
+    cfg = DMTLELMConfig(r=2, tau=1.0, zeta=1.0, delta=10.0, iters=400)
+    runner = engine.make_runner(stats, g, cfg, executor="dense")
+
+    (oracle, _), t_mono = timed(
+        lambda: jax.block_until_ready(runner.run()), repeats=3
+    )
+    rows = [["mono", 0, t_mono * 1e6, 1.0]]
+
+    for every in (200, 100, 50):
+        def seg(every=every):
+            with tempfile.TemporaryDirectory() as td:
+                return jax.block_until_ready(run_checkpointed(
+                    runner, checkpoint_dir=td, checkpoint_every=every))
+        (st, _), t_seg = timed(seg, repeats=3)
+        np.testing.assert_array_equal(
+            np.asarray(st.U), np.asarray(oracle.U),
+            err_msg=f"segmented every={every} not bitwise")
+        rows.append(["segmented", every, t_seg * 1e6, t_seg / t_mono])
+
+    # restore + second half: resume from a snapshot at iters // 2
+    with tempfile.TemporaryDirectory() as td:
+        half = runner.run_segment(runner.init_state(), cfg.iters // 2)
+        from repro.checkpoint import save_run_checkpoint
+        save_run_checkpoint(td, half[0], half[1],
+                            metadata={"executor": runner.executor})
+        (st, _), t_res = timed(lambda: jax.block_until_ready(
+            run_checkpointed(runner, checkpoint_dir=td, resume=True)))
+        np.testing.assert_array_equal(
+            np.asarray(st.U), np.asarray(oracle.U),
+            err_msg="resumed half not bitwise")
+        rows.append(["resume_half", cfg.iters // 2, t_res * 1e6,
+                     t_res / t_mono])
+
+    write_csv("resume_overhead",
+              ["mode", "checkpoint_every", "us_per_run", "vs_monolithic"],
+              rows)
+    emit("resume/monolithic", t_mono * 1e6, f"iters={cfg.iters}")
+    for mode, every, us, ratio in rows[1:]:
+        emit(f"resume/{mode}_{every}", us,
+             f"overhead_x={ratio:.3f};bitwise=1")

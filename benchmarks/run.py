@@ -5,6 +5,9 @@ experiments/benchmarks/.
 
   fig3   convergence curves (MTL-ELM / DMTL-ELM / FO-DMTL-ELM)
   fig4   consensus / accuracy evolution vs the centralized solution
+  resume checkpointable-runtime overhead: segmented + snapshotted runs vs
+         the monolithic scan and a mid-run restore, bitwise-parity
+         asserted per row → resume_overhead.csv
   table1 generalization vs Local-ELM / MTFL / GO-MTL / DGSP / DNSP
   fig5   error vs hidden width L (set BENCH_FIG5=1; slower sweep)
   fig6   communication-vs-accuracy trade-off
@@ -38,6 +41,7 @@ def main() -> None:
         ("fig3", convergence.run),
         ("sweeps", convergence.run_sweeps),
         ("fig4", consensus.run),
+        ("resume", consensus.run_resume),
         ("table1", generalization.run),
         ("fig6", communication.run),
         ("precision", convergence.run_precision),

@@ -1,1 +1,21 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import (
+    latest_step,
+    load_checkpoint,
+    read_meta,
+    save_checkpoint,
+)
+from repro.checkpoint.runstate import (
+    load_run_checkpoint,
+    run_checkpointed,
+    save_run_checkpoint,
+)
+
+__all__ = [
+    "latest_step",
+    "load_checkpoint",
+    "read_meta",
+    "save_checkpoint",
+    "load_run_checkpoint",
+    "run_checkpointed",
+    "save_run_checkpoint",
+]

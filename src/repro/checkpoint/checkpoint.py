@@ -3,12 +3,24 @@ step metadata, restoring onto arbitrary shardings.
 
 Layout on disk:
   <dir>/step_<n>/arrays.npz     flattened leaves keyed by joined tree path
-  <dir>/step_<n>/meta.json      step, keys in order, aux metadata
+  <dir>/step_<n>/meta.json      step, keys in order, per-leaf dtype
+                                strings, aux metadata
+
+Non-native dtypes (ml_dtypes bfloat16/float8 — anything numpy's .npz
+format cannot round-trip itself) are stored as same-width unsigned-int
+BYTE VIEWS with the true dtype string recorded in ``meta.json``; load
+reverses the view, so every leaf round-trips bitwise.  (Plain ``np.savez``
+appears to accept ml_dtypes arrays but the round-trip is broken:
+depending on numpy version ``np.load`` either fails on the pickled dtype
+or silently returns a raw void ``|V2`` array — the silent-corruption bug
+this layer fixes; see tests/test_checkpoint_resume.py.)
 
 Restore rebuilds the pytree from a template (``like``) and, when a mesh and
 spec tree are given, ``jax.device_put``s each leaf onto its NamedSharding —
 so a checkpoint written from a single host restores onto the production
-mesh layout without code changes.
+mesh layout without code changes.  ``like=None`` returns the raw
+``{joined/path: array}`` dict instead, for callers whose leaf shapes are
+not known up front (e.g. the diagnostics prefix of a resumed run).
 """
 
 from __future__ import annotations
@@ -39,14 +51,38 @@ def _flatten_with_names(tree):
     return out
 
 
+def _to_container(arr: np.ndarray) -> np.ndarray:
+    """View a non-native-dtype array as same-width unsigned ints (bitwise);
+    native dtypes pass through untouched.  ``isbuiltin != 1`` catches the
+    ml_dtypes registrations (bfloat16 reports 2, structured/void 0)."""
+    if np.dtype(arr.dtype).isbuiltin == 1:
+        return arr
+    return np.ascontiguousarray(arr).view(np.dtype(f"u{arr.dtype.itemsize}"))
+
+
+def _from_container(arr: np.ndarray, dtype_str: Optional[str]) -> np.ndarray:
+    """Reverse :func:`_to_container` using the dtype string from meta.json."""
+    if dtype_str is None or str(arr.dtype) == dtype_str:
+        return arr
+    try:
+        dt = np.dtype(dtype_str)
+    except TypeError:
+        import ml_dtypes
+
+        dt = np.dtype(getattr(ml_dtypes, dtype_str))
+    return arr.view(dt)
+
+
 def save_checkpoint(directory: str | Path, step: int, tree: Any,
                     metadata: Optional[dict] = None) -> Path:
     d = Path(directory) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
-    named = _flatten_with_names(tree)
-    arrays = {name: np.asarray(leaf) for name, leaf in named}
+    named = [(name, np.asarray(leaf)) for name, leaf in
+             _flatten_with_names(tree)]
+    arrays = {name: _to_container(leaf) for name, leaf in named}
     np.savez(d / "arrays.npz", **arrays)
     meta = {"step": step, "keys": [n for n, _ in named],
+            "dtypes": {name: str(leaf.dtype) for name, leaf in named},
             "metadata": metadata or {}}
     (d / "meta.json").write_text(json.dumps(meta, indent=2))
     return d
@@ -62,12 +98,27 @@ def latest_step(directory: str | Path) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def load_checkpoint(directory: str | Path, like: Any, step: Optional[int] = None,
+def read_meta(directory: str | Path, step: Optional[int] = None) -> dict:
+    """Read just meta.json (no array payload) — e.g. to validate executor
+    compatibility before committing to a full state restore."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = Path(directory) / f"step_{step:08d}"
+    return json.loads((d / "meta.json").read_text())
+
+
+def load_checkpoint(directory: str | Path, like: Any,
+                    step: Optional[int] = None,
                     shardings: Optional[Any] = None):
     """Restore a pytree saved by save_checkpoint.
 
-    like: a pytree (arrays or ShapeDtypeStructs) giving the structure.
-    shardings: optional matching tree of jax.sharding.Sharding to place onto.
+    like: a pytree (arrays or ShapeDtypeStructs) giving the structure, or
+        ``None`` to get the raw ``{joined/path: array}`` dict of every
+        stored leaf (dtypes restored from meta.json either way).
+    shardings: optional matching tree of jax.sharding.Sharding to place
+        onto (ignored when ``like`` is None).
     """
     if step is None:
         step = latest_step(directory)
@@ -75,10 +126,16 @@ def load_checkpoint(directory: str | Path, like: Any, step: Optional[int] = None
             raise FileNotFoundError(f"no checkpoints under {directory}")
     d = Path(directory) / f"step_{step:08d}"
     data = np.load(d / "arrays.npz")
+    meta = json.loads((d / "meta.json").read_text())
+    dtypes = meta.get("dtypes", {})
+    if like is None:
+        raw = {name: _from_container(data[name], dtypes.get(name))
+               for name in meta["keys"]}
+        return raw, meta
     named = _flatten_with_names(like)
     leaves = []
     for name, leaf in named:
-        arr = data[name]
+        arr = _from_container(data[name], dtypes.get(name))
         if arr.shape != tuple(leaf.shape):
             raise ValueError(
                 f"checkpoint leaf {name}: shape {arr.shape} != {leaf.shape}"
@@ -91,5 +148,4 @@ def load_checkpoint(directory: str | Path, like: Any, step: Optional[int] = None
         tree = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), tree, shardings
         )
-    meta = json.loads((d / "meta.json").read_text())
     return tree, meta

@@ -1,0 +1,168 @@
+"""Checkpointable consensus runs: RunState save/restore + segment driver.
+
+The bridge between ``repro.core.engine``'s segmented :class:`Runner` API
+and the flat-npz checkpoint store: a run checkpoint at iteration ``k`` is
+ONE ``step_<k>`` directory holding the full serialized ``RunState`` AND the
+diagnostics trajectory of iterations ``[0, k)``, so a resumed run returns
+the complete trajectory — bitwise what the uninterrupted run would have
+produced (the engine's segment property makes the state side free; storing
+the diagnostics prefix makes the trajectory side free).
+
+This module is deliberately core-import-free (it duck-types on the
+NamedTuple protocol of ``RunState``), so ``repro.checkpoint`` stays a leaf
+package with no dependency cycle.
+
+Layout per checkpoint (see ``repro.checkpoint.checkpoint`` for the npz
+dtype handling):
+
+    <dir>/step_<k>/arrays.npz   ``state/<field>`` + ``diags/<key>`` leaves
+    <dir>/step_<k>/meta.json    step, key order, dtype strings, and the
+                                ``executor`` / ``iters`` audit metadata
+
+``REPRO_CHECKPOINT_EXIT_AFTER_SAVE=<k>`` (env) hard-exits the process via
+``os._exit(0)`` right after a save at step >= k — the crash-injection hook
+the preemption tests use to kill a run at a real checkpoint boundary.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import (
+    latest_step,
+    load_checkpoint,
+    read_meta,
+    save_checkpoint,
+)
+
+_EXIT_ENV = "REPRO_CHECKPOINT_EXIT_AFTER_SAVE"
+
+
+def save_run_checkpoint(directory: str | Path, state: Any, diags: dict,
+                        metadata: Optional[dict] = None) -> Path:
+    """Save a mid-run snapshot: the RunState + the full diags prefix.
+
+    The step number IS ``int(state.k)``, so ``latest_step`` always names
+    the furthest-advanced snapshot.
+    """
+    step = int(jax.device_get(state.k))
+    tree = {"state": state._asdict(), "diags": dict(diags)}
+    return save_checkpoint(directory, step, tree, metadata=metadata)
+
+
+def load_run_checkpoint(directory: str | Path, template_state: Any, *,
+                        step: Optional[int] = None, shardings: Any = None):
+    """Restore ``(state, diags, meta)`` from a run checkpoint.
+
+    ``template_state`` (e.g. ``runner.init_state()``) supplies the
+    RunState class, field names, and expected leaf shapes; ``shardings``
+    (e.g. ``runner.state_shardings()``) optionally places each state leaf
+    back onto its NamedSharding for the shard_map executors.  The
+    diagnostics prefix is returned as plain numpy arrays keyed like the
+    executor's diags dict.
+    """
+    raw, meta = load_checkpoint(directory, None, step=step)
+    fields = {}
+    for name, tmpl in template_state._asdict().items():
+        if tmpl is None:
+            fields[name] = None
+            continue
+        key = f"state/{name}"
+        if key not in raw:
+            raise ValueError(
+                f"checkpoint at {directory} lacks state leaf {name!r} — "
+                f"was it written by a different executor?"
+            )
+        arr = raw[key]
+        if arr.shape != tuple(tmpl.shape):
+            raise ValueError(
+                f"checkpoint state leaf {name}: shape {arr.shape} != "
+                f"template {tuple(tmpl.shape)}"
+            )
+        fields[name] = arr
+    if shardings is not None:
+        sh = shardings._asdict()
+        fields = {
+            name: (leaf if leaf is None or sh.get(name) is None
+                   else jax.device_put(leaf, sh[name]))
+            for name, leaf in fields.items()
+        }
+    state = type(template_state)(**fields)
+    diags = {name.split("/", 1)[1]: arr for name, arr in raw.items()
+             if name.startswith("diags/")}
+    return state, diags, meta
+
+
+def _append_diags(parts: list, diags: dict) -> None:
+    parts.append({k: np.asarray(v) for k, v in diags.items()})
+
+
+def _concat_diags(parts: list) -> dict:
+    if not parts:
+        return {}
+    keys = parts[0].keys()
+    return {k: np.concatenate([p[k] for p in parts], axis=0) for k in keys}
+
+
+def run_checkpointed(runner, *, checkpoint_dir: str | Path,
+                     checkpoint_every: int = 0, resume: bool = False,
+                     metadata: Optional[dict] = None):
+    """Drive ``runner`` to ``cfg.iters`` with periodic checkpoints.
+
+    ``checkpoint_every=k`` saves after every k-iteration segment (0 = one
+    save at the end); ``resume=True`` restarts from the latest snapshot
+    under ``checkpoint_dir`` when one exists (and starts fresh otherwise,
+    so first runs and resumed runs share one call site).  Returns
+    ``(state, diags)`` where ``diags`` is the FULL trajectory over
+    ``[0, cfg.iters)`` — bitwise identical to the uninterrupted
+    ``runner.run()`` by the engine's segment property.
+    """
+    total = int(runner.cfg.iters)
+    every = int(checkpoint_every) if checkpoint_every else total
+    if every <= 0:
+        raise ValueError(
+            f"checkpoint_every must be >= 0, got {checkpoint_every}"
+        )
+    meta = dict(metadata or {})
+    meta.setdefault("executor", runner.executor)
+    meta.setdefault("iters", total)
+
+    state, parts = None, []
+    if resume and latest_step(checkpoint_dir) is not None:
+        # validate executor compatibility BEFORE rebuilding state, so a
+        # mismatch surfaces as this error and not a missing-leaf one
+        saved_exec = read_meta(checkpoint_dir).get(
+            "metadata", {}
+        ).get("executor")
+        if saved_exec is not None and saved_exec != runner.executor:
+            raise ValueError(
+                f"checkpoint under {checkpoint_dir} was written by "
+                f"executor {saved_exec!r}, cannot resume with "
+                f"{runner.executor!r}"
+            )
+        state, prev, _ = load_run_checkpoint(
+            checkpoint_dir, runner.init_state(),
+            shardings=runner.state_shardings(),
+        )
+        if prev:
+            parts.append(prev)
+    if state is None:
+        state = runner.init_state()
+
+    exit_after = os.environ.get(_EXIT_ENV)
+    done = int(jax.device_get(state.k))
+    while done < total:
+        state, diags = runner.run_segment(state, min(every, total - done))
+        _append_diags(parts, diags)
+        done = int(jax.device_get(state.k))
+        save_run_checkpoint(
+            checkpoint_dir, state, _concat_diags(parts), metadata=meta
+        )
+        if exit_after is not None and done >= int(exit_after):
+            os._exit(0)   # crash injection: die AT a checkpoint boundary
+    return state, _concat_diags(parts)

@@ -21,6 +21,8 @@ from repro.core.engine import (
     AgentState,
     ConsensusConfig,
     NeighborMsgs,
+    Runner,
+    RunState,
     SufficientStats,
     U_SOLVERS,
     accumulate_stats,
@@ -35,6 +37,7 @@ from repro.core.engine import (
     graph_matches_torus,
     init_stats,
     jacobian_schedule,
+    make_runner,
     objective_from_stats,
     produce_stats,
     register_u_solver,
@@ -82,12 +85,13 @@ __all__ = [
     "EdgeSchedule", "Graph", "chain", "compile_edge_schedule", "complete",
     "erdos", "expander", "hypercube", "paper_fig2a", "ring", "spectral_gap",
     "star",
-    "AgentState", "ConsensusConfig", "NeighborMsgs", "SufficientStats",
+    "AgentState", "ConsensusConfig", "NeighborMsgs", "Runner", "RunState",
+    "SufficientStats",
     "U_SOLVERS", "accumulate_stats", "accumulate_stats_chunked", "agent_update",
     "dual_step", "fit_async", "fit_colored", "fit_dense", "fit_sharded",
     "fit_sharded_graph",
     "graph_matches_torus", "init_stats",
-    "jacobian_schedule", "objective_from_stats", "produce_stats",
+    "jacobian_schedule", "make_runner", "objective_from_stats", "produce_stats",
     "register_u_solver", "STATS_PRODUCERS", "sufficient_stats",
     "sufficient_stats_fused",
     "MTLELMConfig", "MTLELMState", "mtl_elm_fit", "mtl_elm_fit_from_stats",

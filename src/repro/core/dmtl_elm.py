@@ -118,6 +118,9 @@ def fit(
     channel=None,
     aged_duals: bool = False,
     feature_map=None,
+    checkpoint_dir=None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
 ):
     """One entry point, five executors over the SAME ``agent_update`` body.
 
@@ -155,6 +158,16 @@ def fit(
     ``aged_duals`` only to "async", and ``feature_map`` only to
     ``cfg.stats_producer="fused"``; passing them elsewhere raises rather
     than silently ignoring them.
+
+    Checkpointable execution (ANY executor): ``checkpoint_dir=`` drives
+    the run through ``repro.checkpoint.run_checkpointed`` — the engine's
+    segmented ``RunState`` core saves a resumable snapshot (state + full
+    diagnostics prefix) every ``checkpoint_every`` iterations (0 = once,
+    at the end), and ``resume=True`` restarts from the latest snapshot
+    when one exists.  A resumed run returns the final state and FULL
+    diagnostics trajectory bitwise identical to the uninterrupted run —
+    the engine's segment property, which holds for all five executors and
+    both dual modes.
 
     dense/colored/async return ``(DMTLELMState, diagnostics)``; sharded
     returns the engine's ``(U, A, diagnostics)`` sharded-output contract.
@@ -218,6 +231,15 @@ def fit(
             )
         if channel is not None:
             tape = channel.sample(g, cfg.iters)
+    if checkpoint_dir is None and (checkpoint_every or resume):
+        raise ValueError(
+            "checkpoint_every=/resume= need checkpoint_dir= to point at "
+            "the snapshot directory"
+        )
+    if checkpoint_every < 0:
+        raise ValueError(
+            f"checkpoint_every must be >= 0, got {checkpoint_every}"
+        )
     use_graph_path = False
     if executor == "sharded":
         if mesh is None or agent_axes is None:
@@ -244,20 +266,26 @@ def fit(
         H, T, producer=cfg.stats_producer, feature_map=feature_map,
         precision=cfg.stats_precision,
     )
-    if executor == "dense":
-        return engine.fit_dense(stats, g, cfg)
-    if executor == "colored":
-        return engine.fit_colored(
-            stats, g, cfg, schedule=schedule, staleness=staleness,
-            order=order,
+    exec_name = executor
+    if executor == "sharded":
+        exec_name = "sharded_graph" if use_graph_path else "sharded"
+    runner = engine.make_runner(
+        stats, g, cfg, executor=exec_name, mesh=mesh, agent_axes=agent_axes,
+        schedule=schedule, staleness=staleness, order=order, tape=tape,
+        aged_duals=aged_duals,
+    )
+    if checkpoint_dir is not None:
+        from repro.checkpoint import run_checkpointed
+
+        state, diags = run_checkpointed(
+            runner, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, resume=resume,
         )
-    if executor == "async":
-        return engine.fit_async(stats, g, cfg, tape, aged_duals=aged_duals)
-    if use_graph_path:
-        return engine.fit_sharded_graph(
-            stats, mesh, agent_axes, g, cfg, schedule=schedule
-        )
-    return engine.fit_sharded(stats, mesh, agent_axes, cfg)
+    else:
+        state, diags = runner.run()
+    if executor == "sharded":
+        return state.U, state.A, diags
+    return DenseState(state.U, state.A, state.lam), diags
 
 
 def dmtl_elm_predict(U_t: jax.Array, A_t: jax.Array, H: jax.Array) -> jax.Array:

@@ -107,7 +107,42 @@ SAME keys — ``objective`` (primal, eq. 12), ``lagrangian`` (eq. 13),
 adaptive dual step over edges — the ``cfg.gamma_floor`` observable) and
 ``primal_sq`` — all computable from stats alone because every stats leaf
 (G, R, n, t2) is threaded through each executor, including the shard_map
-paths.
+paths.  (``fit_async`` additionally reports ``tape_cursor``, the absolute
+tape tick each row was computed at, so a resumed run can be audited
+against its tape position.)
+
+Checkpointable runtime — the segmented step core under every executor:
+
+Each ``fit_*`` is a thin wrapper over ONE shared, explicitly serializable
+:class:`RunState` pytree (``U``, ``A``, per-edge duals ``lam``, the
+iteration counter ``k``, and — where the executor needs them — the
+published-subspace ring buffer ``hist`` and the aged-dual ring buffer
+``lam_hist``) advanced by a :class:`Runner`:
+
+    runner = make_runner(stats, g, cfg, executor=...)
+    state  = runner.init_state()                     # RunState at k = 0
+    state, diags = runner.run_segment(state, n)      # n more iterations
+    state, diags = runner.run()                      # drive to cfg.iters
+
+The segment core is constructed so that a segment boundary CANNOT perturb
+the numerics: every scan carry is structurally identical to the monolithic
+executor's carry (the counter ``k`` advances outside the scan; the async
+executor threads the absolute tick through the scan inputs), so splitting
+``cfg.iters`` into any sequence of ``run_segment`` calls — including a
+save/restore through ``repro.checkpoint`` between segments — is bitwise
+identical to the uninterrupted run, in final state AND in every
+diagnostics trajectory, for all five executors and both dual modes.  The
+shard_map executors feed ``RunState`` leaves in as sharded operands
+(``Runner.state_shardings()`` gives the matching NamedSharding tree for
+restore-onto-mesh).
+
+Checkpoint layout (``repro.checkpoint.runstate`` drives it through
+``fit(..., checkpoint_dir=, checkpoint_every=, resume=)``):
+
+    <dir>/step_<k>/arrays.npz   flat ``state/*`` + ``diags/*`` leaves
+                                (non-native dtypes stored as byte views)
+    <dir>/step_<k>/meta.json    step, key order, per-leaf dtype strings,
+                                executor name + cfg.iters for resume audit
 
 Sweep-order / staleness trade-off: Gauss-Seidel (``fit_colored``,
 ``staleness=0``) propagates information within an iteration and typically
@@ -759,20 +794,103 @@ def _iteration_diag(stats, cfg, U, A, lam_new, resid_new, gamma, primal) -> dict
 
 
 # --------------------------------------------------------------------------
+# The ONE serializable run state + the segmented step core
+# --------------------------------------------------------------------------
+
+
+class RunState(NamedTuple):
+    """The ONE serializable mid-run state every executor advances.
+
+    A plain pytree of arrays — everything a preempted consensus run needs
+    to restart bitwise-identically mid-scan.  ``None`` leaves (ring buffers
+    an executor does not use) drop out of the flattened tree, so a
+    checkpoint written by one executor round-trips through
+    ``repro.checkpoint`` against that executor's own template.
+
+    Per-executor leaf layouts (m agents, E edges, depth = tape.depth):
+
+      dense / southwell   lam (E, L, r); hist = lam_hist = None
+      colored             hist (staleness, m, L, r) — the delayed-view
+                          window (zero-depth when staleness=0)
+      async               hist (depth, m, L, r) published-U ring buffer;
+                          lam_hist (depth, E, L, r) iff aged_duals; ``k``
+                          doubles as the tape cursor
+      sharded (ring)      lam (m, n_axes, L, r), agent-sharded; the
+                          per-shard block is ring_iteration's (n_axes,L,r)
+      sharded_graph       lam (m, n_slots, L, r), agent-sharded slot table
+    """
+
+    U: jax.Array                  # (m, L, r) stacked subspaces
+    A: jax.Array                  # (m, r, d) stacked heads
+    lam: jax.Array                # per-edge duals, executor layout (above)
+    k: jax.Array                  # ()  int32 iteration counter / tape cursor
+    hist: jax.Array | None = None      # published-U / staleness ring buffer
+    lam_hist: jax.Array | None = None  # aged-duals ring buffer (async only)
+
+
+@dataclasses.dataclass(frozen=True)
+class Runner:
+    """A segmented executor: ``init_state()`` + ``run_segment(state, n)``.
+
+    Every ``fit_*`` is one of these driven to completion.  The maker
+    functions guarantee the segment property: the traced computation of
+    ``run_segment(state, a); run_segment(·, b)`` is the SAME scan body as
+    ``run_segment(state, a + b)`` with identical carries, so any segment
+    split — including a serialize/deserialize through ``repro.checkpoint``
+    at the boundary — reproduces the uninterrupted run bit for bit.
+    """
+
+    executor: str                 # "dense" | "colored" | "async" | ...
+    cfg: ConsensusConfig
+    init_fn: Callable[[], "RunState"]
+    segment_fn: Callable[["RunState", int], tuple["RunState", dict]]
+    shardings_fn: Callable[[], "RunState"] | None = None
+
+    def init_state(self) -> "RunState":
+        """The k=0 state (all-ones U/A, zero duals, pristine ring buffers)."""
+        return self.init_fn()
+
+    def state_shardings(self):
+        """NamedSharding tree matching :class:`RunState` for the shard_map
+        executors (checkpoint restore places leaves back onto the mesh);
+        ``None`` for the single-device executors."""
+        return None if self.shardings_fn is None else self.shardings_fn()
+
+    def run_segment(self, state: "RunState", n_iters: int):
+        """Advance ``n_iters`` iterations: ``(state, diags)`` with one
+        diagnostics row per iteration of THIS segment."""
+        n = int(n_iters)
+        if n < 0:
+            raise ValueError(f"n_iters must be >= 0, got {n_iters}")
+        done = int(jax.device_get(state.k))
+        if done + n > self.cfg.iters:
+            raise ValueError(
+                f"segment [{done}, {done + n}) runs past cfg.iters="
+                f"{self.cfg.iters}"
+            )
+        return self.segment_fn(state, n)
+
+    def run(self, state: "RunState | None" = None):
+        """Drive to ``cfg.iters`` from ``state`` (or a fresh init_state)."""
+        if state is None:
+            state = self.init_state()
+        done = int(jax.device_get(state.k))
+        if done > self.cfg.iters:
+            raise ValueError(
+                f"state is at iteration {done}, past cfg.iters="
+                f"{self.cfg.iters}"
+            )
+        return self.run_segment(state, self.cfg.iters - done)
+
+
+# --------------------------------------------------------------------------
 # Executor 1: vmap + dense incidence (reference; all agents on one device)
 # --------------------------------------------------------------------------
 
 
-def fit_dense(
+def _make_dense_runner(
     stats: SufficientStats, g: Graph, cfg: ConsensusConfig,
-) -> tuple["DenseState", dict]:
-    """Run Algorithm 2 (or 3 if cfg.first_order) over stats on graph ``g``.
-
-    Neighbor messages are dense adjacency/incidence products; the shared
-    :func:`agent_update` body is vmapped over the agent axis.  Returns the
-    final stacked state and per-iteration diagnostics ('objective',
-    'lagrangian', 'consensus') — all computed from stats alone.
-    """
+) -> Runner:
     es = _edge_setup(stats, g, cfg)
     stats = es.stats
 
@@ -790,7 +908,40 @@ def fit_dense(
         )
         return DenseState(U_new, A_new, lam_new), diag
 
-    return jax.lax.scan(step, es.init, None, length=cfg.iters)
+    def init_fn():
+        return RunState(
+            U=es.init.U, A=es.init.A, lam=es.init.lam,
+            k=jnp.zeros((), jnp.int32),
+        )
+
+    def segment_fn(state, n):
+        # the scan carry is exactly the monolithic executor's DenseState —
+        # the counter advances OUTSIDE the scan, so a segment boundary
+        # cannot perturb the traced computation
+        final, diags = jax.lax.scan(
+            step, DenseState(state.U, state.A, state.lam), None, length=n
+        )
+        return state._replace(
+            U=final.U, A=final.A, lam=final.lam, k=state.k + n
+        ), diags
+
+    return Runner("dense", cfg, init_fn, segment_fn)
+
+
+def fit_dense(
+    stats: SufficientStats, g: Graph, cfg: ConsensusConfig,
+) -> tuple["DenseState", dict]:
+    """Run Algorithm 2 (or 3 if cfg.first_order) over stats on graph ``g``.
+
+    Neighbor messages are dense adjacency/incidence products; the shared
+    :func:`agent_update` body is vmapped over the agent axis.  Returns the
+    final stacked state and per-iteration diagnostics ('objective',
+    'lagrangian', 'consensus') — all computed from stats alone.  One
+    ``run_segment`` of :func:`make_runner`'s dense :class:`Runner`, driven
+    to completion.
+    """
+    state, diags = _make_dense_runner(stats, g, cfg).run()
+    return DenseState(state.U, state.A, state.lam), diags
 
 
 class DenseState(NamedTuple):
@@ -889,6 +1040,23 @@ def fit_colored(
     Returns the same ``(DenseState, diagnostics)`` contract as
     :func:`fit_dense` ('objective', 'lagrangian', 'consensus').
     """
+    runner = _colored_runner(
+        stats, g, cfg, schedule=schedule, staleness=staleness, order=order
+    )
+    state, diags = runner.run()
+    return DenseState(state.U, state.A, state.lam), diags
+
+
+def _colored_runner(
+    stats: SufficientStats,
+    g: Graph,
+    cfg: ConsensusConfig,
+    *,
+    schedule: Sequence[Sequence[int]] | None = None,
+    staleness: int = 0,
+    order: str = "fixed",
+) -> Runner:
+    """Validate the colored-sweep arguments and build the matching Runner."""
     if staleness < 0:
         raise ValueError(f"staleness must be >= 0, got {staleness}")
     if order not in ("fixed", "gauss_southwell"):
@@ -907,8 +1075,17 @@ def fit_colored(
                 "k-round-old views every phase reads the same snapshot, so "
                 "the class order cannot affect the sweep"
             )
-        return _fit_colored_southwell(stats, g, cfg, schedule)
+        return _make_southwell_runner(stats, g, cfg, schedule)
+    return _make_colored_runner(stats, g, cfg, schedule, staleness)
 
+
+def _make_colored_runner(
+    stats: SufficientStats,
+    g: Graph,
+    cfg: ConsensusConfig,
+    schedule: tuple[tuple[int, ...], ...],
+    staleness: int,
+) -> Runner:
     es = _edge_setup(stats, g, cfg)
     stats = es.stats
 
@@ -980,20 +1157,33 @@ def fit_colored(
             hist = jnp.concatenate([hist[1:], U[None]], axis=0)
         return (U, A, lam_new, hist), diag
 
-    (U, A, lam, _), diags = jax.lax.scan(
-        step, (es.init.U, es.init.A, es.init.lam, hist0), None,
-        length=cfg.iters,
-    )
-    return DenseState(U, A, lam), diags
+    def init_fn():
+        return RunState(
+            U=es.init.U, A=es.init.A, lam=es.init.lam,
+            k=jnp.zeros((), jnp.int32), hist=hist0,
+        )
+
+    def segment_fn(state, n):
+        # carry = the monolithic (U, A, lam, hist) — the staleness window
+        # rides along (zero-depth when staleness=0), so a segment boundary
+        # preserves the delayed views exactly
+        (U, A, lam, hist), diags = jax.lax.scan(
+            step, (state.U, state.A, state.lam, state.hist), None, length=n
+        )
+        return state._replace(
+            U=U, A=A, lam=lam, hist=hist, k=state.k + n
+        ), diags
+
+    return Runner("colored", cfg, init_fn, segment_fn)
 
 
-def _fit_colored_southwell(
+def _make_southwell_runner(
     stats: SufficientStats,
     g: Graph,
     cfg: ConsensusConfig,
     schedule: tuple[tuple[int, ...], ...],
-) -> tuple[DenseState, dict]:
-    """Adaptive Gauss-Southwell sweep order (``fit_colored(order=...)``).
+) -> Runner:
+    """Runner for the adaptive Gauss-Southwell sweep (``fit_colored(order=…)``).
 
     Each iteration scores every color class by the summed squared residual
     of its incident edges on the CURRENT iterate and runs the classes
@@ -1064,10 +1254,19 @@ def _fit_colored_southwell(
         )
         return (U, A, lam_new), diag
 
-    (U, A, lam), diags = jax.lax.scan(
-        step, (es.init.U, es.init.A, es.init.lam), None, length=cfg.iters
-    )
-    return DenseState(U, A, lam), diags
+    def init_fn():
+        return RunState(
+            U=es.init.U, A=es.init.A, lam=es.init.lam,
+            k=jnp.zeros((), jnp.int32),
+        )
+
+    def segment_fn(state, n):
+        (U, A, lam), diags = jax.lax.scan(
+            step, (state.U, state.A, state.lam), None, length=n
+        )
+        return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags
+
+    return Runner("colored", cfg, init_fn, segment_fn)
 
 
 # --------------------------------------------------------------------------
@@ -1302,6 +1501,90 @@ def ring_iteration(
     return AgentState(U_new, A_new, lam_new), diag
 
 
+def _make_sharded_runner(
+    stats: SufficientStats,
+    mesh: jax.sharding.Mesh,
+    agent_axes: Sequence[str],
+    cfg: ConsensusConfig,
+) -> Runner:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    m = stats.G.shape[0]
+    sizes = [mesh.shape[ax] for ax in agent_axes]
+    n_agents = functools.reduce(lambda a, b: a * b, sizes, 1)
+    if m != n_agents:
+        raise ValueError(f"m={m} must equal prod(agent axes)={n_agents}")
+    L, d, r = stats.G.shape[-1], stats.R.shape[-1], cfg.r
+    dtype = stats.G.dtype
+    # normalize scalar n/t2 (the (G, R)-only construction) to per-agent
+    # leaves so they shard alongside G/R instead of being silently dropped
+    n_all = jnp.broadcast_to(jnp.asarray(stats.n, jnp.float32), (m,))
+    t2_all = jnp.broadcast_to(jnp.asarray(stats.t2, jnp.float32), (m,))
+
+    axes_t = tuple(agent_axes)
+    spec_batched = P(axes_t)
+    n_axes = len(agent_axes)
+
+    def init_fn():
+        # the stacked all-ones/zeros state placed shard-per-agent; feeding
+        # it through in_specs makes it device-varying inside the body, the
+        # same type the in-body pcast used to establish
+        sh = NamedSharding(mesh, spec_batched)
+        return RunState(
+            U=jax.device_put(jnp.ones((m, L, r), dtype), sh),
+            A=jax.device_put(jnp.ones((m, r, d), dtype), sh),
+            lam=jax.device_put(jnp.zeros((m, n_axes, L, r), dtype), sh),
+            k=jnp.zeros((), jnp.int32),
+        )
+
+    def shardings_fn():
+        sh = NamedSharding(mesh, spec_batched)
+        return RunState(
+            U=sh, A=sh, lam=sh, k=NamedSharding(mesh, P())
+        )
+
+    def segment_fn(state, n):
+        def body(G_blk, R_blk, n_blk, t2_blk, U_blk, A_blk, lam_blk):
+            stats_t = SufficientStats(
+                G=G_blk[0], R=R_blk[0], n=n_blk[0], t2=t2_blk[0]
+            )
+            precomp = hoist_precomp(stats_t, cfg)  # eigh ONCE, outside scan
+
+            def step(carry, _):
+                new, diag = ring_iteration(
+                    carry, stats_t, agent_axes, cfg, m, precomp
+                )
+                diag["obj"] = _local_objective(stats_t, new.U, new.A, cfg, m)
+                return new, diag
+
+            final, diags = jax.lax.scan(
+                step, AgentState(U_blk[0], A_blk[0], lam_blk[0]), None,
+                length=n,
+            )
+            # (iters,) per-shard columns -> (iters, 1) so the out_spec can
+            # lay every shard's contribution side by side for the combine
+            diags = jax.tree_util.tree_map(lambda x: x[:, None], diags)
+            return final.U[None], final.A[None], final.lam[None], diags
+
+        shard_fn = compat.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(spec_batched,) * 7,
+            out_specs=(
+                spec_batched, spec_batched, spec_batched, P(None, axes_t),
+            ),
+        )
+        U, A, lam, diags = shard_fn(
+            stats.G, stats.R, n_all, t2_all, state.U, state.A, state.lam
+        )
+        diags = _assemble_sharded_diags(
+            diags, len(torus_edges(sizes)), L * cfg.r
+        )
+        return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags
+
+    return Runner("sharded", cfg, init_fn, segment_fn, shardings_fn)
+
+
 def fit_sharded(
     stats: SufficientStats,
     mesh: jax.sharding.Mesh,
@@ -1322,60 +1605,8 @@ def fit_sharded(
     ('objective', 'lagrangian', 'consensus', 'gamma', 'gamma_min',
     'primal_sq' — see :func:`_iteration_diag`).
     """
-    from jax.sharding import PartitionSpec as P
-
-    m = stats.G.shape[0]
-    sizes = [mesh.shape[ax] for ax in agent_axes]
-    n_agents = functools.reduce(lambda a, b: a * b, sizes, 1)
-    if m != n_agents:
-        raise ValueError(f"m={m} must equal prod(agent axes)={n_agents}")
-    L, d, r = stats.G.shape[-1], stats.R.shape[-1], cfg.r
-    dtype = stats.G.dtype
-    # normalize scalar n/t2 (the (G, R)-only construction) to per-agent
-    # leaves so they shard alongside G/R instead of being silently dropped
-    n_all = jnp.broadcast_to(jnp.asarray(stats.n, jnp.float32), (m,))
-    t2_all = jnp.broadcast_to(jnp.asarray(stats.t2, jnp.float32), (m,))
-
-    spec_batched = P(tuple(agent_axes))
-
-    def body(G_blk, R_blk, n_blk, t2_blk):
-        stats_t = SufficientStats(
-            G=G_blk[0], R=R_blk[0], n=n_blk[0], t2=t2_blk[0]
-        )
-        precomp = hoist_precomp(stats_t, cfg)   # eigh ONCE, outside the scan
-        axes_t = tuple(agent_axes)
-        # mark the carry as device-varying so the ppermuted outputs type-match
-        U0 = compat.pcast(jnp.ones((L, r), dtype), axes_t, to="varying")
-        A0 = compat.pcast(jnp.ones((r, d), dtype), axes_t, to="varying")
-        lam0 = compat.pcast(
-            jnp.zeros((len(agent_axes), L, r), dtype), axes_t, to="varying"
-        )
-
-        def step(carry, _):
-            new, diag = ring_iteration(
-                carry, stats_t, agent_axes, cfg, m, precomp
-            )
-            diag["obj"] = _local_objective(stats_t, new.U, new.A, cfg, m)
-            return new, diag
-
-        final, diags = jax.lax.scan(
-            step, AgentState(U0, A0, lam0), None, length=cfg.iters
-        )
-        # (iters,) per-shard columns -> (iters, 1) so the out_spec can lay
-        # every shard's contribution side by side for the host-side combine
-        diags = jax.tree_util.tree_map(lambda x: x[:, None], diags)
-        return final.U[None], final.A[None], diags
-
-    shard_fn = compat.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(spec_batched,) * 4,
-        out_specs=(spec_batched, spec_batched, P(None, tuple(agent_axes))),
-    )
-    U, A, diags = shard_fn(stats.G, stats.R, n_all, t2_all)
-    return U, A, _assemble_sharded_diags(
-        diags, len(torus_edges(sizes)), L * cfg.r
-    )
+    state, diags = _make_sharded_runner(stats, mesh, agent_axes, cfg).run()
+    return state.U, state.A, diags
 
 
 # --------------------------------------------------------------------------
@@ -1383,7 +1614,7 @@ def fit_sharded(
 # --------------------------------------------------------------------------
 
 
-def fit_sharded_graph(
+def _make_sharded_graph_runner(
     stats: SufficientStats,
     mesh: jax.sharding.Mesh,
     agent_axes: Sequence[str],
@@ -1391,9 +1622,10 @@ def fit_sharded_graph(
     cfg: ConsensusConfig,
     *,
     schedule: Sequence[Sequence[int]] | None = None,
-):
-    """Consensus ADMM over ANY connected ``Graph`` with one agent per mesh
-    shard — the edge-schedule compiler executor.
+) -> Runner:
+    """Runner for :func:`fit_sharded_graph` — consensus ADMM over ANY
+    connected ``Graph`` with one agent per mesh shard (the edge-schedule
+    compiler executor).
 
     ``compile_edge_schedule`` decomposes ``g``'s edge list into ≤ Δ+1
     matchings (Misra-Gries proper edge coloring); each matching is ONE
@@ -1420,7 +1652,7 @@ def fit_sharded_graph(
     Returns ``(U (m,L,r), A (m,r,d), diagnostics)`` — the same output and
     diagnostics contract as :func:`fit_sharded`.
     """
-    from jax.sharding import PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.core.graph import compile_edge_schedule
 
@@ -1458,20 +1690,34 @@ def fit_sharded_graph(
     for p, cls in enumerate(schedule):
         pmask_all = pmask_all.at[jnp.asarray(cls, jnp.int32), p].set(1.0)
 
+    def init_fn():
+        # stacked all-ones/zeros state placed shard-per-agent; arriving
+        # through in_specs it is device-varying inside the body, the same
+        # type the in-body pcast used to establish
+        sh = NamedSharding(mesh, P(axes_t))
+        return RunState(
+            U=jax.device_put(jnp.ones((m, L, r), dtype), sh),
+            A=jax.device_put(jnp.ones((m, r, d), dtype), sh),
+            lam=jax.device_put(
+                jnp.zeros((m, sched.n_slots, L, r), dtype), sh
+            ),
+            k=jnp.zeros((), jnp.int32),
+        )
+
+    def shardings_fn():
+        sh = NamedSharding(mesh, P(axes_t))
+        return RunState(U=sh, A=sh, lam=sh, k=NamedSharding(mesh, P()))
+
     def body(G_blk, R_blk, n_blk, t2_blk, deg_blk, tau_blk, zeta_blk,
-             slot_blk, own_blk, pmask_blk):
+             slot_blk, own_blk, pmask_blk, U_blk, A_blk, lam_blk, *,
+             n_seg):
         stats_t = SufficientStats(
             G=G_blk[0], R=R_blk[0], n=n_blk[0], t2=t2_blk[0]
         )
         precomp = hoist_precomp(stats_t, cfg)   # eigh ONCE, outside the scan
         deg_t, tau_t, zeta_t = deg_blk[0], tau_blk[0], zeta_blk[0]
         slots, own, pmask = slot_blk[0], own_blk[0], pmask_blk[0]
-
-        U0 = compat.pcast(jnp.ones((L, r), dtype), axes_t, to="varying")
-        A0 = compat.pcast(jnp.ones((r, d), dtype), axes_t, to="varying")
-        lam0 = compat.pcast(
-            jnp.zeros((sched.n_slots, L, r), dtype), axes_t, to="varying"
-        )
+        U0, A0, lam0 = U_blk[0], A_blk[0], lam_blk[0]
 
         def exchange(x):
             """One bidirectional ppermute per edge-color round: round r
@@ -1542,20 +1788,102 @@ def fit_sharded_graph(
             return AgentState(U, A, lam), diag
 
         final, diags = jax.lax.scan(
-            step, AgentState(U0, A0, lam0), None, length=cfg.iters
+            step, AgentState(U0, A0, lam0), None, length=n_seg
         )
         diags = jax.tree_util.tree_map(lambda x: x[:, None], diags)
-        return final.U[None], final.A[None], diags
+        return final.U[None], final.A[None], final.lam[None], diags
 
     spec_batched = P(axes_t)
-    shard_fn = compat.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(spec_batched,) * 10,
-        out_specs=(spec_batched, spec_batched, P(None, axes_t)),
+
+    def segment_fn(state, n):
+        shard_fn = compat.shard_map(
+            functools.partial(body, n_seg=n),
+            mesh=mesh,
+            in_specs=(spec_batched,) * 13,
+            out_specs=(
+                spec_batched, spec_batched, spec_batched, P(None, axes_t),
+            ),
+        )
+        U, A, lam, diags = shard_fn(
+            stats.G, stats.R, n_all, t2_all, deg_all, tau_all, zeta_all,
+            slot_all, own_all, pmask_all, state.U, state.A, state.lam
+        )
+        diags = _assemble_sharded_diags(diags, g.n_edges, L * cfg.r)
+        return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags
+
+    return Runner("sharded_graph", cfg, init_fn, segment_fn, shardings_fn)
+
+
+def fit_sharded_graph(
+    stats: SufficientStats,
+    mesh: jax.sharding.Mesh,
+    agent_axes: Sequence[str],
+    g: Graph,
+    cfg: ConsensusConfig,
+    *,
+    schedule: Sequence[Sequence[int]] | None = None,
+):
+    """Consensus ADMM over ANY connected ``Graph`` on the mesh — one
+    ``run_segment`` of :func:`_make_sharded_graph_runner` (see its
+    docstring for the edge-schedule compilation and Gauss-Seidel phase
+    semantics) driven to completion.  Returns ``(U, A, diagnostics)``, the
+    :func:`fit_sharded` contract.
+    """
+    runner = _make_sharded_graph_runner(
+        stats, mesh, agent_axes, g, cfg, schedule=schedule
     )
-    U, A, diags = shard_fn(
-        stats.G, stats.R, n_all, t2_all, deg_all, tau_all, zeta_all,
-        slot_all, own_all, pmask_all
+    state, diags = runner.run()
+    return state.U, state.A, diags
+
+
+def make_runner(
+    stats: SufficientStats,
+    g: Graph | None = None,
+    cfg: ConsensusConfig | None = None,
+    *,
+    executor: str = "dense",
+    mesh: jax.sharding.Mesh | None = None,
+    agent_axes: Sequence[str] | None = None,
+    schedule: Sequence[Sequence[int]] | None = None,
+    staleness: int = 0,
+    order: str = "fixed",
+    tape=None,
+    aged_duals: bool = False,
+) -> Runner:
+    """Build the segmented :class:`Runner` for any of the five executors.
+
+    The single construction site behind every ``fit_*`` and the
+    checkpointable ``fit(..., checkpoint_dir=...)`` path:
+
+      executor="dense"          needs (stats, g, cfg)
+      executor="colored"        + schedule/staleness/order
+      executor="async"          + tape (aged_duals optional); g required
+      executor="sharded"        needs (stats, cfg) + mesh/agent_axes
+      executor="sharded_graph"  + g (+ optional vertex schedule)
+
+    ``runner.run()`` reproduces the corresponding ``fit_*`` exactly;
+    ``runner.run_segment`` splits the same computation at checkpointable
+    boundaries (see :class:`Runner` for the bitwise guarantee).
+    """
+    if cfg is None:
+        raise ValueError("make_runner requires a ConsensusConfig")
+    if executor == "dense":
+        return _make_dense_runner(stats, g, cfg)
+    if executor == "colored":
+        return _colored_runner(
+            stats, g, cfg, schedule=schedule, staleness=staleness, order=order
+        )
+    if executor == "async":
+        from repro.netsim.executor import make_async_runner
+
+        return make_async_runner(stats, g, cfg, tape, aged_duals=aged_duals)
+    if executor == "sharded":
+        return _make_sharded_runner(stats, mesh, agent_axes, cfg)
+    if executor == "sharded_graph":
+        return _make_sharded_graph_runner(
+            stats, mesh, agent_axes, g, cfg, schedule=schedule
+        )
+    raise ValueError(
+        f"unknown executor {executor!r}; expected one of 'dense', "
+        f"'colored', 'async', 'sharded', 'sharded_graph'"
     )
-    return U, A, _assemble_sharded_diags(diags, g.n_edges, L * cfg.r)

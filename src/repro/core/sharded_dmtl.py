@@ -42,15 +42,36 @@ from repro.core.engine import SufficientStats, ring_iteration  # noqa: F401
 from repro.core.graph import Graph
 
 
-def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph]):
+def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph], *,
+                      checkpoint_dir=None, checkpoint_every: int = 0,
+                      resume: bool = False):
     """Torus fast path when ``g`` is None or matches the mesh torus (up to
-    edge orientation); the compiled edge-schedule executor otherwise."""
-    if g is None:
-        return engine.fit_sharded(stats, mesh, agent_axes, cfg)
-    sizes = [mesh.shape[ax] for ax in agent_axes]
-    if all(s >= 2 for s in sizes) and engine.graph_matches_torus(g, sizes):
-        return engine.fit_sharded(stats, mesh, agent_axes, cfg)
-    return engine.fit_sharded_graph(stats, mesh, agent_axes, g, cfg)
+    edge orientation); the compiled edge-schedule executor otherwise.
+    ``checkpoint_dir=`` drives the run through
+    ``repro.checkpoint.run_checkpointed`` (periodic resumable snapshots,
+    restored onto the mesh via ``Runner.state_shardings()``)."""
+    torus = g is None
+    if not torus:
+        sizes = [mesh.shape[ax] for ax in agent_axes]
+        torus = (
+            all(s >= 2 for s in sizes)
+            and engine.graph_matches_torus(g, sizes)
+        )
+    runner = engine.make_runner(
+        stats, g, cfg,
+        executor="sharded" if torus else "sharded_graph",
+        mesh=mesh, agent_axes=agent_axes,
+    )
+    if checkpoint_dir is not None:
+        from repro.checkpoint import run_checkpointed
+
+        state, diags = run_checkpointed(
+            runner, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, resume=resume,
+        )
+    else:
+        state, diags = runner.run()
+    return state.U, state.A, diags
 
 
 def dmtl_fit_from_stats(
@@ -63,6 +84,9 @@ def dmtl_fit_from_stats(
     n: "jax.Array | None" = None,
     t2: "jax.Array | None" = None,
     g: Optional[Graph] = None,
+    checkpoint_dir=None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
 ):
     """ADMM over precomputed per-agent Gram stats.
 
@@ -79,12 +103,17 @@ def dmtl_fit_from_stats(
     unchanged but those diagnostics are offset by the (constant) ||T||^2
     term.  ``g`` selects a non-torus consensus topology (compiled to a
     ppermute edge schedule); None keeps the mesh ring/torus.
+    ``checkpoint_dir=``/``checkpoint_every=``/``resume=`` make the run
+    preemption-safe (see ``repro.checkpoint.run_checkpointed``).
     """
     stats = SufficientStats(
         G=G_all, R=HtT_all,
         n=0.0 if n is None else n, t2=0.0 if t2 is None else t2,
     )
-    return _dispatch_sharded(stats, mesh, agent_axes, cfg, g)
+    return _dispatch_sharded(
+        stats, mesh, agent_axes, cfg, g, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every, resume=resume,
+    )
 
 
 def dmtl_elm_fit_sharded(
@@ -95,6 +124,9 @@ def dmtl_elm_fit_sharded(
     cfg: DMTLELMConfig,
     *,
     g: Optional[Graph] = None,
+    checkpoint_dir=None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
 ):
     """Driver: H (m, N, L), T (m, N, d) sharded over agent axes; scan ADMM.
 
@@ -102,6 +134,11 @@ def dmtl_elm_fit_sharded(
     same way. ``m`` must equal the product of the agent-axis sizes.  ``g``
     selects a non-torus consensus topology (compiled to a ppermute edge
     schedule by ``engine.fit_sharded_graph``); None keeps the ring/torus.
+    ``checkpoint_dir=``/``checkpoint_every=``/``resume=`` make the run
+    preemption-safe (see ``repro.checkpoint.run_checkpointed``).
     """
     stats = engine.sufficient_stats(H, T, precision=cfg.stats_precision)
-    return _dispatch_sharded(stats, mesh, agent_axes, cfg, g)
+    return _dispatch_sharded(
+        stats, mesh, agent_axes, cfg, g, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every, resume=resume,
+    )

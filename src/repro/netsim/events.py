@@ -66,8 +66,19 @@ class EventTape(NamedTuple):
         return max(1, int(self.age.max())) if self.age.size else 1
 
 
-def validate_tape(tape: EventTape, g: Graph, iters: int | None = None) -> None:
-    """Assert the tape invariants against ``g`` (raises ValueError)."""
+def validate_tape(
+    tape: EventTape, g: Graph, iters: int | None = None, *, start: int = 0,
+) -> None:
+    """Assert the tape invariants against ``g`` (raises ValueError).
+
+    ``start`` is the absolute tick of row 0 — a resumed run re-validates
+    the suffix it is about to replay by passing the sliced tape with
+    ``start=k``, which keeps the ``age <= tick + 1`` bound anchored to the
+    true tick (the cross-boundary age-step invariant is the prefix run's
+    responsibility; it was checked before the checkpoint was written).
+    """
+    if start < 0:
+        raise ValueError(f"start must be >= 0, got {start}")
     age, active = np.asarray(tape.age), np.asarray(tape.active)
     if age.ndim != 3 or age.shape[1] != 2 or age.shape[2] != g.n_edges:
         raise ValueError(
@@ -84,9 +95,10 @@ def validate_tape(tape: EventTape, g: Graph, iters: int | None = None) -> None:
         return
     if age.min() < 1:
         raise ValueError(f"age must be >= 1 (got min {age.min()})")
-    ticks = np.arange(n_iters)[:, None, None]
-    if (age > ticks + 1).any():
-        k = int(np.argwhere(age > ticks + 1)[0][0])
+    ticks = np.arange(start, start + n_iters)[:, None, None]
+    bad = age > ticks + 1
+    if bad.any():
+        k = start + int(np.argwhere(bad)[0][0])
         raise ValueError(
             f"age at tick {k} exceeds k + 1: no message can predate U^0"
         )

@@ -25,6 +25,18 @@ Mechanics per tick ``k``:
   message-faithful protocol; it is off by default because the
   ``fit_colored(staleness=k)`` parity oracle uses live duals.
 
+Segmented execution (:func:`make_async_runner`): the executor is a
+``engine.Runner`` whose :class:`engine.RunState` carries the ring buffers
+(``hist``, and ``lam_hist`` iff ``aged_duals``) and whose counter ``k`` IS
+the tape cursor — each segment slices tape rows ``[k, k + n)`` on the host
+and threads the ABSOLUTE tick through the scan inputs, so ring-buffer
+slots ``(k - age) mod depth`` are segment-invariant and any mid-tape
+checkpoint/resume replays bitwise.  A resumed segment (``k > 0``)
+re-validates the tape suffix it is about to replay
+(``validate_tape(..., start=k)``).  On top of the shared diagnostics
+contract, every row reports ``tape_cursor`` — the absolute tick it was
+computed at — so a resumed run can be audited against its tape position.
+
 Parity oracles (asserted in tests/test_netsim.py):
 
 * ``zero_delay_tape``  -> bitwise ``engine.fit_dense``;
@@ -45,6 +57,8 @@ from repro.core.engine import (
     ConsensusConfig,
     DenseState,
     NeighborMsgs,
+    Runner,
+    RunState,
     SufficientStats,
     dual_step,
 )
@@ -52,19 +66,18 @@ from repro.core.graph import Graph
 from repro.netsim.events import EventTape, validate_tape
 
 
-def fit_async(
+def make_async_runner(
     stats: SufficientStats,
     g: Graph,
     cfg: ConsensusConfig,
     tape: EventTape,
     *,
     aged_duals: bool = False,
-) -> tuple[DenseState, dict]:
-    """Run consensus ADMM under the simulated asynchrony of ``tape``.
+) -> Runner:
+    """Segmented event-tape executor: ``RunState.k`` is the tape cursor.
 
-    Same input/output contract as :func:`engine.fit_dense` (final stacked
-    ``DenseState`` plus the shared per-iteration diagnostics keys); the
-    tape must carry exactly ``cfg.iters`` ticks for ``g``'s edge list.
+    The tape must carry exactly ``cfg.iters`` ticks for ``g``'s edge list;
+    ``run_segment(state, n)`` replays ticks ``[state.k, state.k + n)``.
     """
     validate_tape(tape, g, cfg.iters)
     es = engine._edge_setup(stats, g, cfg)
@@ -73,24 +86,14 @@ def fit_async(
     src = jnp.asarray([e[0] for e in g.edges], jnp.int32)
     dst = jnp.asarray([e[1] for e in g.edges], jnp.int32)
     depth = tape.depth
-    ages = jnp.asarray(np.asarray(tape.age), jnp.int32)
-    active = jnp.asarray(np.asarray(tape.active), stats.G.dtype)
-
-    # Ring buffer of published subspaces: slot j holds the U published at
-    # the end of tick j (mod depth).  Ages are in [1, depth], so slot
-    # (k - a) mod depth is never overwritten before tick k reads it, and
-    # pre-history reads (k - a < 0) land on slots the run has not written
-    # yet — still the initial U^0, the drop fallback.
-    hist0 = jnp.broadcast_to(es.init.U, (depth,) + es.init.U.shape)
-    lam_hist0 = (
-        jnp.zeros((depth,) + es.init.lam.shape, es.init.lam.dtype)
-        if aged_duals else None
-    )
+    dtype = stats.G.dtype
+    ages_np = np.asarray(tape.age)
+    active_np = np.asarray(tape.active)
     edge_ids = jnp.arange(E, dtype=jnp.int32)
 
     def step(carry, xs):
         U, A, lam, hist, lam_hist = carry
-        age_k, act_k, k = xs
+        age_k, act_k, k = xs                           # k = ABSOLUTE tick
         slot0 = jnp.mod(k - age_k[0], depth)           # e -> s views
         slot1 = jnp.mod(k - age_k[1], depth)           # s -> e views
         # aged neighbor views per directed edge, summed per receiving agent
@@ -124,11 +127,70 @@ def fit_async(
         diag = engine._iteration_diag(
             stats, cfg, U_new, A_new, lam_new, resid_new, gamma, primal
         )
+        diag["tape_cursor"] = k
         return (U_new, A_new, lam_new, hist, lam_hist), diag
 
-    (U, A, lam, _, _), diags = jax.lax.scan(
-        step,
-        (es.init.U, es.init.A, es.init.lam, hist0, lam_hist0),
-        (ages, active, jnp.arange(cfg.iters, dtype=jnp.int32)),
-    )
-    return DenseState(U, A, lam), diags
+    def init_fn():
+        # Ring buffer of published subspaces: slot j holds the U published
+        # at the end of tick j (mod depth).  Ages are in [1, depth], so
+        # slot (k - a) mod depth is never overwritten before tick k reads
+        # it, and pre-history reads (k - a < 0) land on slots the run has
+        # not written yet — still the initial U^0, the drop fallback.
+        hist0 = jnp.broadcast_to(es.init.U, (depth,) + es.init.U.shape)
+        lam_hist0 = (
+            jnp.zeros((depth,) + es.init.lam.shape, es.init.lam.dtype)
+            if aged_duals else None
+        )
+        return RunState(
+            U=es.init.U, A=es.init.A, lam=es.init.lam,
+            k=jnp.zeros((), jnp.int32), hist=hist0, lam_hist=lam_hist0,
+        )
+
+    def segment_fn(state, n):
+        k0 = int(jax.device_get(state.k))
+        if k0 + n > cfg.iters:
+            raise ValueError(
+                f"segment [{k0}, {k0 + n}) runs past the tape "
+                f"({cfg.iters} ticks)"
+            )
+        if k0 > 0 and n > 0:
+            # resumed mid-tape: re-check the suffix about to be replayed
+            validate_tape(
+                EventTape(
+                    age=ages_np[k0:k0 + n], active=active_np[k0:k0 + n]
+                ),
+                g, start=k0,
+            )
+        xs = (
+            jnp.asarray(ages_np[k0:k0 + n], jnp.int32),
+            jnp.asarray(active_np[k0:k0 + n], dtype),
+            jnp.arange(k0, k0 + n, dtype=jnp.int32),
+        )
+        carry0 = (state.U, state.A, state.lam, state.hist, state.lam_hist)
+        (U, A, lam, hist, lam_hist), diags = jax.lax.scan(step, carry0, xs)
+        return RunState(
+            U=U, A=A, lam=lam, k=state.k + n, hist=hist, lam_hist=lam_hist,
+        ), diags
+
+    return Runner("async", cfg, init_fn, segment_fn)
+
+
+def fit_async(
+    stats: SufficientStats,
+    g: Graph,
+    cfg: ConsensusConfig,
+    tape: EventTape,
+    *,
+    aged_duals: bool = False,
+) -> tuple[DenseState, dict]:
+    """Run consensus ADMM under the simulated asynchrony of ``tape``.
+
+    Same input/output contract as :func:`engine.fit_dense` (final stacked
+    ``DenseState`` plus the shared per-iteration diagnostics keys, and
+    additionally ``tape_cursor``); the tape must carry exactly
+    ``cfg.iters`` ticks for ``g``'s edge list.  One segment of
+    :func:`make_async_runner` driven to completion.
+    """
+    runner = make_async_runner(stats, g, cfg, tape, aged_duals=aged_duals)
+    state, diags = runner.run()
+    return DenseState(state.U, state.A, state.lam), diags

@@ -1,0 +1,321 @@
+"""Checkpoint / resume: dtype round-trips and preemption bitwise parity.
+
+Two layers under test:
+
+* ``repro.checkpoint.checkpoint`` — the flat-npz store must round-trip
+  non-native ml_dtypes leaves (bf16, fp8) BITWISE.  Plain ``np.savez``
+  appears to accept them but ``np.load`` then fails on the pickled void
+  dtype; the store byte-views such leaves and records the true dtype in
+  meta.json (regression tests below).
+
+* ``repro.checkpoint.runstate`` + the engine's segmented ``Runner`` API —
+  the acceptance contract of the checkpointable runtime: checkpoint at
+  iteration k, KILL the process, restart, resume — final state and the
+  full diagnostics trajectory bitwise identical to the uninterrupted run,
+  for every executor and both dual modes.  The kill is real: the
+  ``REPRO_CHECKPOINT_EXIT_AFTER_SAVE`` hook ``os._exit(0)``s the
+  subprocess right after the save at step >= k, and a second subprocess
+  resumes from disk (multi-device host platforms must be configured
+  before jax initializes, hence the subprocess pattern shared with
+  test_sharded_dmtl).
+"""
+
+import os
+import random
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+
+# ---------------------------------------------------------------------------
+# dtype round-trip regressions (satellite: np.savez silently mangles
+# ml_dtypes leaves — the store must cast through a supported container)
+# ---------------------------------------------------------------------------
+
+
+def test_mldtypes_npz_roundtrip(tmp_path):
+    import ml_dtypes
+
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(0)
+    f32 = rng.standard_normal((3, 5)).astype(np.float32)
+    tree = {
+        "w_bf16": f32.astype(ml_dtypes.bfloat16),
+        "q_int8": rng.integers(-128, 128, (4, 4), dtype=np.int8),
+        "s_fp8": f32[0].astype(ml_dtypes.float8_e4m3fn),
+        "x_f32": f32,
+        "k": np.int32(7),
+    }
+    save_checkpoint(tmp_path, 3, tree)
+
+    got, meta = load_checkpoint(tmp_path, tree)
+    assert meta["step"] == 3
+    for name in tree:
+        assert got[name].dtype == tree[name].dtype, name
+        assert np.asarray(got[name]).tobytes() == np.asarray(
+            tree[name]
+        ).tobytes(), f"{name} not bitwise"
+
+    # like=None raw path restores dtypes from meta.json too
+    raw, meta2 = load_checkpoint(tmp_path, None)
+    assert meta2["dtypes"]["w_bf16"] == "bfloat16"
+    assert raw["w_bf16"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        raw["w_bf16"].view(np.uint16), tree["w_bf16"].view(np.uint16)
+    )
+
+
+def test_plain_savez_mangles_bf16(tmp_path):
+    """Document the bug the container cast fixes: np.savez 'succeeds' on a
+    bf16 leaf but the round-trip is broken — depending on numpy version
+    the archive either cannot be read back or silently comes back as a
+    raw void dtype (``|V2``) that no longer compares as bfloat16."""
+    import ml_dtypes
+
+    arr = np.arange(6, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    path = tmp_path / "bad.npz"
+    np.savez(path, w=arr)
+    try:
+        loaded = np.load(path)["w"]
+    except Exception:
+        return  # unreadable archive: also a failed round-trip
+    assert loaded.dtype != arr.dtype, "np.savez round-trip unexpectedly OK"
+
+
+# ---------------------------------------------------------------------------
+# in-process RunState save / restore + segment parity (fast paths)
+# ---------------------------------------------------------------------------
+
+
+def _small_problem(m=4, iters=8, **cfg_kw):
+    import jax
+
+    from repro.core import engine
+    from repro.core.graph import ring
+    from repro.data.synthetic import paper_uniform
+
+    H, T = paper_uniform(jax.random.PRNGKey(0), m=m, N=12, L=6, d=2)
+    stats = engine.sufficient_stats(H, T)
+    cfg = engine.ConsensusConfig(r=2, iters=iters, tau=1.0, zeta=1.0, **cfg_kw)
+    return stats, ring(m), cfg
+
+
+def test_runstate_roundtrip_and_segment_parity(tmp_path):
+    import jax
+
+    from repro.checkpoint import load_run_checkpoint, save_run_checkpoint
+    from repro.core import engine
+
+    stats, g, cfg = _small_problem()
+    runner = engine.make_runner(stats, g, cfg, executor="dense")
+    oracle_state, oracle_diags = runner.run()
+
+    # run 5 iters, snapshot, restore from disk, finish the remaining 3
+    mid, diags_a = runner.run_segment(runner.init_state(), 5)
+    save_run_checkpoint(tmp_path, mid, diags_a, metadata={"executor": "dense"})
+    loaded, diags_prefix, meta = load_run_checkpoint(
+        tmp_path, runner.init_state()
+    )
+    assert meta["step"] == 5 and meta["metadata"]["executor"] == "dense"
+    final, diags_b = runner.run_segment(loaded, 3)
+
+    for name, a, b in zip(type(final)._fields, oracle_state, final):
+        if a is None:
+            assert b is None, name
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"state.{name}"
+        )
+    assert int(jax.device_get(final.k)) == cfg.iters
+    for key in oracle_diags:
+        np.testing.assert_array_equal(
+            np.concatenate([diags_prefix[key], np.asarray(diags_b[key])]),
+            np.asarray(oracle_diags[key]),
+            err_msg=key,
+        )
+
+
+def test_resume_executor_mismatch_rejected(tmp_path):
+    from repro.checkpoint import run_checkpointed
+    from repro.core import engine
+
+    stats, g, cfg = _small_problem(iters=4)
+    dense = engine.make_runner(stats, g, cfg, executor="dense")
+    run_checkpointed(dense, checkpoint_dir=tmp_path, checkpoint_every=2)
+    colored = engine.make_runner(stats, g, cfg, executor="colored")
+    with pytest.raises(ValueError, match="written by executor 'dense'"):
+        run_checkpointed(colored, checkpoint_dir=tmp_path, resume=True)
+
+
+def test_segment_past_cfg_iters_rejected():
+    from repro.core import engine
+
+    stats, g, cfg = _small_problem(iters=4)
+    runner = engine.make_runner(stats, g, cfg, executor="dense")
+    state, _ = runner.run_segment(runner.init_state(), 4)
+    with pytest.raises(ValueError):
+        runner.run_segment(state, 1)
+
+
+# ---------------------------------------------------------------------------
+# preemption: kill at iteration k, restart the process, resume — bitwise
+# ---------------------------------------------------------------------------
+
+_PREEMPT_SCRIPT_TEMPLATE = textwrap.dedent(
+    """
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.core import engine
+    from repro.core.graph import chain, complete, ring, star
+    from repro.data.synthetic import paper_uniform
+    from repro.checkpoint import latest_step, run_checkpointed
+
+    ckdir = sys.argv[1]
+
+    m = 4
+    H, T = paper_uniform(jax.random.PRNGKey(0), m=m, N=12, L=6, d=2)
+    stats = engine.sufficient_stats(H, T)
+    cfg = engine.ConsensusConfig(r=2, iters=8, tau=1.0, zeta=1.0,
+                                 u_solver=__SOLVER__)
+    g = __GRAPH__
+    __SETUP__
+
+    st, dg = run_checkpointed(
+        runner, checkpoint_dir=ckdir, checkpoint_every=1, resume=True
+    )
+    # the crash run never gets here: run_checkpointed os._exit(0)s at the
+    # step >= REPRO_CHECKPOINT_EXIT_AFTER_SAVE boundary (k < iters)
+    assert "REPRO_CHECKPOINT_EXIT_AFTER_SAVE" not in os.environ
+    ost, odg = runner.run()
+    for name, a, b in zip(type(ost)._fields, ost, st):
+        if a is None:
+            assert b is None, name
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg="state." + name
+        )
+    assert set(dg) == set(odg), (set(dg), set(odg))
+    for key in sorted(odg):
+        np.testing.assert_array_equal(
+            np.asarray(odg[key]), np.asarray(dg[key]),
+            err_msg="diags[" + key + "]",
+        )
+    print("RESUME_BITWISE_OK")
+    """
+)
+
+# one setup per executor x dual-mode; ``g`` and ``cfg`` are in scope
+_EXECUTOR_SETUPS = {
+    "dense": 'runner = engine.make_runner(stats, g, cfg, executor="dense")',
+    "colored": (
+        "runner = engine.make_runner("
+        '    stats, g, cfg, executor="colored", staleness=2)'
+    ),
+    "southwell": (
+        "runner = engine.make_runner("
+        '    stats, g, cfg, executor="colored", order="gauss_southwell")'
+    ),
+    "sharded": textwrap.dedent(
+        """
+        mesh = jax.make_mesh((m,), ("agents",))
+        runner = engine.make_runner(
+            stats, None, cfg, executor="sharded",
+            mesh=mesh, agent_axes=("agents",))
+        """
+    ),
+    "sharded_graph": textwrap.dedent(
+        """
+        mesh = jax.make_mesh((m,), ("agents",))
+        runner = engine.make_runner(
+            stats, g, cfg, executor="sharded_graph",
+            mesh=mesh, agent_axes=("agents",))
+        """
+    ),
+    "async": textwrap.dedent(
+        """
+        from repro.netsim.channels import ChannelModel
+        tape = ChannelModel(delay="geometric", scale=1.0, drop=0.1,
+                            seed=3).sample(g, cfg.iters)
+        runner = engine.make_runner(
+            stats, g, cfg, executor="async", tape=tape)
+        """
+    ),
+    "async_aged": textwrap.dedent(
+        """
+        from repro.netsim.channels import ChannelModel
+        tape = ChannelModel(delay="geometric", scale=1.5, drop=0.05,
+                            straggler_prob=0.1, seed=4).sample(g, cfg.iters)
+        runner = engine.make_runner(
+            stats, g, cfg, executor="async", tape=tape, aged_duals=True)
+        """
+    ),
+}
+
+
+def _build_script(setup, solver='"sylvester"', graph="ring(m)"):
+    return (
+        _PREEMPT_SCRIPT_TEMPLATE.replace("__SETUP__", setup)
+        .replace("__SOLVER__", solver)
+        .replace("__GRAPH__", graph)
+    )
+
+
+def _crash_then_resume(script, ckdir, kill_at):
+    """Run ``script`` twice: once with the crash hook armed at step
+    ``kill_at`` (process dies mid-run at a real checkpoint boundary), then
+    again clean — the second run must resume and print the parity token."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["REPRO_CHECKPOINT_EXIT_AFTER_SAVE"] = str(kill_at)
+    crash = subprocess.run(
+        [sys.executable, "-c", script, str(ckdir)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert crash.returncode == 0, (
+        f"stdout:\n{crash.stdout}\nstderr:\n{crash.stderr}"
+    )
+    assert "RESUME_BITWISE_OK" not in crash.stdout, (
+        "crash hook did not fire — run completed uninterrupted"
+    )
+    steps = sorted(p.name for p in ckdir.glob("step_*"))
+    assert steps, "crashed run left no checkpoint on disk"
+    assert int(steps[-1].split("_")[1]) == kill_at
+
+    env.pop("REPRO_CHECKPOINT_EXIT_AFTER_SAVE")
+    resume = subprocess.run(
+        [sys.executable, "-c", script, str(ckdir)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert resume.returncode == 0, (
+        f"stdout:\n{resume.stdout}\nstderr:\n{resume.stderr}"
+    )
+    assert "RESUME_BITWISE_OK" in resume.stdout
+
+
+@pytest.mark.parametrize("executor", sorted(_EXECUTOR_SETUPS))
+def test_preemption_resume_bitwise(executor, tmp_path):
+    script = _build_script(_EXECUTOR_SETUPS[executor])
+    _crash_then_resume(script, tmp_path, kill_at=3)
+
+
+def test_preemption_fuzz(tmp_path):
+    """Satellite: randomized (executor, solver, graph, kill-iteration)
+    draws, each killed mid-run and resumed — bitwise vs the oracle."""
+    rng = random.Random(20260809)
+    graphs = ["ring(m)", "star(m)", "chain(m)", "complete(m)"]
+    solvers = ['"sylvester"', '"kron"', '"cg"']
+    for draw in range(2):
+        executor = rng.choice(sorted(_EXECUTOR_SETUPS))
+        script = _build_script(
+            _EXECUTOR_SETUPS[executor],
+            solver=rng.choice(solvers),
+            graph=rng.choice(graphs),
+        )
+        ckdir = tmp_path / f"draw{draw}"
+        ckdir.mkdir()
+        _crash_then_resume(script, ckdir, kill_at=rng.randrange(1, 8))
