@@ -14,13 +14,15 @@ import dataclasses
 import jax
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.configs.paper import PaperConvergenceSetup
 from repro.core import (
-    DMTLELMConfig, MTLELMConfig, fit_colored, fit_dense,
+    DMTLELMConfig, MTLELMConfig, SufficientStats, fit_colored, fit_dense,
     mtl_elm_fit_from_stats, objective_from_stats, paper_fig2a, ring, star,
     sufficient_stats,
 )
-from repro.data.synthetic import paper_uniform
+from repro.data.synthetic import multitask_regression, paper_uniform
 
 from benchmarks.common import emit, timed, write_csv
 
@@ -72,10 +74,54 @@ def _iters_to(objs: np.ndarray, target: float) -> int:
     return int(hit[0]) + 1 if hit.size else -1
 
 
+def _skewed_stats(key, m: int, N: int, L: int, d: int,
+                  boost: int = 10, agent: int = 0) -> SufficientStats:
+    """Shared-subspace regression data with ONE agent holding ``boost``×
+    the samples.
+
+    Stats are reduced per-agent at each agent's true sample count and
+    stacked, so the skew lives where the engine sees it: in ``stats.n``
+    and the Gram magnitudes, not in padded zero rows.
+
+    The draw is ``multitask_regression`` (tasks share a ground-truth
+    subspace), NOT the §IV-A uniform draw: with unrelated uniform tasks
+    the consensus pull makes the skewed-federation objective RISE from
+    the per-agent local optima to its plateau, the initial optimality gap
+    is negative, and the gap-closure yardstick below degenerates (every
+    order "hits" at iteration 1).  Shared structure keeps the objective
+    monotone-decreasing, which the target convention assumes."""
+    H, T, _, _ = multitask_regression(key, m=m, n_train=boost * N, n_test=4,
+                                      L=L, r=2, d=d, noise=0.1)
+    per = [
+        sufficient_stats(H[t, : (boost * N if t == agent else N)],
+                         T[t, : (boost * N if t == agent else N)])
+        for t in range(m)
+    ]
+    return SufficientStats(
+        G=jnp.stack([s.G for s in per]),
+        R=jnp.stack([s.R for s in per]),
+        n=jnp.stack([s.n for s in per]),
+        t2=jnp.stack([s.t2 for s in per]),
+    )
+
+
 def run_sweeps():
     """Sweep-order comparison: Jacobian (fit_dense) vs Gauss-Seidel colored
-    sweeps (fit_colored, staleness=0) vs 3-round-stale messages, on the
-    paper's Fig. 2(a) graph and ring/star topologies.
+    sweeps (fit_colored, staleness=0) vs 3-round-stale messages vs the
+    Gauss-Southwell largest-residual-first sweep, on the paper's Fig. 2(a)
+    graph and ring/star topologies.
+
+    Each topology is run twice: on the uniform §IV-A data AND on a skewed
+    shared-subspace draw where agent 0 holds 10× the samples
+    (``*_skew10x`` rows).  The skew is the regime Gauss-Southwell's
+    data-dependent order targets — the heavy agent's incident edges carry
+    the largest consensus violations, so the residual-ordered sweep
+    front-loads them.  The recorded rows are the honest measurement of
+    that idea: on these problems the residual order roughly MATCHES the
+    fixed color order rather than beating it (and loses on fig2a), while
+    3-round-stale messages — acting as extra damping against the heavy
+    agent's pull — reach the target first.  Ordering alone does not pay
+    for the skew here; the rows pin that down.
 
     The yardstick is the Jacobian executor's iteration-100 objective, with
     0.1% of the initial optimality gap as slack (different sweep orders
@@ -94,48 +140,75 @@ def run_sweeps():
     setup = PaperConvergenceSetup(L=10, N=100)
     H, T = paper_uniform(jax.random.PRNGKey(0), m=setup.m, N=setup.N,
                          L=setup.L, d=setup.d)
-    stats = sufficient_stats(H, T)
     iters = 300
     cfg = DMTLELMConfig(r=setup.r, rho=setup.rho, delta=setup.delta,
                         tau=2.0, zeta=1.0, iters=iters)
+    # The skewed rows run with a gamma floor and a 1% (not 0.1%) slack:
+    # without the floor the Gauss-Seidel sweep collapses gamma on the ring
+    # and stalls on a plateau FAR above the Jacobian one (10.25 vs 8.78 —
+    # exactly the failure mode sweep_gamma plots and cfg.gamma_floor
+    # exists for), and the skewed plateaus spread ~1e-2 relative across
+    # orders, so the uniform rows' 0.1%-of-gap target sits inside the
+    # plateau noise.  Floor and slack apply to ALL orders in the skewed
+    # rows, so within-row comparisons stay apples-to-apples.
+    cfg_skew = dataclasses.replace(cfg, gamma_floor=0.05)
+    datasets = [
+        ("", sufficient_stats(H, T), cfg, 1e-3),
+        ("_skew10x", _skewed_stats(jax.random.PRNGKey(0), m=setup.m,
+                                   N=setup.N, L=setup.L, d=setup.d),
+         cfg_skew, 1e-2),
+    ]
     rows = []
     gamma_rows = []
-    for name, g in [("fig2a", paper_fig2a()), ("ring", ring(setup.m)),
-                    ("star", star(setup.m))]:
-        (_, diag_j), t_j = timed(lambda: fit_dense(stats, g, cfg))
-        (_, diag_g), t_g = timed(lambda: fit_colored(stats, g, cfg))
-        (_, diag_s), t_s = timed(
-            lambda: fit_colored(stats, g, cfg, staleness=3))
-        obj_j = np.asarray(diag_j["objective"])
-        obj_g = np.asarray(diag_g["objective"])
-        obj_s = np.asarray(diag_s["objective"])
-        # Jacobian @ iteration 100, plus 0.1% of the initial gap as slack
-        target = float(obj_j[99]) + 1e-3 * float(obj_j[0] - obj_j[99])
-        it_j = _iters_to(obj_j, target)
-        it_g = _iters_to(obj_g, target)
-        it_s = _iters_to(obj_s, target)
-        n_colors = len(g.chromatic_schedule())
-        speedup = f"{it_j / it_g:.2f}" if it_g > 0 and it_j > 0 else "DNF"
-        # the adaptive-gamma trajectory (mean/min over edges): the GS sweep
-        # reaches the frozen-dual fixed point faster, so its gamma collapses
-        # earlier — the gamma_floor observable, plotted side by side
-        gj, gj_min = np.asarray(diag_j["gamma"]), np.asarray(diag_j["gamma_min"])
-        gg, gg_min = np.asarray(diag_g["gamma"]), np.asarray(diag_g["gamma_min"])
-        for k in range(iters):
-            gamma_rows.append([name, k, gj[k], gj_min[k], gg[k], gg_min[k]])
-        emit(f"sweeps/{name}/jacobian", t_j * 1e6,
-             f"iters_to_target={it_j};obj100={target:.4f};"
-             f"gamma_final={gj[-1]:.3e}")
-        emit(f"sweeps/{name}/gauss_seidel", t_g * 1e6,
-             f"iters_to_target={it_g};colors={n_colors};"
-             f"speedup_x={speedup};gamma_final={gg[-1]:.3e}")
-        emit(f"sweeps/{name}/stale3", t_s * 1e6,
-             f"iters_to_target={it_s}")
-        rows.append([name, n_colors, target, it_j, it_g, it_s,
-                     float(gj[-1]), float(gg[-1])])
+    for tag, stats, cfg, slack in datasets:
+        for name, g in [("fig2a", paper_fig2a()), ("ring", ring(setup.m)),
+                        ("star", star(setup.m))]:
+            (_, diag_j), t_j = timed(lambda: fit_dense(stats, g, cfg))
+            (_, diag_g), t_g = timed(lambda: fit_colored(stats, g, cfg))
+            (_, diag_s), t_s = timed(
+                lambda: fit_colored(stats, g, cfg, staleness=3))
+            (_, diag_w), t_w = timed(
+                lambda: fit_colored(stats, g, cfg, order="gauss_southwell"))
+            obj_j = np.asarray(diag_j["objective"])
+            obj_g = np.asarray(diag_g["objective"])
+            obj_s = np.asarray(diag_s["objective"])
+            obj_w = np.asarray(diag_w["objective"])
+            # Jacobian @ iteration 100, plus the dataset's slack fraction of
+            # the initial gap (0.1% uniform, 1% skewed — see above)
+            target = float(obj_j[99]) + slack * float(obj_j[0] - obj_j[99])
+            it_j = _iters_to(obj_j, target)
+            it_g = _iters_to(obj_g, target)
+            it_s = _iters_to(obj_s, target)
+            it_w = _iters_to(obj_w, target)
+            n_colors = len(g.chromatic_schedule())
+            speedup = f"{it_j / it_g:.2f}" if it_g > 0 and it_j > 0 else "DNF"
+            # the adaptive-gamma trajectory (mean/min over edges): the GS
+            # sweep reaches the frozen-dual fixed point faster, so its gamma
+            # collapses earlier — the gamma_floor observable, plotted side
+            # by side (uniform data only; the skewed rows share the plot)
+            gj, gj_min = (np.asarray(diag_j["gamma"]),
+                          np.asarray(diag_j["gamma_min"]))
+            gg, gg_min = (np.asarray(diag_g["gamma"]),
+                          np.asarray(diag_g["gamma_min"]))
+            if not tag:
+                for k in range(iters):
+                    gamma_rows.append(
+                        [name, k, gj[k], gj_min[k], gg[k], gg_min[k]])
+            emit(f"sweeps/{name}{tag}/jacobian", t_j * 1e6,
+                 f"iters_to_target={it_j};obj100={target:.4f};"
+                 f"gamma_final={gj[-1]:.3e}")
+            emit(f"sweeps/{name}{tag}/gauss_seidel", t_g * 1e6,
+                 f"iters_to_target={it_g};colors={n_colors};"
+                 f"speedup_x={speedup};gamma_final={gg[-1]:.3e}")
+            emit(f"sweeps/{name}{tag}/stale3", t_s * 1e6,
+                 f"iters_to_target={it_s}")
+            emit(f"sweeps/{name}{tag}/gauss_southwell", t_w * 1e6,
+                 f"iters_to_target={it_w}")
+            rows.append([name + tag, n_colors, target, it_j, it_g, it_s,
+                         it_w, float(gj[-1]), float(gg[-1])])
     write_csv("sweep_iterations",
               ["graph", "colors", "jacobian_obj100", "jacobian_iters",
-               "gauss_seidel_iters", "stale3_iters",
+               "gauss_seidel_iters", "stale3_iters", "gauss_southwell_iters",
                "jacobian_gamma_final", "gauss_seidel_gamma_final"], rows)
     write_csv("sweep_gamma",
               ["graph", "iter", "jacobian_gamma_mean", "jacobian_gamma_min",

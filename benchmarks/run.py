@@ -18,6 +18,9 @@ experiments/benchmarks/.
   async     convergence-vs-delay×drop frontier of the netsim event-tape
             executor (fit_async) across topologies → async_frontier.csv
             (BENCH_SMOKE=1 shrinks the grid for CI)
+  robustness  consensus-vs-attack frontier: Byzantine adversary tapes ×
+            robust aggregators × topologies (+ membership-churn cells)
+            → robustness_frontier.csv (BENCH_SMOKE=1 shrinks the grid)
   roofline  aggregated dry-run roofline table (deliverable g) + the
             analytic Gram-engine roofline (tri vs dense vs two-matmul)
   kernels   Pallas-kernel correctness probes, op timings (labeled
@@ -34,7 +37,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         asynchrony, communication, consensus, convergence, generalization,
-        kernels, roofline, topology,
+        kernels, robustness, roofline, topology,
     )
 
     suites = [
@@ -48,6 +51,7 @@ def main() -> None:
         ("topology", topology.run),
         ("schedule", topology.run_schedule),
         ("async", asynchrony.run),
+        ("robustness", robustness.run),
         ("kernels", kernels.run),
         ("roofline", roofline.run),
     ]

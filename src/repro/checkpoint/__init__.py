@@ -6,6 +6,7 @@ from repro.checkpoint.checkpoint import (
 )
 from repro.checkpoint.runstate import (
     load_run_checkpoint,
+    remap_membership,
     run_checkpointed,
     save_run_checkpoint,
 )
@@ -16,6 +17,7 @@ __all__ = [
     "read_meta",
     "save_checkpoint",
     "load_run_checkpoint",
+    "remap_membership",
     "run_checkpointed",
     "save_run_checkpoint",
 ]

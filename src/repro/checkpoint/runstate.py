@@ -166,3 +166,96 @@ def run_checkpointed(runner, *, checkpoint_dir: str | Path,
         if exit_after is not None and done >= int(exit_after):
             os._exit(0)   # crash injection: die AT a checkpoint boundary
     return state, _concat_diags(parts)
+
+
+def remap_membership(state: Any, old_g: Any, new_g: Any) -> Any:
+    """Restore a RunState snapshot onto a DIFFERENT live-agent set.
+
+    The elastic-membership restore: a run checkpointed on ``old_g`` resumes
+    on ``new_g`` — agents are index-aligned (agent ``i`` of the old roster
+    is agent ``i`` of the new one while ``i < min(m_old, m_new)``; higher
+    indices departed or joined), and the recorded hard part — dual-slot
+    remapping — is done once here:
+
+    * a surviving agent keeps its ``U``/``A`` (and ``hist`` rows) bitwise;
+    * a JOINING agent (index >= old m) warm-starts ``U``/``A`` from the
+      mean of its surviving ``new_g`` neighbors (the all-ones initial
+      state when it joins into isolation), with its ``hist`` slots seeded
+      to that warm start;
+    * a dual follows its undirected edge: same orientation copies bitwise,
+      a flipped orientation negates (the consensus problem is
+      orientation-invariant up to the dual's sign), an edge with no
+      surviving counterpart starts from the zero initial dual — dual-slot
+      retirement for departed edges falls out of the edge set itself;
+    * ``k`` and the diagnostics prefix are untouched.
+
+    Identity oracle: ``remap_membership(state, g, g)`` is bitwise the npz
+    round-trip of ``state`` (asserted in tests).  Only the DENSE per-edge
+    dual layout (``lam.shape[0] == old_g.n_edges`` — the dense/colored/
+    async executors) is remappable; the shard_map executors' per-slot
+    layouts must be restored onto their original mesh first.
+    """
+    fields = state._asdict()
+    lam = np.asarray(jax.device_get(fields["lam"]))
+    if lam.shape[0] != old_g.n_edges:
+        raise ValueError(
+            f"remap_membership needs the dense per-edge dual layout "
+            f"(lam leading axis E={old_g.n_edges}); got lam.shape="
+            f"{lam.shape}. The sharded executors' per-slot dual layouts "
+            f"are not remappable here — restore onto the original mesh "
+            f"and export through a dense-layout executor first."
+        )
+    m_old, m_new = int(old_g.m), int(new_g.m)
+    n_keep = min(m_old, m_new)
+    U = np.asarray(jax.device_get(fields["U"]))
+    A = np.asarray(jax.device_get(fields["A"]))
+    if U.shape[0] != m_old:
+        raise ValueError(
+            f"state carries {U.shape[0]} agents but old_g has m={m_old}"
+        )
+
+    U_out = np.ones((m_new,) + U.shape[1:], U.dtype)
+    A_out = np.ones((m_new,) + A.shape[1:], A.dtype)
+    U_out[:n_keep] = U[:n_keep]
+    A_out[:n_keep] = A[:n_keep]
+    for t in range(m_old, m_new):
+        nbrs = sorted(
+            {e if s == t else s for (s, e) in new_g.edges if t in (s, e)}
+        )
+        nbrs = [x for x in nbrs if x < n_keep]
+        if nbrs:
+            U_out[t] = U[nbrs].mean(axis=0)
+            A_out[t] = A[nbrs].mean(axis=0)
+
+    # orientation-aware dual matching over undirected edges
+    old_idx: dict = {}
+    for j, (s, e) in enumerate(old_g.edges):
+        old_idx[(s, e)] = (j, False)
+        old_idx[(e, s)] = (j, True)
+    def _remap_lam(lam_old, zero_like):
+        out = np.zeros((new_g.n_edges,) + zero_like.shape[1:],
+                       zero_like.dtype)
+        for j, (s, e) in enumerate(new_g.edges):
+            hit = old_idx.get((s, e))
+            if hit is not None and s < n_keep and e < n_keep:
+                jj, flipped = hit
+                out[j] = -lam_old[jj] if flipped else lam_old[jj]
+        return out
+
+    fields["U"] = U_out
+    fields["A"] = A_out
+    fields["lam"] = _remap_lam(lam, lam)
+    hist = fields.get("hist")
+    if hist is not None:
+        hist = np.asarray(jax.device_get(hist))
+        h_out = np.empty((hist.shape[0], m_new) + hist.shape[2:], hist.dtype)
+        h_out[:, :n_keep] = hist[:, :n_keep]
+        h_out[:, n_keep:] = U_out[None, n_keep:]
+        fields["hist"] = h_out
+    lam_hist = fields.get("lam_hist")
+    if lam_hist is not None:
+        lam_hist = np.asarray(jax.device_get(lam_hist))
+        fields["lam_hist"] = np.stack(
+            [_remap_lam(lam_hist[q], lam) for q in range(lam_hist.shape[0])]
+        )
+    return type(state)(**fields)

@@ -191,6 +191,11 @@ def fit(
             "feature_map= only applies to cfg.stats_producer='fused', got "
             f"stats_producer={cfg.stats_producer!r}"
         )
+    if cfg.aggregator not in engine.AGGREGATORS:
+        raise ValueError(
+            f"unknown cfg.aggregator {cfg.aggregator!r}; registered: "
+            f"{sorted(engine.AGGREGATORS)}"
+        )
     if executor not in ("dense", "sharded", "colored", "async"):
         raise ValueError(
             f"unknown executor {executor!r}; expected 'dense', 'sharded', "

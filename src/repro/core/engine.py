@@ -99,7 +99,26 @@ pinned to the reference by a parity oracle (all asserted in tests):
                             ``fit_dense`` (bitwise), ``constant_tape(k)``
                             ≡ ``fit_colored(staleness=k)``, an all-dropped
                             channel ≡ ``fit_colored(staleness>=iters)``
-                            (every view pinned at U^0).
+                            (every view pinned at U^0), and a zero-attack
+                            full-membership ``AdversaryTape`` ≡ its base
+                            ``EventTape`` (bitwise).
+
+Robust aggregation (``cfg.aggregator``) threads through ALL FIVE rows:
+``"mean"`` keeps every executor's pre-existing plain-sum gather verbatim
+(segment sums, ppermute adds — the bitwise parity oracle for the knob),
+while ``"trimmed_mean"`` / ``"coordinate_median"`` / ``"krum_like"``
+replace ``neigh_sum`` with ``deg * robust_center(received views + own U)``
+— dense/colored/GS gather a padded (m, K) neighbor table, the sharded
+executors stack their per-round/per-axis ppermute deliveries (round-mask
+aware on ``fit_sharded_graph``: idle-round zeros are EXCLUDED, never
+treated as candidates), and ``fit_async`` feeds the per-tick delivered
+(possibly adversary-corrupted) views.  Membership events ride only the
+async executor: an ``AdversaryTape``'s per-tick ``member`` row masks a
+departed agent's edges out of every reduction (its duals freeze via the
+masked residuals), re-resolves the scalar-tau proximal weight against the
+LIVE degree, freezes the agent itself like a straggler tick, and
+warm-starts a (re)joining agent from the aggregate of its live neighbors;
+the other four executors treat membership as out of scope (static graphs).
 
 The executor contract: all five return per-iteration diagnostics with the
 SAME keys — ``objective`` (primal, eq. 12), ``lagrangian`` (eq. 13),
@@ -536,6 +555,17 @@ class ConsensusConfig:
     # the consensus residual is still large, freezing the duals.  A small
     # floor (e.g. 0.05) keeps the dual ascent alive for those executors.
     gamma_floor: float = 0.0
+    # Neighbor-aggregation rule for the consensus reduction (AGGREGATORS
+    # key): "mean" is the paper's plain sum-of-neighbors (every executor's
+    # pre-existing segment-sum / ppermute-sum path, bitwise untouched — the
+    # parity oracle); the robust rules ("trimmed_mean",
+    # "coordinate_median", "krum_like") replace the mean of received
+    # subspaces with a Byzantine-resilient center over the received views
+    # PLUS the receiver's own U (self-inclusion keeps degree-<=2 reductions
+    # meaningful), scaled back by the live degree so ``agent_update`` is
+    # untouched.  Mask-aware: departed/absent neighbors are excluded from
+    # the candidate set rather than averaged in as zeros.
+    aggregator: str = "mean"
 
 
 def _u_solve_kron(G, M, rhs, c, precomp=None):
@@ -678,6 +708,124 @@ def _resolve_tau_zeta(cfg: ConsensusConfig, deg: jax.Array, m: int, dtype):
 
 
 # --------------------------------------------------------------------------
+# Robust neighbor aggregation (Byzantine resilience, ROADMAP item 4a)
+# --------------------------------------------------------------------------
+#
+# An aggregator replaces the plain mean of the views an agent received with
+# a Byzantine-resilient center.  Signature: ``fn(V, M) -> center`` where
+# ``V`` is ``(..., K, L, r)`` candidate views stacked on axis -3 and ``M``
+# is a ``(..., K)`` {0, 1} validity mask (dropped / departed / padded
+# candidates carry 0 and are EXCLUDED, never averaged in as zeros).  The
+# executors always append the receiver's OWN current U as one candidate —
+# on degree-2 rings a median over two foreign views alone is meaningless —
+# and rescale the center by the live degree so ``agent_update``'s
+# ``rho * neigh_sum`` term (and hence the solver body) is untouched:
+# ``neigh_sum = deg_eff * center``.  ``"mean"`` deliberately maps to None:
+# executors keep their pre-existing segment-sum / ppermute-sum code paths
+# verbatim, which is the bitwise parity oracle for this knob.
+#
+# All three robust rules are candidate-ORDER-invariant (sorting per
+# coordinate, or an order-free score), so executors that assemble the
+# candidate axis in different orders (edge-list gather vs ppermute rounds)
+# still agree to float tolerance.
+
+
+def _sorted_candidates(V: jax.Array, M: jax.Array) -> jax.Array:
+    """(..., K, L, r) + mask -> per-coordinate ascending sort (..., L, r, K)
+    with invalid candidates pushed to the top via a +huge sentinel."""
+    Vk = jnp.moveaxis(V, -3, -1)                       # (..., L, r, K)
+    Mk = M[..., None, None, :]                         # (..., 1, 1, K)
+    big = jnp.asarray(jnp.finfo(V.dtype).max, V.dtype)
+    return jnp.sort(jnp.where(Mk > 0, Vk, big), axis=-1)
+
+
+def _agg_trimmed_mean(V: jax.Array, M: jax.Array) -> jax.Array:
+    """Coordinate-wise trimmed mean: drop the single smallest and largest
+    VALID value per coordinate (only when >= 3 candidates are valid, else
+    plain masked mean), average the rest."""
+    Vs = _sorted_candidates(V, M)                      # (..., L, r, K)
+    de = jnp.sum(M, axis=-1)[..., None, None, None]    # (..., 1, 1, 1)
+    b = jnp.where(de >= 3.0, 1.0, 0.0)
+    pos = jnp.arange(V.shape[-3], dtype=V.dtype)       # (K,)
+    w = (pos >= b) & (pos < de - b)                    # (..., 1, 1, K)
+    kept = jnp.where(w, Vs, 0.0)          # where (not *) — sentinel*0 = nan
+    cnt = jnp.maximum(de - 2.0 * b, 1.0)
+    return jnp.sum(kept, axis=-1) / cnt[..., 0]
+
+
+def _agg_coordinate_median(V: jax.Array, M: jax.Array) -> jax.Array:
+    """Coordinate-wise median over the valid candidates (midpoint of the
+    two central order statistics when the valid count is even)."""
+    Vs = _sorted_candidates(V, M)                      # (..., L, r, K)
+    n = jnp.maximum(jnp.sum(M, axis=-1).astype(jnp.int32), 1)
+    lo = jnp.broadcast_to(
+        ((n - 1) // 2)[..., None, None, None], Vs.shape[:-1] + (1,)
+    )
+    hi = jnp.broadcast_to((n // 2)[..., None, None, None], lo.shape)
+    vlo = jnp.take_along_axis(Vs, lo, axis=-1)[..., 0]
+    vhi = jnp.take_along_axis(Vs, hi, axis=-1)[..., 0]
+    return 0.5 * (vlo + vhi)
+
+
+def _agg_krum_like(V: jax.Array, M: jax.Array) -> jax.Array:
+    """Krum-flavored medoid: pick the single valid candidate minimizing the
+    summed squared distance to all valid candidates.  Unlike the
+    coordinate-wise rules the center is one agent's ACTUAL subspace, which
+    matters when coordinate mixing would leave the consensus manifold."""
+    Vf = V.reshape(V.shape[:-2] + (-1,))               # (..., K, L*r)
+    D = jnp.sum((Vf[..., :, None, :] - Vf[..., None, :, :]) ** 2, axis=-1)
+    score = jnp.sum(M[..., None, :] * D, axis=-1)      # (..., K)
+    big = jnp.asarray(jnp.finfo(V.dtype).max, V.dtype)
+    idx = jnp.argmin(jnp.where(M > 0, score, big), axis=-1)
+    idx_b = jnp.broadcast_to(
+        idx[..., None, None, None], V.shape[:-3] + (1,) + V.shape[-2:]
+    )
+    return jnp.take_along_axis(V, idx_b, axis=-3)[..., 0, :, :]
+
+
+AGGREGATORS: dict[str, Callable | None] = {
+    "mean": None,                # sentinel: executors keep their plain-sum path
+    "trimmed_mean": _agg_trimmed_mean,
+    "coordinate_median": _agg_coordinate_median,
+    "krum_like": _agg_krum_like,
+}
+
+
+def register_aggregator(name: str, fn: Callable) -> None:
+    """Extension point: fn(V, M) -> center over the (..., K, L, r) candidate
+    axis with a (..., K) {0, 1} validity mask (see AGGREGATORS notes)."""
+    AGGREGATORS[name] = fn
+
+
+def resolve_aggregator(cfg: ConsensusConfig) -> Callable | None:
+    """cfg.aggregator -> the aggregation fn, or None for the plain mean."""
+    if cfg.aggregator not in AGGREGATORS:
+        raise ValueError(
+            f"unknown aggregator {cfg.aggregator!r}; registered: "
+            f"{sorted(AGGREGATORS)}"
+        )
+    return AGGREGATORS[cfg.aggregator]
+
+
+def neighbor_table(g: Graph):
+    """Host-side padded adjacency table: (nbr_idx, nbr_mask) numpy arrays of
+    shape (m, K_max) — the gather layout the robust aggregators consume."""
+    import numpy as np
+
+    nbrs: list[list[int]] = [[] for _ in range(g.m)]
+    for s, e in g.edges:
+        nbrs[s].append(e)
+        nbrs[e].append(s)
+    K = max((len(x) for x in nbrs), default=1) or 1
+    nbr_idx = np.zeros((g.m, K), np.int32)
+    nbr_mask = np.zeros((g.m, K), np.float32)
+    for t, lst in enumerate(nbrs):
+        nbr_idx[t, : len(lst)] = lst
+        nbr_mask[t, : len(lst)] = 1.0
+    return nbr_idx, nbr_mask
+
+
+# --------------------------------------------------------------------------
 # Shared edge-list machinery of the single-program executors (1 and 3)
 # --------------------------------------------------------------------------
 
@@ -729,10 +877,28 @@ def _edge_setup(
         """C x per edge: x[s] - x[e] for every edge (s, e)."""
         return x[src] - x[dst]
 
-    def neighbor_sum(U):
-        return jax.ops.segment_sum(U[dst], src, m) + jax.ops.segment_sum(
-            U[src], dst, m
-        )
+    agg = resolve_aggregator(cfg)
+    if agg is None:
+
+        def neighbor_sum(U):
+            return jax.ops.segment_sum(U[dst], src, m) + jax.ops.segment_sum(
+                U[src], dst, m
+            )
+
+    else:
+        # Robust path: gather each agent's neighbor views into a padded
+        # (m, K, L, r) candidate tensor, append the agent's own U, and
+        # rescale the robust center back to a degree-weighted sum so the
+        # solver body downstream is untouched.
+        nbr_idx_np, nbr_mask_np = neighbor_table(g)
+        nbr_idx = jnp.asarray(nbr_idx_np)
+        nbr_mask = jnp.asarray(nbr_mask_np, dtype)
+        ones_m1 = jnp.ones((m, 1), dtype)
+
+        def neighbor_sum(U):
+            V = jnp.concatenate([U[nbr_idx], U[:, None]], axis=1)
+            Mv = jnp.concatenate([nbr_mask, ones_m1], axis=1)
+            return deg[:, None, None] * agg(V, Mv)
 
     def ct_transpose(lam):
         """C_t^T lambda: +lam on edges where t is the source, - where end."""
@@ -1088,6 +1254,7 @@ def _make_colored_runner(
 ) -> Runner:
     es = _edge_setup(stats, g, cfg)
     stats = es.stats
+    robust_agg = resolve_aggregator(cfg)
 
     # Class-constant slices (stats, precomp, degrees) and the per-class
     # incident-edge lists are gathered ONCE, outside the ADMM scan — only
@@ -1139,8 +1306,16 @@ def _make_colored_runner(
         ct_lam_full = es.ct_transpose(lam)
         for idx, stats_c, precomp_c, (deg_c, tau_c, zeta_c), gather_c in phases:
             view = U if staleness == 0 else hist[0]
+            # robust aggregators need the full candidate set, so the robust
+            # path reuses the full-graph ``es.neighbor_sum`` and slices the
+            # class rows; the mean path keeps the O(E)-total per-class
+            # gather (and its bitwise parity with fit_dense).
+            gathered = (
+                gather_c(view) if robust_agg is None
+                else es.neighbor_sum(view)[idx]
+            )
             msgs = NeighborMsgs(
-                gather_c(view), ct_lam_full[idx], deg_c, tau_c, zeta_c
+                gathered, ct_lam_full[idx], deg_c, tau_c, zeta_c
             )
             U_c, A_c = es.body(
                 stats_c, AgentState(U[idx], A[idx], None), msgs, precomp_c
@@ -1439,8 +1614,10 @@ def ring_iteration(
     zeta_t = jnp.asarray(cfg.zeta, dtype)
 
     # --- gather neighbor subspaces and incoming edge duals --------------
+    robust_agg = resolve_aggregator(cfg)
     neigh = jnp.zeros_like(U)
     ct_lam = jnp.zeros_like(U)
+    views = []
     u_next_old = []
     own_edge = []
     for ax_i, (ax, n_ax) in enumerate(zip(agent_axes, ax_sizes)):
@@ -1450,15 +1627,24 @@ def ring_iteration(
             # single edge: the one neighbor arrives on both permutes —
             # count it once, and only agent 0 owns the edge dual
             neigh = neigh + u_next
+            views.append(u_next)
             own = (jax.lax.axis_index(ax) == 0).astype(dtype)
         else:
             u_prev = _ring_recv_from_prev(U, ax)        # U_{t-1}^k
             neigh = neigh + u_next + u_prev
+            views.extend((u_next, u_prev))
             own = jnp.asarray(1.0, dtype)
         # C_t^T lambda: +lam on own (s-side) edge, -lam on incoming (e-side).
         ct_lam = ct_lam + lam[ax_i] - lam_prev
         u_next_old.append(u_next)
         own_edge.append(own)
+    if robust_agg is not None:
+        # stack the received views + own U as candidates; every ring
+        # neighbor is live, so the mask is all-ones and the robust center
+        # rescales back to the degree-weighted sum agent_update expects
+        V = jnp.stack(views + [U], axis=0)              # (K+1, L, r)
+        Mv = jnp.ones((V.shape[0],), dtype)
+        neigh = deg * robust_agg(V, Mv)
 
     # --- the shared per-agent body ---------------------------------------
     msgs = NeighborMsgs(neigh, ct_lam, deg, tau_t, zeta_t)
@@ -1689,6 +1875,16 @@ def _make_sharded_graph_runner(
     pmask_all = jnp.zeros((m, n_phases), dtype)                  # (m, phases)
     for p, cls in enumerate(schedule):
         pmask_all = pmask_all.at[jnp.asarray(cls, jnp.int32), p].set(1.0)
+    robust_agg = resolve_aggregator(cfg)
+    # round-participation mask: rmask[t, rr] = 1 iff round rr delivers a
+    # partner's U to agent t (idle shards receive ppermute zeros, which the
+    # robust aggregators must EXCLUDE rather than treat as candidates);
+    # sum over rounds equals the agent's degree by construction
+    rmask_rows = [[0.0] * n_rounds for _ in range(m)]
+    for rr in range(n_rounds):
+        for _s, dd in sched.bidir_perms[rr]:
+            rmask_rows[dd][rr] = 1.0
+    rmask_all = jnp.asarray(rmask_rows, dtype)                   # (m, rounds)
 
     def init_fn():
         # stacked all-ones/zeros state placed shard-per-agent; arriving
@@ -1709,14 +1905,15 @@ def _make_sharded_graph_runner(
         return RunState(U=sh, A=sh, lam=sh, k=NamedSharding(mesh, P()))
 
     def body(G_blk, R_blk, n_blk, t2_blk, deg_blk, tau_blk, zeta_blk,
-             slot_blk, own_blk, pmask_blk, U_blk, A_blk, lam_blk, *,
-             n_seg):
+             slot_blk, own_blk, pmask_blk, rmask_blk, U_blk, A_blk, lam_blk,
+             *, n_seg):
         stats_t = SufficientStats(
             G=G_blk[0], R=R_blk[0], n=n_blk[0], t2=t2_blk[0]
         )
         precomp = hoist_precomp(stats_t, cfg)   # eigh ONCE, outside the scan
         deg_t, tau_t, zeta_t = deg_blk[0], tau_blk[0], zeta_blk[0]
         slots, own, pmask = slot_blk[0], own_blk[0], pmask_blk[0]
+        rmask = rmask_blk[0]
         U0, A0, lam0 = U_blk[0], A_blk[0], lam_blk[0]
 
         def exchange(x):
@@ -1726,6 +1923,16 @@ def _make_sharded_graph_runner(
                 jax.lax.ppermute(x, axes_t, sched.bidir_perms[rr])
                 for rr in range(n_rounds)
             ]
+
+        def reduce_nb(nb, U):
+            """Per-round neighbor views -> the agent_update neigh_sum: the
+            plain sum (mean path, bitwise the pre-existing reduce), or the
+            robust center over round-live views + own U, degree-rescaled."""
+            if robust_agg is None:
+                return functools.reduce(jnp.add, nb)
+            V = jnp.stack(list(nb) + [U], axis=0)       # (rounds + 1, L, r)
+            Mv = jnp.concatenate([rmask, jnp.ones((1,), dtype)])
+            return deg_t * robust_agg(V, Mv)
 
         def step(carry, _):
             U, A, lam = carry
@@ -1743,7 +1950,7 @@ def _make_sharded_graph_runner(
             for p in range(n_phases):
                 if p > 0:
                     nb = exchange(U)            # live U: Gauss-Seidel phases
-                neigh = functools.reduce(jnp.add, nb)
+                neigh = reduce_nb(nb, U)
                 msgs = NeighborMsgs(neigh, ct_lam, deg_t, tau_t, zeta_t)
                 U_upd, A_upd = agent_update(
                     stats_t, AgentState(U, A, lam), msgs, cfg,
@@ -1799,14 +2006,15 @@ def _make_sharded_graph_runner(
         shard_fn = compat.shard_map(
             functools.partial(body, n_seg=n),
             mesh=mesh,
-            in_specs=(spec_batched,) * 13,
+            in_specs=(spec_batched,) * 14,
             out_specs=(
                 spec_batched, spec_batched, spec_batched, P(None, axes_t),
             ),
         )
         U, A, lam, diags = shard_fn(
             stats.G, stats.R, n_all, t2_all, deg_all, tau_all, zeta_all,
-            slot_all, own_all, pmask_all, state.U, state.A, state.lam
+            slot_all, own_all, pmask_all, rmask_all,
+            state.U, state.A, state.lam
         )
         diags = _assemble_sharded_diags(diags, g.n_edges, L * cfg.r)
         return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags

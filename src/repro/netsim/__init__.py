@@ -14,10 +14,21 @@ the update math:
 * ``executor.fit_async``   — executor 5: one ``jax.lax.scan`` over the tape
   around the unchanged ``engine.agent_update`` body, stale views served
   from a ring buffer of published subspaces (and optionally duals).
+* ``adversary.AdversaryModel`` — Byzantine attack plans (sign_flip /
+  gaussian_noise / stale_replay / colluding_offset on the published views)
+  plus join/leave membership churn, sampled into ``AdversaryTape``
+  extensions the same executor replays; pairs with the robust
+  ``cfg.aggregator`` registry (``engine.AGGREGATORS``).
 * ``frontier``             — iters-to-gap bookkeeping for the
-  ``benchmarks/asynchrony`` convergence-vs-delay frontier.
+  ``benchmarks/asynchrony`` / ``benchmarks/robustness`` frontiers.
 """
 
+from repro.netsim.adversary import (
+    ATTACK_KINDS,
+    AdversaryModel,
+    AdversaryTape,
+    zero_adversary_tape,
+)
 from repro.netsim.channels import DELAY_KINDS, ChannelModel
 from repro.netsim.events import (
     EventTape,
@@ -30,6 +41,7 @@ from repro.netsim.executor import fit_async
 from repro.netsim.frontier import gap_target, iters_to_target, tape_summary
 
 __all__ = [
+    "ATTACK_KINDS", "AdversaryModel", "AdversaryTape", "zero_adversary_tape",
     "DELAY_KINDS", "ChannelModel",
     "EventTape", "ages_from_arrivals", "constant_tape", "validate_tape",
     "zero_delay_tape",

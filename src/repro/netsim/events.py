@@ -109,6 +109,48 @@ def validate_tape(
         )
     if not np.isin(active, (0.0, 1.0)).all():
         raise ValueError("active must be a {0, 1} mask")
+    # Duck-typed adversary extension (repro.netsim.adversary.AdversaryTape):
+    # plain EventTapes carry none of these fields and skip the block.
+    attack = getattr(tape, "attack", None)
+    if attack is not None:
+        attack = np.asarray(attack)
+        member = np.asarray(tape.member)
+        noise = np.asarray(tape.noise)
+        offset = np.asarray(tape.offset)
+        if attack.shape != (n_iters, g.m):
+            raise ValueError(
+                f"attack must be ({n_iters}, m={g.m}), got {attack.shape}"
+            )
+        if attack.min() < 0 or attack.max() > 4:
+            raise ValueError(
+                f"attack codes must be in [0, 4], got "
+                f"[{attack.min()}, {attack.max()}]"
+            )
+        if member.shape != (n_iters, g.m):
+            raise ValueError(
+                f"member must be ({n_iters}, m={g.m}), got {member.shape}"
+            )
+        if not np.isin(member, (0.0, 1.0)).all():
+            raise ValueError("member must be a {0, 1} mask")
+        if noise.shape[:2] != (n_iters, g.m) or noise.ndim != 4:
+            raise ValueError(
+                f"noise must be ({n_iters}, m={g.m}, L, r), got {noise.shape}"
+            )
+        if offset.shape != noise.shape[2:]:
+            raise ValueError(
+                f"offset must match noise payload shape {noise.shape[2:]}, "
+                f"got {offset.shape}"
+            )
+        if (attack * (member == 0.0)).any():
+            raise ValueError(
+                "an absent agent cannot attack: attack must be 0 wherever "
+                "member is 0"
+            )
+        if (active * (member == 0.0)).any():
+            raise ValueError(
+                "an absent agent cannot compute: active must be 0 wherever "
+                "member is 0"
+            )
 
 
 def zero_delay_tape(iters: int, g: Graph) -> EventTape:

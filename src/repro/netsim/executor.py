@@ -37,12 +37,28 @@ re-validates the tape suffix it is about to replay
 contract, every row reports ``tape_cursor`` — the absolute tick it was
 computed at — so a resumed run can be audited against its tape position.
 
+Adversary + membership tier (``repro.netsim.adversary.AdversaryTape``,
+duck-typed on ``.attack``): published views are corrupted per directed
+edge by the sender's attack code (sign_flip / gaussian_noise /
+stale_replay / colluding_offset; ``aged_duals`` corrupts the shipped dual
+the same way, with a replayed dual = the zero initial dual), and the
+per-tick ``member`` row drives elastic membership — dead edges leave
+every reduction (dynamic degree masking re-resolves the scalar-tau
+proximal weight; masked residuals freeze the dead edge's dual), absent
+agents freeze like stragglers, and a (re)joining agent warm-starts from
+the aggregate of its live neighbors.  ``cfg.aggregator`` picks the
+neighbor reduction: ``"mean"`` keeps the plain segment sums, the robust
+rules feed the delivered (possibly corrupted) views + the receiver's own
+U through ``engine.AGGREGATORS`` with dead deliveries mask-excluded.
+
 Parity oracles (asserted in tests/test_netsim.py):
 
 * ``zero_delay_tape``  -> bitwise ``engine.fit_dense``;
 * ``constant_tape(k)`` -> ``engine.fit_colored(staleness=k)``;
 * all-dropped channel  -> ``fit_colored(staleness >= iters)`` (every view
-  pinned at ``U^0``).
+  pinned at ``U^0``);
+* zero-attack full-membership ``AdversaryTape`` -> bitwise the same run
+  on its base ``EventTape`` (the tier-B pass-through oracle).
 """
 
 from __future__ import annotations
@@ -91,9 +107,55 @@ def make_async_runner(
     active_np = np.asarray(tape.active)
     edge_ids = jnp.arange(E, dtype=jnp.int32)
 
+    # Tier-B extensions: adversary corruption + elastic membership (an
+    # AdversaryTape, duck-typed on .attack) and/or robust aggregation
+    # (cfg.aggregator != "mean").  Both are Python-level flags, so the
+    # plain-tape mean path traces EXACTLY the pre-existing op sequence —
+    # the bitwise oracle — and every tier-B op is a where/(* 1.0)
+    # pass-through under zero attack and full membership.
+    is_adv = getattr(tape, "attack", None) is not None
+    robust_agg = engine.resolve_aggregator(cfg)
+    if is_adv:
+        attack_np = np.asarray(tape.attack)
+        noise_np = np.asarray(tape.noise)
+        offset_np = np.asarray(tape.offset)
+        member_np = np.asarray(tape.member, np.float32)
+        # member at the previous tick, host-shifted (tick 0 has no previous
+        # publish: treat the initial roster as the prior membership so a
+        # tick-0 "joiner" does not warm-start off nothing)
+        member_prev_np = (
+            np.concatenate([member_np[:1], member_np[:-1]], axis=0)
+            if member_np.shape[0] else member_np
+        )
+        offset_j = jnp.asarray(offset_np, dtype)
+        scalar_tau = jnp.asarray(cfg.tau).ndim == 0
+        tau0 = jnp.asarray(cfg.tau, dtype)
+    if robust_agg is not None:
+        # padded per-receiver table over the 2E directed deliveries
+        # (rows [0, E) = view0 to src, rows [E, 2E) = view1 to dst)
+        recv = np.concatenate([
+            np.asarray([e[0] for e in g.edges], np.int64),
+            np.asarray([e[1] for e in g.edges], np.int64),
+        ])
+        rows: list[list[int]] = [[] for _ in range(m)]
+        for i, t in enumerate(recv):
+            rows[int(t)].append(i)
+        K_pad = max((len(x) for x in rows), default=1) or 1
+        pad_np = np.zeros((m, K_pad), np.int32)
+        pmask_np = np.zeros((m, K_pad), np.float32)
+        for t, lst in enumerate(rows):
+            pad_np[t, : len(lst)] = lst
+            pmask_np[t, : len(lst)] = 1.0
+        pad_idx = jnp.asarray(pad_np)
+        pad_mask = jnp.asarray(pmask_np, dtype)
+        ones_m1 = jnp.ones((m, 1), dtype)
+
     def step(carry, xs):
         U, A, lam, hist, lam_hist = carry
-        age_k, act_k, k = xs                           # k = ABSOLUTE tick
+        if is_adv:
+            age_k, act_k, code_k, noise_k, member_k, member_prev_k, k = xs
+        else:
+            age_k, act_k, k = xs                       # k = ABSOLUTE tick
         slot0 = jnp.mod(k - age_k[0], depth)           # e -> s views
         slot1 = jnp.mod(k - age_k[1], depth)           # s -> e views
         # aged neighbor views per directed edge, summed per receiving agent
@@ -101,25 +163,103 @@ def make_async_runner(
         # neighbor_sum — the zero-delay tape stays bitwise-identical
         view0 = hist[slot0, dst]                       # (E, L, r)
         view1 = hist[slot1, src]
-        neigh = jax.ops.segment_sum(view0, src, m) + jax.ops.segment_sum(
-            view1, dst, m
-        )
+        if is_adv:
+            # corrupt the PUBLISHED view per directed edge, gated by the
+            # sender's attack code at this tick (view0's sender is dst,
+            # view1's sender is src); stale_replay publishes the initial
+            # U^0 forever
+            def corrupt(v, c, sender):
+                cb = c[:, None, None]
+                out = jnp.where(cb == 1, -v, v)
+                out = jnp.where(cb == 2, v + noise_k[sender], out)
+                out = jnp.where(cb == 3, es.init.U[sender], out)
+                return jnp.where(cb == 4, v + offset_j, out)
+
+            view0 = corrupt(view0, code_k[dst], dst)
+            view1 = corrupt(view1, code_k[src], src)
+            # dynamic degree masking: an edge is live iff BOTH endpoints
+            # are members this tick; the scalar-tau proximal weight is
+            # re-resolved against the live degree (exact small-int fp32
+            # counts — bitwise es.deg/es.tau_t under full membership)
+            el = member_k[src] * member_k[dst]         # (E,)
+            elb = el[:, None, None]
+            deg_eff = jax.ops.segment_sum(el, src, m) + jax.ops.segment_sum(
+                el, dst, m
+            )
+            tau_eff = tau0 + deg_eff if scalar_tau else es.tau_t
+            v0, v1 = view0 * elb, view1 * elb
+        else:
+            elb = None
+            deg_eff, tau_eff = es.deg, es.tau_t
+            v0, v1 = view0, view1
+        if robust_agg is None:
+            neigh = jax.ops.segment_sum(v0, src, m) + jax.ops.segment_sum(
+                v1, dst, m
+            )
+            center = (
+                neigh / jnp.maximum(deg_eff, 1.0)[:, None, None]
+                if is_adv else None
+            )
+        else:
+            # candidate set per agent: its delivered (possibly corrupted)
+            # directed-edge views + its own U; dead-edge deliveries are
+            # EXCLUDED via the validity mask, never fed in as zeros
+            W = jnp.concatenate([view0, view1], axis=0)     # (2E, L, r)
+            mv = pad_mask
+            if is_adv:
+                live2 = jnp.concatenate([el, el])
+                mv = mv * live2[pad_idx]
+            V = jnp.concatenate([W[pad_idx], U[:, None]], axis=1)
+            Mv = jnp.concatenate([mv, ones_m1], axis=1)
+            center = robust_agg(V, Mv)
+            neigh = deg_eff[:, None, None] * center
         if aged_duals:
             # the non-owner endpoint sees the dual that rode the s -> e
             # message; the owner reads its own live dual
             lam_view = lam_hist[slot1, edge_ids]
-            ct_lam = jax.ops.segment_sum(lam, src, m) - jax.ops.segment_sum(
-                lam_view, dst, m
-            )
+            if is_adv:
+                # the shipped dual is corrupted by the same sender (src);
+                # a replayed dual is the ZERO initial dual
+                cb = code_k[src][:, None, None]
+                lv = jnp.where(cb == 1, -lam_view, lam_view)
+                lv = jnp.where(cb == 2, lam_view + noise_k[src], lv)
+                lv = jnp.where(cb == 3, jnp.zeros_like(lam_view), lv)
+                lam_view = jnp.where(cb == 4, lam_view + offset_j, lv)
+                ct_lam = jax.ops.segment_sum(
+                    lam * elb, src, m
+                ) - jax.ops.segment_sum(lam_view * elb, dst, m)
+            else:
+                ct_lam = jax.ops.segment_sum(
+                    lam, src, m
+                ) - jax.ops.segment_sum(lam_view, dst, m)
+        elif is_adv:
+            # dual-slot retirement: a dead edge's dual leaves the gather
+            ct_lam = jax.ops.segment_sum(
+                lam * elb, src, m
+            ) - jax.ops.segment_sum(lam * elb, dst, m)
         else:
             ct_lam = es.ct_transpose(lam)
-        msgs = NeighborMsgs(neigh, ct_lam, es.deg, es.tau_t, es.zeta_t)
-        U_upd, A_upd = es.body(stats, AgentState(U, A, None), msgs, es.precomp)
+        if is_adv:
+            # a (re)joining agent warm-starts from the aggregate of its
+            # live neighbors (kept at U when it rejoins into isolation)
+            join = (member_k * (1.0 - member_prev_k))[:, None, None] > 0
+            U_base = jnp.where(join & (deg_eff[:, None, None] > 0), center, U)
+        else:
+            U_base = U
+        msgs = NeighborMsgs(neigh, ct_lam, deg_eff, tau_eff, es.zeta_t)
+        U_upd, A_upd = es.body(
+            stats, AgentState(U_base, A, None), msgs, es.precomp
+        )
         on = act_k[:, None, None] > 0
-        U_new = jnp.where(on, U_upd, U)                # stragglers republish
+        U_new = jnp.where(on, U_upd, U_base)           # stragglers republish
         A_new = jnp.where(on, A_upd, A)
-        resid_old = es.edge_diff(U)
+        resid_old = es.edge_diff(U_base)
         resid_new = es.edge_diff(U_new)
+        if is_adv:
+            # masked residuals freeze a dead edge's dual: primal == 0 on
+            # the edge, so dual_step's increment is exactly zero there
+            resid_old = resid_old * elb
+            resid_new = resid_new * elb
         lam_new, gamma, primal = dual_step(lam, resid_old, resid_new, cfg)
         hist = hist.at[jnp.mod(k, depth)].set(U_new)
         if aged_duals:
@@ -155,17 +295,43 @@ def make_async_runner(
             )
         if k0 > 0 and n > 0:
             # resumed mid-tape: re-check the suffix about to be replayed
-            validate_tape(
-                EventTape(
-                    age=ages_np[k0:k0 + n], active=active_np[k0:k0 + n]
-                ),
-                g, start=k0,
-            )
+            if is_adv:
+                from repro.netsim.adversary import AdversaryTape
+
+                validate_tape(
+                    AdversaryTape(
+                        age=ages_np[k0:k0 + n],
+                        active=active_np[k0:k0 + n],
+                        attack=attack_np[k0:k0 + n],
+                        noise=noise_np[k0:k0 + n],
+                        offset=offset_np,
+                        member=member_np[k0:k0 + n],
+                    ),
+                    g, start=k0,
+                )
+            else:
+                validate_tape(
+                    EventTape(
+                        age=ages_np[k0:k0 + n], active=active_np[k0:k0 + n]
+                    ),
+                    g, start=k0,
+                )
         xs = (
             jnp.asarray(ages_np[k0:k0 + n], jnp.int32),
             jnp.asarray(active_np[k0:k0 + n], dtype),
             jnp.arange(k0, k0 + n, dtype=jnp.int32),
         )
+        if is_adv:
+            # the extended rows ride the SAME absolute-tick slicing, so the
+            # segment property (mid-tape resume is bitwise) is preserved
+            xs = (
+                xs[0], xs[1],
+                jnp.asarray(attack_np[k0:k0 + n], jnp.int32),
+                jnp.asarray(noise_np[k0:k0 + n], dtype),
+                jnp.asarray(member_np[k0:k0 + n], dtype),
+                jnp.asarray(member_prev_np[k0:k0 + n], dtype),
+                xs[2],
+            )
         carry0 = (state.U, state.A, state.lam, state.hist, state.lam_hist)
         (U, A, lam, hist, lam_hist), diags = jax.lax.scan(step, carry0, xs)
         return RunState(

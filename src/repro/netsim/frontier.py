@@ -24,10 +24,26 @@ def gap_target(objs: np.ndarray, at: int = 100, slack: float = 1e-3) -> float:
     return float(objs[k]) + slack * float(objs[0] - objs[k])
 
 
+DNF = -1
+
+
 def iters_to_target(objs: np.ndarray, target: float) -> int:
-    """First 1-based iteration whose objective is <= target, or -1 (DNF)."""
-    hit = np.nonzero(np.asarray(objs) <= target)[0]
-    return int(hit[0]) + 1 if hit.size else -1
+    """First 1-based iteration whose objective is <= target, or DNF (-1).
+
+    A run whose objective goes non-finite (NaN/inf — heavy-tail + high-drop
+    or Byzantine cells can blow the iterates up) did NOT finish: only the
+    finite prefix before the first non-finite row counts.  Without the
+    truncation a ``-inf`` row would register as a bogus early "hit", and a
+    NaN target would silently compare False everywhere; both now return
+    the explicit DNF sentinel.
+    """
+    objs = np.asarray(objs, np.float64)
+    if not np.isfinite(target):
+        return DNF
+    finite = np.isfinite(objs)
+    horizon = objs.shape[0] if finite.all() else int(np.argmax(~finite))
+    hit = np.nonzero(objs[:horizon] <= target)[0]
+    return int(hit[0]) + 1 if hit.size else DNF
 
 
 def tape_summary(tape: EventTape) -> dict:

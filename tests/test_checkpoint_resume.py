@@ -162,6 +162,83 @@ def test_segment_past_cfg_iters_rejected():
 
 
 # ---------------------------------------------------------------------------
+# elastic membership: RunState remapping across rosters
+# ---------------------------------------------------------------------------
+
+
+def test_remap_membership_identity_is_npz_roundtrip(tmp_path):
+    """Identity oracle: remapping onto the SAME graph must be bitwise the
+    npz round-trip of the state — field for field."""
+    from repro.checkpoint import (
+        load_run_checkpoint, remap_membership, save_run_checkpoint,
+    )
+    from repro.core import engine
+
+    stats, g, cfg = _small_problem()
+    runner = engine.make_runner(stats, g, cfg, executor="dense")
+    state, diags = runner.run_segment(runner.init_state(), 5)
+    save_run_checkpoint(tmp_path, state, diags)
+    loaded, _, _ = load_run_checkpoint(tmp_path, runner.init_state())
+    same = remap_membership(state, g, g)
+    for name, a, b in zip(type(state)._fields, loaded, same):
+        if a is None:
+            assert b is None, name
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"state.{name}")
+
+
+def test_remap_membership_grow_shrink_and_flip():
+    from repro.checkpoint import remap_membership
+    from repro.core import engine
+    from repro.core.graph import Graph, ring
+
+    stats, g, cfg = _small_problem(m=4)
+    runner = engine.make_runner(stats, g, cfg, executor="dense")
+    state, _ = runner.run_segment(runner.init_state(), 4)
+    U = np.asarray(state.U)
+    lam = np.asarray(state.lam)
+
+    # grow ring(4) -> ring(6): survivors bitwise, joiners warm-start from
+    # their surviving new-roster neighbors, fresh edges get zero duals
+    g6 = ring(6)
+    grown = remap_membership(state, g, g6)
+    assert np.asarray(grown.U).shape[0] == 6
+    np.testing.assert_array_equal(np.asarray(grown.U)[:4], U)
+    np.testing.assert_array_equal(np.asarray(grown.U)[4], U[3])  # nbr {3}
+    np.testing.assert_array_equal(np.asarray(grown.U)[5], U[0])  # nbr {0}
+    lam6 = np.asarray(grown.lam)
+    assert lam6.shape[0] == g6.n_edges
+    for j, (s, e) in enumerate(g6.edges):
+        if (s, e) in (tuple(x) for x in g.edges):
+            jj = list(tuple(x) for x in g.edges).index((s, e))
+            np.testing.assert_array_equal(lam6[j], lam[jj], err_msg=str((s, e)))
+        elif s >= 4 or e >= 4:
+            np.testing.assert_array_equal(lam6[j], np.zeros_like(lam6[j]))
+
+    # shrink ring(4) -> ring(3): departed agent 3 dropped, its edges retire
+    shrunk = remap_membership(state, g, ring(3))
+    np.testing.assert_array_equal(np.asarray(shrunk.U), U[:3])
+    assert np.asarray(shrunk.lam).shape[0] == ring(3).n_edges
+
+    # flipped orientation negates the dual (consensus sign convention):
+    # same ring with the FIRST edge's orientation reversed
+    e0 = g.edges[0]
+    flipped = Graph(m=4, edges=((e0[1], e0[0]),) + tuple(g.edges[1:]))
+    flip = remap_membership(state, g, flipped)
+    np.testing.assert_array_equal(np.asarray(flip.lam)[0], -lam[0])
+    for j in range(1, len(g.edges)):
+        np.testing.assert_array_equal(np.asarray(flip.lam)[j], lam[j])
+
+    # the sharded per-slot dual layout is explicitly not remappable
+    import collections
+    Fake = collections.namedtuple("Fake", ["U", "A", "lam", "k"])
+    fake = Fake(U=U, A=np.asarray(state.A), lam=lam[: g.n_edges - 1], k=4)
+    with pytest.raises(ValueError, match="dense per-edge dual layout"):
+        remap_membership(fake, g, g)
+
+
+# ---------------------------------------------------------------------------
 # preemption: kill at iteration k, restart the process, resume — bitwise
 # ---------------------------------------------------------------------------
 
@@ -252,6 +329,26 @@ _EXECUTOR_SETUPS = {
                             straggler_prob=0.1, seed=4).sample(g, cfg.iters)
         runner = engine.make_runner(
             stats, g, cfg, executor="async", tape=tape, aged_duals=True)
+        """
+    ),
+    # kill-mid-attack: the Byzantine tier with robust aggregation AND a
+    # membership churn window straddling the kill_at=3 boundary — the
+    # resumed run must replay the adversary suffix bitwise
+    "async_adversary": textwrap.dedent(
+        """
+        import dataclasses
+        from repro.netsim.adversary import AdversaryModel
+        from repro.netsim.channels import ChannelModel
+        cfg = dataclasses.replace(cfg, aggregator="coordinate_median")
+        base = ChannelModel(delay="geometric", scale=1.0, drop=0.1,
+                            seed=5).sample(g, cfg.iters)
+        tape = AdversaryModel(
+            n_byzantine=1, attack_rate=0.5,
+            kinds=("sign_flip", "gaussian_noise"),
+            churn=((m - 1, 2, 5),), seed=6,
+        ).sample(g, cfg.iters, L=6, r=cfg.r, base=base)
+        runner = engine.make_runner(
+            stats, g, cfg, executor="async", tape=tape)
         """
     ),
 }

@@ -8,6 +8,7 @@ before jax initializes, so the parity test runs in a subprocess with
 XLA_FLAGS set (the main test process keeps the default single device).
 """
 
+import dataclasses
 import os
 import subprocess
 import sys
@@ -263,6 +264,35 @@ _PARITY_SCRIPT = textwrap.dedent(
     np.testing.assert_allclose(
         np.asarray(U4s), np.asarray(dense4s.U), rtol=1e-5, atol=1e-5,
         err_msg="star graph through fit(executor='sharded')")
+
+    # ---- robust aggregators across executors -----------------------------
+    # cfg.aggregator="mean" is the verbatim default path (bitwise, asserted
+    # in the single-process fuzz test); a ROBUST aggregator must keep the
+    # cross-executor parity the mean path has.  Cross-executor runs are not
+    # bitwise even for mean (batched-vs-unbatched XLA lowering), so the bar
+    # is allclose at the usual float-lowering tolerance.
+    import dataclasses as _dc
+    for agg in ("trimmed_mean", "coordinate_median", "krum_like"):
+        cfg_a = _dc.replace(cfg_g, aggregator=agg)
+        dense_a, diag_a = fit_dense(stats, ring(m), cfg_a)
+        assert np.isfinite(np.asarray(dense_a.U)).all(), agg
+        assert set(diag_a) == DIAG_KEYS, (agg, diag_a.keys())
+        col_a, _ = fit_colored(stats, ring(m), cfg_a, staleness=1)
+        np.testing.assert_allclose(
+            np.asarray(col_a.U), np.asarray(dense_a.U), rtol=2e-5, atol=2e-5,
+            err_msg=f"robust {agg}: colored(stale-1) vs dense")
+        U_a, A_a, _ = fit_sharded(stats, mesh, ("agents",), cfg_a)
+        np.testing.assert_allclose(
+            np.asarray(U_a), np.asarray(dense_a.U), rtol=2e-5, atol=2e-5,
+            err_msg=f"robust {agg}: sharded ring vs dense")
+        g_s = star(8)
+        dense_s, _ = fit_dense(stats, g_s, cfg_a)
+        U_s, A_s, diag_s = fit_sharded_graph(
+            stats, mesh_of(8), ("agents",), g_s, cfg_a)
+        np.testing.assert_allclose(
+            np.asarray(U_s), np.asarray(dense_s.U), rtol=2e-5, atol=2e-5,
+            err_msg=f"robust {agg}: sharded_graph star vs dense")
+        assert set(diag_s) == DIAG_KEYS, (agg, diag_s.keys())
     print("ENGINE_EXECUTORS_MATCH")
     """
 )
@@ -666,6 +696,64 @@ def test_executor_parity_fuzz_randomized_graphs_and_solvers(seed):
                                rtol=1e-5, atol=1e-5, err_msg=msg)
     np.testing.assert_array_equal(np.asarray(onecls.U), np.asarray(dense.U),
                                   err_msg=msg)
+    # aggregator fuzz: cfg.aggregator="mean" must be the VERBATIM default
+    # path (bitwise, not allclose — the registry's no-op contract), and a
+    # randomly drawn robust aggregator must stay finite, keep the
+    # diagnostics contract, and preserve the dense/stale-1 executor parity
+    # the mean path has (robust parity is float-lowering close, never
+    # bitwise across executors).
+    cfg_mean = dataclasses.replace(cfg, aggregator="mean")
+    dense_mean, _ = fit_dense(stats, g, cfg_mean)
+    np.testing.assert_array_equal(np.asarray(dense_mean.U),
+                                  np.asarray(dense.U), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(dense_mean.lam),
+                                  np.asarray(dense.lam), err_msg=msg)
+    agg = str(rng.choice(["trimmed_mean", "coordinate_median", "krum_like"]))
+    cfg_r = dataclasses.replace(cfg, aggregator=agg)
+    dense_r, diag_r = fit_dense(stats, g, cfg_r)
+    amsg = msg + f" agg={agg}"
+    assert set(diag_r) == DIAG_KEYS, amsg
+    assert np.isfinite(np.asarray(dense_r.U)).all(), amsg
+    assert np.isfinite(np.asarray(diag_r["objective"])).all(), amsg
+    stale1_r, _ = fit_colored(stats, g, cfg_r, staleness=1)
+    np.testing.assert_allclose(np.asarray(stale1_r.U),
+                               np.asarray(dense_r.U),
+                               rtol=2e-5, atol=2e-5, err_msg=amsg)
+    # ... and a robust aggregate is NOT the mean one (the knob is live)
+    assert not np.array_equal(np.asarray(dense_r.U), np.asarray(dense.U)), \
+        amsg
+
+
+def test_aggregator_registry_validation_and_extension():
+    """The cfg.aggregator knob: unknown names are rejected with the
+    registry listing (at fit time AND before the Gram reduction in the
+    dmtl_elm entry point), and ``register_aggregator`` threads a custom
+    aggregator through the executors."""
+    from repro.core.engine import AGGREGATORS, register_aggregator
+
+    stats = _problem(m=4)
+    g = ring(4)
+    cfg = ConsensusConfig(r=2, iters=3, tau=2.0, zeta=1.0,
+                          aggregator="bogus")
+    with pytest.raises(ValueError, match="unknown aggregator 'bogus'"):
+        fit_dense(stats, g, cfg)
+
+    from repro.core.dmtl_elm import fit
+    H = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 6))
+    T = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 2))
+    with pytest.raises(ValueError, match="unknown cfg.aggregator"):
+        fit(H, T, g, cfg)
+
+    # extension point: an "own echo" aggregator (every agent averages only
+    # itself — the last candidate is the receiver's own U by contract)
+    register_aggregator("own_echo", lambda V, M: V[..., -1, :, :])
+    try:
+        cfg_e = dataclasses.replace(cfg, aggregator="own_echo")
+        state, diag = fit_dense(stats, g, cfg_e)
+        assert np.isfinite(np.asarray(state.U)).all()
+        assert np.isfinite(np.asarray(diag["objective"])).all()
+    finally:
+        AGGREGATORS.pop("own_echo")
 
 
 # --------------------------------------------------------------------------

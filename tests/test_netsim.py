@@ -21,6 +21,8 @@ from repro.core.engine import (
 )
 from repro.core.graph import chain, erdos, paper_fig2a, ring, star
 from repro.netsim import (
+    ATTACK_KINDS,
+    AdversaryModel,
     ChannelModel,
     EventTape,
     constant_tape,
@@ -29,6 +31,7 @@ from repro.netsim import (
     iters_to_target,
     tape_summary,
     validate_tape,
+    zero_adversary_tape,
     zero_delay_tape,
 )
 
@@ -322,6 +325,133 @@ def test_frontier_helpers():
     assert s == {"mean_age": 1.0, "max_age": 1, "active_frac": 1.0}
     s3 = tape_summary(ChannelModel(drop=1.0).sample(g, 6))
     assert s3["max_age"] == 6 and s3["mean_age"] > 1.0
+
+
+def test_iters_to_target_nonfinite_trajectory_is_dnf():
+    """Regression (ISSUE satellite): a run whose objective goes NaN/inf did
+    NOT finish.  Only the finite prefix counts — a ``-inf`` row must not
+    register as a bogus early hit, and a NaN target is DNF outright."""
+    objs = np.array([10.0, 5.0, np.nan, 1.0])
+    assert iters_to_target(objs, 6.0) == 2        # hit INSIDE finite prefix
+    assert iters_to_target(objs, 2.0) == -1       # post-NaN rows don't count
+    blown = np.array([10.0, 8.0, -np.inf, 0.1])
+    assert iters_to_target(blown, 1.0) == -1      # -inf is not a hit
+    assert iters_to_target(np.array([3.0, 2.0]), np.nan) == -1
+    assert iters_to_target(np.full(4, np.nan), 1.0) == -1
+
+
+# --------------------------------------------------------------------------
+# Adversary tapes: sampler invariants + the zero-attack parity oracle
+# --------------------------------------------------------------------------
+
+
+def test_adversary_sampler_validation_and_determinism():
+    g = ring(6)
+    for bad in (dict(n_byzantine=-1), dict(attack_rate=1.5),
+                dict(kinds=("bogus",)), dict(noise_scale=-0.1),
+                dict(churn=((0, 3, 2),)), dict(leave_prob=2.0),
+                dict(mean_absence=0.5)):
+        with pytest.raises(ValueError):
+            AdversaryModel(**bad)
+    with pytest.raises(ValueError, match="exceeds"):
+        AdversaryModel(n_byzantine=7).sample(g, 5, L=4, r=2)
+    adv = AdversaryModel(n_byzantine=2, attack_rate=0.5, leave_prob=0.1,
+                         seed=9)
+    t1 = adv.sample(g, 20, L=4, r=2)
+    t2 = adv.sample(g, 20, L=4, r=2)
+    for a, b in zip(t1, t2):
+        np.testing.assert_array_equal(a, b)
+    t3 = dataclasses.replace(adv, seed=10).sample(g, 20, L=4, r=2)
+    assert not (np.array_equal(t1.attack, t3.attack)
+                and np.array_equal(t1.member, t3.member))
+    # the sampler's own invariant: an absent agent neither attacks nor
+    # computes — and validate_tape rejects a hand-broken tape
+    assert not (t1.attack * (t1.member == 0.0)).any()
+    assert not (t1.active * (t1.member == 0.0)).any()
+    churned = AdversaryModel(churn=((2, 1, 5),)).sample(g, 8, L=4, r=2)
+    bad_attack = churned.attack.copy()
+    bad_attack[2, 2] = ATTACK_KINDS["sign_flip"]     # absent agent attacks
+    with pytest.raises(ValueError, match="absent agent cannot attack"):
+        validate_tape(churned._replace(attack=bad_attack), g, 8)
+
+
+@pytest.mark.parametrize("aged", [False, True], ids=["live_duals", "aged_duals"])
+def test_zero_attack_adversary_tape_is_bitwise_base_tape(aged):
+    """Parity oracle (tier B): a zero-attack full-membership AdversaryTape
+    over a LOSSY channel replays bitwise what the plain EventTape produces
+    — state and every diagnostics trajectory, both dual modes.  The
+    Byzantine machinery must be invisible when the adversary is empty."""
+    stats = _problem()
+    g = paper_fig2a()
+    cfg = ConsensusConfig(r=2, iters=15, tau=2.0, zeta=1.0)
+    base = ChannelModel(delay="geometric", scale=1.0, drop=0.2,
+                        straggler_prob=0.1, seed=3).sample(g, cfg.iters)
+    want, wdiag = fit_async(stats, g, cfg, base, aged_duals=aged)
+    for tape in (zero_adversary_tape(base, L=12, r=cfg.r),
+                 AdversaryModel().sample(g, cfg.iters, L=12, r=cfg.r,
+                                         base=base)):
+        got, gdiag = fit_async(stats, g, cfg, tape, aged_duals=aged)
+        np.testing.assert_array_equal(np.asarray(got.U), np.asarray(want.U))
+        np.testing.assert_array_equal(np.asarray(got.A), np.asarray(want.A))
+        np.testing.assert_array_equal(np.asarray(got.lam),
+                                      np.asarray(want.lam))
+        assert set(gdiag) == ASYNC_DIAG_KEYS
+        for k in sorted(ASYNC_DIAG_KEYS):
+            np.testing.assert_array_equal(np.asarray(gdiag[k]),
+                                          np.asarray(wdiag[k]), err_msg=k)
+
+
+def test_sign_flip_attack_breaks_mean_and_robust_aggregation_recovers():
+    """The tentpole's end-to-end claim in miniature: one sign-flipping
+    Byzantine agent stalls mean-aggregated consensus, and the outlier-
+    rejecting aggregators beat the attacked mean's consensus residual on
+    the SAME tape.  ``krum_like`` is only asserted finite + contract-
+    complete here: its medoid picks a single candidate, and with a ring's
+    3-candidate pools that roughly ties the mean instead of beating it
+    (the committed frontier CSV shows where each defense pays off)."""
+    stats = _problem(m=6)
+    g = ring(6)
+    cfg = ConsensusConfig(r=2, iters=30, tau=2.0, zeta=1.0)
+    tape = AdversaryModel(n_byzantine=1, attack_rate=1.0,
+                          kinds=("sign_flip",), seed=0).sample(
+        g, cfg.iters, L=12, r=cfg.r)
+    _, mdiag = fit_async(stats, g, cfg, tape)
+    mean_cons = float(np.asarray(mdiag["consensus"])[-1])
+    for agg in ("trimmed_mean", "coordinate_median", "krum_like"):
+        cfg_a = dataclasses.replace(cfg, aggregator=agg)
+        state, adiag = fit_async(stats, g, cfg_a, tape)
+        assert np.isfinite(np.asarray(state.U)).all(), agg
+        assert set(adiag) == ASYNC_DIAG_KEYS, agg
+        if agg != "krum_like":
+            robust_cons = float(np.asarray(adiag["consensus"])[-1])
+            assert robust_cons < mean_cons, (agg, robust_cons, mean_cons)
+
+
+def test_membership_churn_freezes_departed_and_rejoins_warm():
+    """Elastic membership end to end: a permanently departed agent stays at
+    its initial all-ones state (its edges leave every reduction); a
+    leave-and-rejoin agent warm-starts from its neighbors and moves."""
+    stats = _problem()
+    g = ring(5)
+    cfg = ConsensusConfig(r=2, iters=12, tau=2.0, zeta=1.0)
+    gone = AdversaryModel(churn=((2, 0, -1),)).sample(
+        g, cfg.iters, L=12, r=cfg.r)
+    got, gdiag = fit_async(stats, g, cfg, gone)
+    U = np.asarray(got.U)
+    np.testing.assert_array_equal(U[2], np.ones_like(U[2]))
+    assert not np.allclose(U[0], np.ones_like(U[0]))
+    assert np.isfinite(np.asarray(gdiag["objective"])).all()
+    back = AdversaryModel(churn=((2, 0, 6),)).sample(
+        g, cfg.iters, L=12, r=cfg.r)
+    got_b, bdiag = fit_async(stats, g, cfg, back)
+    U_b = np.asarray(got_b.U)
+    assert not np.allclose(U_b[2], np.ones_like(U_b[2]))   # rejoined + moved
+    assert np.isfinite(np.asarray(bdiag["objective"])).all()
+    # robust aggregation handles churn too (the joiner warm-start reads
+    # the robust center)
+    cfg_r = dataclasses.replace(cfg, aggregator="coordinate_median")
+    got_r, _ = fit_async(stats, g, cfg_r, back)
+    assert np.isfinite(np.asarray(got_r.U)).all()
 
 
 def test_async_convergence_degrades_gracefully_with_delay():
