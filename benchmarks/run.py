@@ -18,9 +18,15 @@ experiments/benchmarks/.
   async     convergence-vs-delay×drop frontier of the netsim event-tape
             executor (fit_async) across topologies → async_frontier.csv
             (BENCH_SMOKE=1 shrinks the grid for CI)
+  async_mesh  the same tapes replayed IN-MESH by the exchange-layer tape
+            driver (8 emulated devices, subprocess) vs their fit_async
+            oracle, with agreement deltas → mesh_async_frontier.csv
   robustness  consensus-vs-attack frontier: Byzantine adversary tapes ×
             robust aggregators × topologies (+ membership-churn cells)
             → robustness_frontier.csv (BENCH_SMOKE=1 shrinks the grid)
+  robustness_mesh  mesh Byzantine cells: same adversary tape on fit_async
+            vs the in-mesh tape driver per aggregator →
+            mesh_robustness.csv + a dated BENCH_history entry
   roofline  aggregated dry-run roofline table (deliverable g) + the
             analytic Gram-engine roofline (tri vs dense vs two-matmul)
   kernels   Pallas-kernel correctness probes, op timings (labeled
@@ -51,7 +57,9 @@ def main() -> None:
         ("topology", topology.run),
         ("schedule", topology.run_schedule),
         ("async", asynchrony.run),
+        ("async_mesh", asynchrony.run_mesh),
         ("robustness", robustness.run),
+        ("robustness_mesh", robustness.run_mesh),
         ("kernels", kernels.run),
         ("roofline", roofline.run),
     ]

@@ -19,6 +19,23 @@ dtype handling):
     <dir>/step_<k>/meta.json    step, key order, dtype strings, and the
                                 ``executor`` / ``iters`` audit metadata
 
+Ring-buffer leaves (``hist`` / ``lam_hist``) serialize through the same
+generic field walk — their layout is executor-specific and documented on
+``engine.RunState``; the two families in circulation:
+
+* async / colored:      ``hist (depth, m, L, r)`` (depth leads; one
+                        global buffer of everyone's publishes),
+                        ``lam_hist (depth, E, L, r)`` iff aged_duals.
+* sharded_graph + tape: ``hist (m, depth, L, r)`` — AGENTS lead (the
+                        mesh-sharded axis shard_map partitions), each
+                        shard buffering only its OWN publishes; slot
+                        ``k % depth`` is the U published at the end of
+                        tick ``k``.  ``lam_hist (m, depth, n_slots, L,
+                        r)`` iff aged_duals (the per-slot dual table
+                        post tick-``k`` dual step).  Restore places
+                        these back onto the mesh via ``shardings=``
+                        (``Runner.state_shardings()``).
+
 ``REPRO_CHECKPOINT_EXIT_AFTER_SAVE=<k>`` (env) hard-exits the process via
 ``os._exit(0)`` right after a save at step >= k — the crash-injection hook
 the preemption tests use to kill a run at a real checkpoint boundary.

@@ -140,7 +140,15 @@ def fit(
       topology is compiled to a ≤ Δ+1-round ppermute edge schedule by
       ``engine.fit_sharded_graph``.  ``schedule`` (e.g.
       ``g.chromatic_schedule()``) runs phase-masked Gauss-Seidel sweeps
-      inside shard_map via the compiler path.
+      inside shard_map via the compiler path.  ``tape=`` / ``channel=``
+      replay a recorded lossy (and optionally Byzantine / churning)
+      network IN-MESH via the compiled-schedule tape driver
+      (``repro.core.exchange.ShardedGraphExchange``): per-shard ring
+      buffers of published iterates age-select what each ppermute ships,
+      so the sharded run agrees with ``executor="async"`` on the same
+      tape (bitwise on zero-delay tapes, psum-reduction-order tolerance
+      otherwise).  ``aged_duals=True`` ships duals through the lossy
+      channel too.
     * ``executor="async"``   — event-driven asynchrony
       (``engine.fit_async`` / ``repro.netsim``): pass either a precompiled
       ``tape=`` (an ``EventTape``) or a ``channel=`` (a ``ChannelModel``,
@@ -155,7 +163,7 @@ def fit(
     Executor-specific kwargs are validated: ``staleness``/``order`` only
     apply to "colored", ``schedule`` to "colored"/"sharded",
     ``mesh``/``agent_axes`` only to "sharded", ``tape``/``channel``/
-    ``aged_duals`` only to "async", and ``feature_map`` only to
+    ``aged_duals`` only to "async" or "sharded", and ``feature_map`` only to
     ``cfg.stats_producer="fused"``; passing them elsewhere raises rather
     than silently ignoring them.
 
@@ -221,12 +229,12 @@ def fit(
             f"mesh=/agent_axes= only apply to executor='sharded', "
             f"got executor={executor!r}"
         )
-    if executor != "async" and (
+    if executor not in ("async", "sharded") and (
         tape is not None or channel is not None or aged_duals
     ):
         raise ValueError(
-            f"tape=/channel=/aged_duals= only apply to executor='async', "
-            f"got executor={executor!r}"
+            f"tape=/channel=/aged_duals= only apply to executor='async' or "
+            f"'sharded', got executor={executor!r}"
         )
     if executor == "async":
         if (tape is None) == (channel is None):
@@ -236,6 +244,19 @@ def fit(
             )
         if channel is not None:
             tape = channel.sample(g, cfg.iters)
+    if executor == "sharded":
+        if tape is not None and channel is not None:
+            raise ValueError(
+                "executor='sharded' takes at most one of tape= (a "
+                "precompiled EventTape/AdversaryTape) or channel= (a "
+                "ChannelModel to sample)"
+            )
+        if channel is not None:
+            tape = channel.sample(g, cfg.iters)
+        if aged_duals and tape is None:
+            raise ValueError(
+                "aged_duals=True needs a tape= or channel= to replay"
+            )
     if checkpoint_dir is None and (checkpoint_every or resume):
         raise ValueError(
             "checkpoint_every=/resume= need checkpoint_dir= to point at "
@@ -262,8 +283,11 @@ def fit(
         # orientation-insensitive: a ring written with a flipped edge is the
         # same consensus problem (the dual just changes sign) and takes the
         # fast ppermute ring path; everything else goes to the compiler
+        # in-mesh tape replay runs only on the compiled-schedule path (the
+        # torus fast path has no per-edge round structure to mask)
         use_graph_path = (
             schedule is not None
+            or tape is not None
             or any(s < 2 for s in sizes)
             or not engine.graph_matches_torus(g, sizes)
         )

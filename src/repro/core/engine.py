@@ -83,25 +83,67 @@ backend:
       around the same body, with stale neighbor views served from a ring
       buffer of published subspaces.
 
-Executor matrix — one ``agent_update`` body, five message schedules, each
-pinned to the reference by a parity oracle (all asserted in tests):
+Executor matrix — one ``agent_update`` body, five message schedules, all
+drawing their neighbor views from the ONE exchange layer
+(``repro.core.exchange``), each pinned to the reference by a parity oracle
+(all asserted in tests):
 
-  1. ``fit_dense``          vmap + edge-list segment sums; the reference.
+  1. ``fit_dense``          vmap + ``exchange.DenseExchange`` edge-list
+                            segment sums; the reference.
   2. ``fit_sharded``        ring/torus ppermute; ≡ ``fit_dense`` on the
-                            mesh torus (up to edge orientation).
-  3. ``fit_colored``        sequential color phases; ``staleness=1`` or
-                            the single-class ``jacobian_schedule`` ≡
+                            mesh torus (up to edge orientation).  Robust
+                            reduce via ``exchange.stack_ring_candidates``.
+  3. ``fit_colored``        sequential color phases over the same
+                            ``DenseExchange``; ``staleness=1`` or the
+                            single-class ``jacobian_schedule`` ≡
                             ``fit_dense`` (bitwise).
-  4. ``fit_sharded_graph``  compiled ≤ Δ+1 ppermute rounds on any graph;
+  4. ``fit_sharded_graph``  ``exchange.ShardedGraphExchange``: compiled
+                            ≤ Δ+1 ppermute rounds on any graph;
                             ``schedule=None`` ≡ ``fit_dense``, a chromatic
                             ``schedule`` ≡ ``fit_colored(staleness=0)``.
-  5. ``fit_async``          event-tape scan; ``zero_delay_tape`` ≡
-                            ``fit_dense`` (bitwise), ``constant_tape(k)``
-                            ≡ ``fit_colored(staleness=k)``, an all-dropped
+  5. ``fit_async``          event-tape scan; views gathered by
+                            ``exchange.DenseTapeGather``;
+                            ``zero_delay_tape`` ≡ ``fit_dense`` (bitwise),
+                            ``constant_tape(k)`` ≡
+                            ``fit_colored(staleness=k)``, an all-dropped
                             channel ≡ ``fit_colored(staleness>=iters)``
                             (every view pinned at U^0), and a zero-attack
                             full-membership ``AdversaryTape`` ≡ its base
                             ``EventTape`` (bitwise).
+
+The exchange-layer contract (``repro.core.exchange``): a backend turns
+(published iterates, duals, an optional per-tick round context) into an
+``ExchangeViews`` bundle — the aggregated neighbor sum ``neigh``, the
+shipped-dual transpose term ``ct_lam``, the effective (live) degree and
+proximal weight, the aggregation ``center``, and, for robust aggregators,
+the padded candidate ``table`` + validity ``mask`` that feed
+``cfg.aggregator``.  Two backends realize it:
+
+* ``DenseExchange``       — edge-list gather/segment-sum over all agents
+                            on one device (vmap executors 1 and 3); its
+                            tape-driving wrapper ``DenseTapeGather``
+                            age-selects views from the published-U ring
+                            buffer and applies ``exchange.apply_attack``
+                            corruption per tick (executor 5).
+* ``ShardedGraphExchange`` — masked-ppermute rounds over the compiled
+                            edge schedule inside ``shard_map`` (executor
+                            4); its tape driver (``tape_exchange`` /
+                            ``tape_ct_lam`` + host-side ``tape_tables``)
+                            replays the SAME EventTape/AdversaryTape
+                            in-mesh: each shard keeps a depth-D ring
+                            buffer of its OWN published U (RunState
+                            ``hist``), the sender age-selects and
+                            corrupts what each ppermute ships, and the
+                            receiver masks arrivals by the tape's
+                            membership/round liveness.  Executor
+                            ``"sharded"``/``"sharded_graph"`` therefore
+                            accepts ``tape=`` and replays asynchrony +
+                            Byzantine behavior + churn with multi-device
+                            parallelism, agreeing with ``fit_async`` on
+                            the same tape (bitwise for zero-delay /
+                            zero-adversary tapes, psum-reduction-order
+                            tolerance otherwise — measured and pinned in
+                            tests).
 
 Robust aggregation (``cfg.aggregator``) threads through ALL FIVE rows:
 ``"mean"`` keeps every executor's pre-existing plain-sum gather verbatim
@@ -111,14 +153,15 @@ replace ``neigh_sum`` with ``deg * robust_center(received views + own U)``
 — dense/colored/GS gather a padded (m, K) neighbor table, the sharded
 executors stack their per-round/per-axis ppermute deliveries (round-mask
 aware on ``fit_sharded_graph``: idle-round zeros are EXCLUDED, never
-treated as candidates), and ``fit_async`` feeds the per-tick delivered
-(possibly adversary-corrupted) views.  Membership events ride only the
-async executor: an ``AdversaryTape``'s per-tick ``member`` row masks a
-departed agent's edges out of every reduction (its duals freeze via the
-masked residuals), re-resolves the scalar-tau proximal weight against the
-LIVE degree, freezes the agent itself like a straggler tick, and
-warm-starts a (re)joining agent from the aggregate of its live neighbors;
-the other four executors treat membership as out of scope (static graphs).
+treated as candidates), and the tape drivers feed the per-tick delivered
+(possibly adversary-corrupted) views.  Membership events ride the two
+tape-replaying paths (``fit_async`` and the in-mesh tape driver): an
+``AdversaryTape``'s per-tick ``member`` row masks a departed agent's
+edges out of every reduction (its duals freeze via the masked residuals),
+re-resolves the scalar-tau proximal weight against the LIVE degree,
+freezes the agent itself like a straggler tick, and warm-starts a
+(re)joining agent from the aggregate of its live neighbors; the other
+executor paths treat membership as out of scope (static graphs).
 
 The executor contract: all five return per-iteration diagnostics with the
 SAME keys — ``objective`` (primal, eq. 12), ``lagrangian`` (eq. 13),
@@ -192,6 +235,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core import exchange
 from repro.core.graph import Graph
 from repro.core.solvers import (
     kron_ridge_solve,
@@ -809,20 +853,9 @@ def resolve_aggregator(cfg: ConsensusConfig) -> Callable | None:
 
 def neighbor_table(g: Graph):
     """Host-side padded adjacency table: (nbr_idx, nbr_mask) numpy arrays of
-    shape (m, K_max) — the gather layout the robust aggregators consume."""
-    import numpy as np
-
-    nbrs: list[list[int]] = [[] for _ in range(g.m)]
-    for s, e in g.edges:
-        nbrs[s].append(e)
-        nbrs[e].append(s)
-    K = max((len(x) for x in nbrs), default=1) or 1
-    nbr_idx = np.zeros((g.m, K), np.int32)
-    nbr_mask = np.zeros((g.m, K), np.float32)
-    for t, lst in enumerate(nbrs):
-        nbr_idx[t, : len(lst)] = lst
-        nbr_mask[t, : len(lst)] = 1.0
-    return nbr_idx, nbr_mask
+    shape (m, K_max) — the gather layout the robust aggregators consume.
+    (Lives in ``repro.core.exchange``; re-exported here for compat.)"""
+    return exchange.neighbor_table(g)
 
 
 # --------------------------------------------------------------------------
@@ -847,6 +880,7 @@ class _EdgeSetup(NamedTuple):
     ct_transpose: Callable
     body: Callable
     init: "DenseState"
+    ex: "exchange.DenseExchange"
 
 
 def _edge_setup(
@@ -863,48 +897,16 @@ def _edge_setup(
         n=jnp.broadcast_to(jnp.asarray(stats.n, jnp.float32), (m,)),
         t2=jnp.broadcast_to(jnp.asarray(stats.t2, jnp.float32), (m,)),
     )
-    # Edge-list message gathering (O(E L r), vs O(m^2 L r) for a dense
-    # adjacency matmul).  For degree-2 graphs the per-agent sums are the
-    # same two-term additions the ring executor performs, so the executors
-    # stay bitwise-aligned far longer than matmul gathering would.
-    src = jnp.asarray([e[0] for e in g.edges], jnp.int32)
-    dst = jnp.asarray([e[1] for e in g.edges], jnp.int32)
-    deg = jnp.asarray(g.degrees(), dtype=dtype)        # (m,)
+    # The dense exchange backend owns the edge-list message gathering
+    # (O(E L r) segment sums on the mean path, the padded candidate gather
+    # + cfg.aggregator on the robust path) — see repro.core.exchange.
+    ex = exchange.DenseExchange(g, dtype, resolve_aggregator(cfg))
+    deg = ex.deg                                       # (m,)
     tau_t, zeta_t = _resolve_tau_zeta(cfg, deg, m, dtype)
     precomp = hoist_precomp(stats, cfg)                # batched eigh or None
-
-    def edge_diff(x):
-        """C x per edge: x[s] - x[e] for every edge (s, e)."""
-        return x[src] - x[dst]
-
-    agg = resolve_aggregator(cfg)
-    if agg is None:
-
-        def neighbor_sum(U):
-            return jax.ops.segment_sum(U[dst], src, m) + jax.ops.segment_sum(
-                U[src], dst, m
-            )
-
-    else:
-        # Robust path: gather each agent's neighbor views into a padded
-        # (m, K, L, r) candidate tensor, append the agent's own U, and
-        # rescale the robust center back to a degree-weighted sum so the
-        # solver body downstream is untouched.
-        nbr_idx_np, nbr_mask_np = neighbor_table(g)
-        nbr_idx = jnp.asarray(nbr_idx_np)
-        nbr_mask = jnp.asarray(nbr_mask_np, dtype)
-        ones_m1 = jnp.ones((m, 1), dtype)
-
-        def neighbor_sum(U):
-            V = jnp.concatenate([U[nbr_idx], U[:, None]], axis=1)
-            Mv = jnp.concatenate([nbr_mask, ones_m1], axis=1)
-            return deg[:, None, None] * agg(V, Mv)
-
-    def ct_transpose(lam):
-        """C_t^T lambda: +lam on edges where t is the source, - where end."""
-        return jax.ops.segment_sum(lam, src, m) - jax.ops.segment_sum(
-            lam, dst, m
-        )
+    edge_diff = ex.edge_diff
+    neighbor_sum = ex.neighbor_sum
+    ct_transpose = ex.ct_transpose
 
     def one_agent(stats_t, state_t, msgs_t, precomp_t):
         return agent_update(
@@ -928,7 +930,7 @@ def _edge_setup(
     )
     return _EdgeSetup(
         stats, deg, tau_t, zeta_t, precomp,
-        edge_diff, neighbor_sum, ct_transpose, body, init,
+        edge_diff, neighbor_sum, ct_transpose, body, init, ex,
     )
 
 
@@ -984,6 +986,19 @@ class RunState(NamedTuple):
       sharded (ring)      lam (m, n_axes, L, r), agent-sharded; the
                           per-shard block is ring_iteration's (n_axes,L,r)
       sharded_graph       lam (m, n_slots, L, r), agent-sharded slot table
+      sharded_graph+tape  additionally hist (m, depth, L, r) — each
+                          shard's ring buffer of its OWN published U,
+                          agent-sharded on the LEADING axis (the mesh
+                          axes), depth slots of (L, r); slot ``k % depth``
+                          holds the U published at the end of tick ``k``,
+                          pre-history slots hold U^0 (all-ones).  With
+                          aged_duals also lam_hist (m, depth, n_slots, L,
+                          r): the per-slot dual table as it stood AFTER
+                          tick ``k``'s dual step, same slot rule.  Note
+                          the axis order differs from the async layouts
+                          above — agents lead (shard_map partitions axis
+                          0), depth is second; both serialize through the
+                          same generic npz round-trip.
     """
 
     U: jax.Array                  # (m, L, r) stacked subspaces
@@ -991,7 +1006,7 @@ class RunState(NamedTuple):
     lam: jax.Array                # per-edge duals, executor layout (above)
     k: jax.Array                  # ()  int32 iteration counter / tape cursor
     hist: jax.Array | None = None      # published-U / staleness ring buffer
-    lam_hist: jax.Array | None = None  # aged-duals ring buffer (async only)
+    lam_hist: jax.Array | None = None  # aged-duals ring buffer (tape paths)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1639,12 +1654,11 @@ def ring_iteration(
         u_next_old.append(u_next)
         own_edge.append(own)
     if robust_agg is not None:
-        # stack the received views + own U as candidates; every ring
-        # neighbor is live, so the mask is all-ones and the robust center
-        # rescales back to the degree-weighted sum agent_update expects
-        V = jnp.stack(views + [U], axis=0)              # (K+1, L, r)
-        Mv = jnp.ones((V.shape[0],), dtype)
-        neigh = deg * robust_agg(V, Mv)
+        # the shared aggregator contract (repro.core.exchange): received
+        # views + own U as candidates, all-ones mask (every ring neighbor
+        # is live), center rescaled back to the degree-weighted sum
+        neigh = exchange.stack_ring_candidates(views, U, deg, robust_agg,
+                                               dtype)
 
     # --- the shared per-agent body ---------------------------------------
     msgs = NeighborMsgs(neigh, ct_lam, deg, tau_t, zeta_t)
@@ -1808,6 +1822,8 @@ def _make_sharded_graph_runner(
     cfg: ConsensusConfig,
     *,
     schedule: Sequence[Sequence[int]] | None = None,
+    tape=None,
+    aged_duals: bool = False,
 ) -> Runner:
     """Runner for :func:`fit_sharded_graph` — consensus ADMM over ANY
     connected ``Graph`` with one agent per mesh shard (the edge-schedule
@@ -1876,21 +1892,60 @@ def _make_sharded_graph_runner(
     for p, cls in enumerate(schedule):
         pmask_all = pmask_all.at[jnp.asarray(cls, jnp.int32), p].set(1.0)
     robust_agg = resolve_aggregator(cfg)
-    # round-participation mask: rmask[t, rr] = 1 iff round rr delivers a
-    # partner's U to agent t (idle shards receive ppermute zeros, which the
-    # robust aggregators must EXCLUDE rather than treat as candidates);
-    # sum over rounds equals the agent's degree by construction
-    rmask_rows = [[0.0] * n_rounds for _ in range(m)]
-    for rr in range(n_rounds):
-        for _s, dd in sched.bidir_perms[rr]:
-            rmask_rows[dd][rr] = 1.0
-    rmask_all = jnp.asarray(rmask_rows, dtype)                   # (m, rounds)
+    # the masked-ppermute exchange backend over the compiled schedule:
+    # bidirectional round permutes, the round-participation mask (idle
+    # shards receive ppermute zeros, which the robust aggregators must
+    # EXCLUDE rather than treat as candidates), dual shipping, and the
+    # in-mesh tape driver — see repro.core.exchange.ShardedGraphExchange
+    sgx = exchange.ShardedGraphExchange(g, sched, axes_t, dtype, robust_agg)
+    rmask_all = sgx.rmask_all                                    # (m, rounds)
+
+    # --- optional in-mesh tape replay (EventTape / AdversaryTape) ---------
+    if aged_duals and tape is None:
+        raise ValueError("aged_duals=True needs tape= (the replayed tape)")
+    is_adv = getattr(tape, "attack", None) is not None
+    if tape is not None:
+        from repro.netsim.events import validate_tape
+
+        validate_tape(tape, g, cfg.iters)
+        if n_phases != 1:
+            raise ValueError(
+                "in-mesh tape replay supports only the Jacobian sweep "
+                "(schedule=None); Gauss-Seidel phases have no tape "
+                "semantics"
+            )
+        import numpy as np
+
+        depth = tape.depth
+        tbl = sgx.tape_tables(tape)
+        send_age_np, live_np = tbl["send_age"], tbl["live"]
+        member_np, member_prev_np = tbl["member"], tbl["member_prev"]
+        active_np = np.asarray(tape.active, np.float32)
+        ages_np = np.asarray(tape.age)
+        if is_adv:
+            attack_np = np.asarray(tape.attack)
+            noise_np = np.asarray(tape.noise)
+            offset_np = np.asarray(tape.offset)
+        scalar_tau = jnp.asarray(cfg.tau).ndim == 0
 
     def init_fn():
         # stacked all-ones/zeros state placed shard-per-agent; arriving
         # through in_specs it is device-varying inside the body, the same
-        # type the in-body pcast used to establish
+        # type the in-body pcast used to establish.  Tape mode adds the
+        # per-shard published-U ring buffer (m, depth, L, r) — agent axis
+        # LEADING so the same P(axes_t) spec shards it — pre-filled with
+        # U^0 (the "nothing delivered yet" / drop fallback), and the aged-
+        # dual ring (m, depth, n_slots, L, r) of zero initial duals.
         sh = NamedSharding(mesh, P(axes_t))
+        hist0 = lam_hist0 = None
+        if tape is not None:
+            hist0 = jax.device_put(
+                jnp.ones((m, depth, L, r), dtype), sh
+            )
+            if aged_duals:
+                lam_hist0 = jax.device_put(
+                    jnp.zeros((m, depth, sched.n_slots, L, r), dtype), sh
+                )
         return RunState(
             U=jax.device_put(jnp.ones((m, L, r), dtype), sh),
             A=jax.device_put(jnp.ones((m, r, d), dtype), sh),
@@ -1898,11 +1953,17 @@ def _make_sharded_graph_runner(
                 jnp.zeros((m, sched.n_slots, L, r), dtype), sh
             ),
             k=jnp.zeros((), jnp.int32),
+            hist=hist0,
+            lam_hist=lam_hist0,
         )
 
     def shardings_fn():
         sh = NamedSharding(mesh, P(axes_t))
-        return RunState(U=sh, A=sh, lam=sh, k=NamedSharding(mesh, P()))
+        return RunState(
+            U=sh, A=sh, lam=sh, k=NamedSharding(mesh, P()),
+            hist=sh if tape is not None else None,
+            lam_hist=sh if (tape is not None and aged_duals) else None,
+        )
 
     def body(G_blk, R_blk, n_blk, t2_blk, deg_blk, tau_blk, zeta_blk,
              slot_blk, own_blk, pmask_blk, rmask_blk, U_blk, A_blk, lam_blk,
@@ -1916,41 +1977,18 @@ def _make_sharded_graph_runner(
         rmask = rmask_blk[0]
         U0, A0, lam0 = U_blk[0], A_blk[0], lam_blk[0]
 
-        def exchange(x):
-            """One bidirectional ppermute per edge-color round: round r
-            delivers the round-r matched partner's x (zeros when idle)."""
-            return [
-                jax.lax.ppermute(x, axes_t, sched.bidir_perms[rr])
-                for rr in range(n_rounds)
-            ]
-
-        def reduce_nb(nb, U):
-            """Per-round neighbor views -> the agent_update neigh_sum: the
-            plain sum (mean path, bitwise the pre-existing reduce), or the
-            robust center over round-live views + own U, degree-rescaled."""
-            if robust_agg is None:
-                return functools.reduce(jnp.add, nb)
-            V = jnp.stack(list(nb) + [U], axis=0)       # (rounds + 1, L, r)
-            Mv = jnp.concatenate([rmask, jnp.ones((1,), dtype)])
-            return deg_t * robust_agg(V, Mv)
-
         def step(carry, _):
             U, A, lam = carry
             U_start = U
             # C_t^T lambda: + the duals this shard owns (unowned slots stay
             # zero), - every incoming dual, shipped source->dest per round
-            ct_lam = jnp.sum(lam, axis=0)
-            for rr in range(n_rounds):
-                lam_send = own[rr] * lam[slots[rr]]
-                ct_lam = ct_lam - jax.lax.ppermute(
-                    lam_send, axes_t, sched.dir_perms[rr]
-                )
-            u_start_nb = exchange(U_start)      # also resid_old for duals
+            ct_lam = sgx.ship_ct_lam(lam, slots, own)
+            u_start_nb = sgx.exchange(U_start)  # also resid_old for duals
             nb = u_start_nb
             for p in range(n_phases):
                 if p > 0:
-                    nb = exchange(U)            # live U: Gauss-Seidel phases
-                neigh = reduce_nb(nb, U)
+                    nb = sgx.exchange(U)        # live U: Gauss-Seidel phases
+                neigh = sgx.reduce_views(nb, U, deg_t, rmask)
                 msgs = NeighborMsgs(neigh, ct_lam, deg_t, tau_t, zeta_t)
                 U_upd, A_upd = agent_update(
                     stats_t, AgentState(U, A, lam), msgs, cfg,
@@ -1962,7 +2000,7 @@ def _make_sharded_graph_runner(
 
             # dual step on owned edges; diagnostics masked to owned edges so
             # the host-side cross-shard sum counts each edge once
-            u_new_nb = exchange(U)
+            u_new_nb = sgx.exchange(U)
             primal_sq = jnp.zeros((), dtype)
             gamma_sum = jnp.zeros((), dtype)
             gamma_min = jnp.asarray(jnp.inf, dtype)
@@ -2000,24 +2038,254 @@ def _make_sharded_graph_runner(
         diags = jax.tree_util.tree_map(lambda x: x[:, None], diags)
         return final.U[None], final.A[None], final.lam[None], diags
 
+    def tape_body(*ops, n_seg):
+        """In-mesh tape replay: the Jacobian sweep with aged, sender-
+        corrupted, liveness-masked neighbor views served from each shard's
+        OWN published-U ring buffer (exchange.ShardedGraphExchange tape
+        driver).  Mirrors fit_async tick semantics: membership join
+        warm-start, straggler freeze, synchronous true-residual duals with
+        dead-edge masking, optional aged-dual shipping."""
+        (G_blk, R_blk, n_blk, t2_blk, deg_blk, tau_blk, zeta_blk,
+         slot_blk, own_blk, U_blk, A_blk, lam_blk, hist_blk) = ops[:13]
+        idx = 13
+        lam_hist_blk = None
+        if aged_duals:
+            lam_hist_blk = ops[idx]
+            idx += 1
+        age_b, live_b, act_b = ops[idx:idx + 3]
+        idx += 3
+        if is_adv:
+            code_b, noise_b, mem_b, memp_b = ops[idx:idx + 4]
+            idx += 4
+        ticks = ops[idx]
+        stats_t = SufficientStats(
+            G=G_blk[0], R=R_blk[0], n=n_blk[0], t2=t2_blk[0]
+        )
+        precomp = hoist_precomp(stats_t, cfg)
+        deg_t, tau_t, zeta_t = deg_blk[0], tau_blk[0], zeta_blk[0]
+        slots, own = slot_blk[0], own_blk[0]
+        init_u = jnp.ones((L, r), dtype)        # the all-ones U^0 publish
+        tau0 = jnp.asarray(cfg.tau, dtype)
+        offset_c = jnp.asarray(offset_np, dtype) if is_adv else None
+
+        def step(carry, xs_t):
+            if aged_duals:
+                U, A, lam, hist, lam_hist = carry
+            else:
+                U, A, lam, hist = carry
+                lam_hist = None
+            if is_adv:
+                (age_row, live_row, act_t, k,
+                 code, noise_t, mem_t, memp_t) = xs_t
+            else:
+                age_row, live_row, act_t, k = xs_t
+                code = noise_t = None
+            # send-side aged + corrupted exchange from each sender's OWN
+            # ring buffer; receptions masked by per-round edge liveness
+            recv = sgx.tape_exchange(
+                hist, k, age_row, depth, code=code, noise_t=noise_t,
+                offset=offset_c, init_u=init_u,
+            )
+            deg_eff = jnp.sum(live_row)         # live degree (exact fp32)
+            if robust_agg is None:
+                # round-order sum; `* live_row[rr]` is an exact bitwise
+                # pass-through (x * 1.0) on a zero-adversary tape
+                neigh = functools.reduce(
+                    jnp.add,
+                    [recv[rr] * live_row[rr] for rr in range(n_rounds)],
+                )
+                center = neigh / jnp.maximum(deg_eff, 1.0)
+            else:
+                V = jnp.stack(list(recv) + [U], axis=0)
+                Mv = jnp.concatenate([live_row, jnp.ones((1,), dtype)])
+                center = robust_agg(V, Mv)
+                neigh = deg_eff * center
+            tau_eff = (
+                tau0 + deg_eff if (is_adv and scalar_tau) else tau_t
+            )
+            if aged_duals:
+                ct_lam = sgx.tape_ct_lam(
+                    lam, slots, own, live_row,
+                    aged={
+                        "lam_hist": lam_hist, "k": k, "age_row": age_row,
+                        "depth": depth, "code": code, "noise": noise_t,
+                        "offset": offset_c,
+                    },
+                )
+            else:
+                ct_lam = sgx.tape_ct_lam(lam, slots, own, live_row)
+            if is_adv:
+                # a (re)joining agent warm-starts from the aggregate of
+                # its live neighbors (kept at U when joining in isolation)
+                join = (mem_t * (1.0 - memp_t)) > 0
+                U_base = jnp.where(join & (deg_eff > 0), center, U)
+            else:
+                U_base = U
+            msgs = NeighborMsgs(
+                neigh, ct_lam, deg_eff if is_adv else deg_t, tau_eff,
+                zeta_t,
+            )
+            U_upd, A_upd = agent_update(
+                stats_t, AgentState(U_base, A, lam), msgs, cfg,
+                m_total=m, precomp=precomp,
+            )
+            U_new = jnp.where(act_t > 0, U_upd, U_base)  # straggler freeze
+            A_new = jnp.where(act_t > 0, A_upd, A)
+            # synchronous dual bookkeeping on the TRUE residuals (fresh
+            # exchanges, like fit_async's edge_diff) with dead edges
+            # masked to zero so their duals freeze exactly
+            nb_old = sgx.exchange(U_base)
+            nb_new = sgx.exchange(U_new)
+            primal_sq = jnp.zeros((), dtype)
+            gamma_sum = jnp.zeros((), dtype)
+            gamma_min = jnp.asarray(jnp.inf, dtype)
+            lag_pen = jnp.zeros((), dtype)
+            for rr in range(n_rounds):
+                resid_new = (U_new - nb_new[rr]) * live_row[rr]
+                resid_old = (U_base - nb_old[rr]) * live_row[rr]
+                lam_rr = lam[slots[rr]]
+                lam_upd, gamma, primal = dual_step(
+                    lam_rr, resid_old, resid_new, cfg
+                )
+                o = own[rr]
+                lam = lam.at[slots[rr]].set(
+                    jnp.where(o > 0, lam_upd, lam_rr)
+                )
+                primal_sq = primal_sq + o * primal
+                gamma_sum = gamma_sum + o * gamma
+                gamma_min = jnp.minimum(
+                    gamma_min, jnp.where(o > 0, gamma, jnp.inf)
+                )
+                lag_pen = lag_pen + o * (
+                    jnp.sum(lam_upd * resid_new)
+                    + 0.5 * cfg.rho * jnp.sum(resid_new**2)
+                )
+            hist = hist.at[jnp.mod(k, depth)].set(U_new)
+            if aged_duals:
+                lam_hist = lam_hist.at[jnp.mod(k, depth)].set(lam)
+            diag = {
+                "obj": _local_objective(stats_t, U_new, A_new, cfg, m),
+                "lag_pen": lag_pen,
+                "primal_sq": primal_sq,
+                "gamma_sum": gamma_sum,
+                "gamma_min": gamma_min,
+            }
+            carry = (U_new, A_new, lam, hist)
+            if aged_duals:
+                carry = carry + (lam_hist,)
+            return carry, diag
+
+        carry0 = (U_blk[0], A_blk[0], lam_blk[0], hist_blk[0])
+        if aged_duals:
+            carry0 = carry0 + (lam_hist_blk[0],)
+        xs = (age_b[:, 0], live_b[:, 0], act_b[:, 0], ticks)
+        if is_adv:
+            xs = xs + (code_b[:, 0], noise_b[:, 0], mem_b[:, 0],
+                       memp_b[:, 0])
+        final, diags = jax.lax.scan(step, carry0, xs, length=n_seg)
+        diags = jax.tree_util.tree_map(lambda x: x[:, None], diags)
+        outs = tuple(x[None] for x in final)
+        return outs + (diags,)
+
     spec_batched = P(axes_t)
 
+    def _revalidate_suffix(k0, n):
+        """A resumed mid-tape segment re-checks the suffix it will replay
+        (the async runner's contract, same here)."""
+        from repro.netsim.events import EventTape as _ET, validate_tape
+
+        if is_adv:
+            from repro.netsim.adversary import AdversaryTape as _AT
+
+            validate_tape(
+                _AT(
+                    age=ages_np[k0:k0 + n], active=active_np[k0:k0 + n],
+                    attack=attack_np[k0:k0 + n],
+                    noise=noise_np[k0:k0 + n], offset=offset_np,
+                    member=member_np[k0:k0 + n],
+                ),
+                g, start=k0,
+            )
+        else:
+            validate_tape(
+                _ET(age=ages_np[k0:k0 + n], active=active_np[k0:k0 + n]),
+                g, start=k0,
+            )
+
     def segment_fn(state, n):
-        shard_fn = compat.shard_map(
-            functools.partial(body, n_seg=n),
-            mesh=mesh,
-            in_specs=(spec_batched,) * 14,
-            out_specs=(
-                spec_batched, spec_batched, spec_batched, P(None, axes_t),
-            ),
-        )
-        U, A, lam, diags = shard_fn(
+        if tape is None:
+            shard_fn = compat.shard_map(
+                functools.partial(body, n_seg=n),
+                mesh=mesh,
+                in_specs=(spec_batched,) * 14,
+                out_specs=(
+                    spec_batched, spec_batched, spec_batched,
+                    P(None, axes_t),
+                ),
+            )
+            U, A, lam, diags = shard_fn(
+                stats.G, stats.R, n_all, t2_all, deg_all, tau_all,
+                zeta_all, slot_all, own_all, pmask_all, rmask_all,
+                state.U, state.A, state.lam
+            )
+            diags = _assemble_sharded_diags(diags, g.n_edges, L * cfg.r)
+            return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags
+
+        k0 = int(jax.device_get(state.k))
+        if k0 + n > cfg.iters:
+            raise ValueError(
+                f"segment [{k0}, {k0 + n}) runs past the tape "
+                f"({cfg.iters} ticks)"
+            )
+        if k0 > 0 and n > 0:
+            _revalidate_suffix(k0, n)
+        ops = [
             stats.G, stats.R, n_all, t2_all, deg_all, tau_all, zeta_all,
-            slot_all, own_all, pmask_all, rmask_all,
-            state.U, state.A, state.lam
+            slot_all, own_all, state.U, state.A, state.lam, state.hist,
+        ]
+        specs = [spec_batched] * 13
+        if aged_duals:
+            ops.append(state.lam_hist)
+            specs.append(spec_batched)
+        # per-tick rows sliced [k0, k0 + n) host-side and threaded with
+        # the ABSOLUTE tick, so ring-buffer slots (k - age) mod depth are
+        # segment-invariant and mid-tape resume replays bitwise
+        ops += [
+            jnp.asarray(send_age_np[k0:k0 + n], jnp.int32),
+            jnp.asarray(live_np[k0:k0 + n], dtype),
+            jnp.asarray(active_np[k0:k0 + n], dtype),
+        ]
+        specs += [P(None, axes_t)] * 3
+        if is_adv:
+            ops += [
+                jnp.asarray(attack_np[k0:k0 + n], jnp.int32),
+                jnp.asarray(noise_np[k0:k0 + n], dtype),
+                jnp.asarray(member_np[k0:k0 + n], dtype),
+                jnp.asarray(member_prev_np[k0:k0 + n], dtype),
+            ]
+            specs += [P(None, axes_t)] * 4
+        ops.append(jnp.arange(k0, k0 + n, dtype=jnp.int32))
+        specs.append(P(None))
+        out_specs = [spec_batched] * (5 if aged_duals else 4)
+        out_specs.append(P(None, axes_t))
+        shard_fn = compat.shard_map(
+            functools.partial(tape_body, n_seg=n),
+            mesh=mesh,
+            in_specs=tuple(specs),
+            out_specs=tuple(out_specs),
         )
+        res = shard_fn(*ops)
+        if aged_duals:
+            U, A, lam, hist, lam_hist, diags = res
+        else:
+            U, A, lam, hist, diags = res
+            lam_hist = None
         diags = _assemble_sharded_diags(diags, g.n_edges, L * cfg.r)
-        return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags
+        diags["tape_cursor"] = jnp.arange(k0, k0 + n, dtype=jnp.int32)
+        return RunState(
+            U=U, A=A, lam=lam, k=state.k + n, hist=hist,
+            lam_hist=lam_hist,
+        ), diags
 
     return Runner("sharded_graph", cfg, init_fn, segment_fn, shardings_fn)
 
@@ -2030,15 +2298,21 @@ def fit_sharded_graph(
     cfg: ConsensusConfig,
     *,
     schedule: Sequence[Sequence[int]] | None = None,
+    tape=None,
+    aged_duals: bool = False,
 ):
     """Consensus ADMM over ANY connected ``Graph`` on the mesh — one
     ``run_segment`` of :func:`_make_sharded_graph_runner` (see its
     docstring for the edge-schedule compilation and Gauss-Seidel phase
-    semantics) driven to completion.  Returns ``(U, A, diagnostics)``, the
-    :func:`fit_sharded` contract.
+    semantics) driven to completion.  ``tape=`` replays an ``EventTape`` /
+    ``AdversaryTape`` INSIDE the mesh (the exchange layer's tape driver;
+    requires the Jacobian sweep, i.e. ``schedule=None``).  Returns
+    ``(U, A, diagnostics)``, the :func:`fit_sharded` contract (plus
+    ``tape_cursor`` rows when a tape is replayed).
     """
     runner = _make_sharded_graph_runner(
-        stats, mesh, agent_axes, g, cfg, schedule=schedule
+        stats, mesh, agent_axes, g, cfg, schedule=schedule, tape=tape,
+        aged_duals=aged_duals,
     )
     state, diags = runner.run()
     return state.U, state.A, diags
@@ -2067,7 +2341,13 @@ def make_runner(
       executor="colored"        + schedule/staleness/order
       executor="async"          + tape (aged_duals optional); g required
       executor="sharded"        needs (stats, cfg) + mesh/agent_axes
-      executor="sharded_graph"  + g (+ optional vertex schedule)
+      executor="sharded_graph"  + g (+ optional vertex schedule, or a
+                                tape= for in-mesh EventTape/AdversaryTape
+                                replay — mutually exclusive)
+
+    ``tape=`` on ``executor="sharded"`` delegates to the graph-compiled
+    executor (the ring/torus fast path has no tape driver) and therefore
+    requires ``g`` — the Graph whose edge order the tape was sampled on.
 
     ``runner.run()`` reproduces the corresponding ``fit_*`` exactly;
     ``runner.run_segment`` splits the same computation at checkpointable
@@ -2086,10 +2366,22 @@ def make_runner(
 
         return make_async_runner(stats, g, cfg, tape, aged_duals=aged_duals)
     if executor == "sharded":
+        if tape is not None or aged_duals:
+            if g is None:
+                raise ValueError(
+                    "executor='sharded' with tape= needs g= — the Graph "
+                    "whose edge order the tape was sampled on (the replay "
+                    "runs on the graph-compiled executor)"
+                )
+            return _make_sharded_graph_runner(
+                stats, mesh, agent_axes, g, cfg, schedule=schedule,
+                tape=tape, aged_duals=aged_duals,
+            )
         return _make_sharded_runner(stats, mesh, agent_axes, cfg)
     if executor == "sharded_graph":
         return _make_sharded_graph_runner(
-            stats, mesh, agent_axes, g, cfg, schedule=schedule
+            stats, mesh, agent_axes, g, cfg, schedule=schedule,
+            tape=tape, aged_duals=aged_duals,
         )
     raise ValueError(
         f"unknown executor {executor!r}; expected one of 'dense', "

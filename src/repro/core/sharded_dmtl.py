@@ -43,15 +43,30 @@ from repro.core.graph import Graph
 
 
 def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph], *,
+                      tape=None, channel=None, aged_duals: bool = False,
                       checkpoint_dir=None, checkpoint_every: int = 0,
                       resume: bool = False):
     """Torus fast path when ``g`` is None or matches the mesh torus (up to
     edge orientation); the compiled edge-schedule executor otherwise.
+    ``tape=`` / ``channel=`` force the compiled path and replay the lossy
+    network in-mesh (``repro.core.exchange``); an explicit ``g`` is
+    required then — the tape is indexed by g's edge list.
     ``checkpoint_dir=`` drives the run through
     ``repro.checkpoint.run_checkpointed`` (periodic resumable snapshots,
     restored onto the mesh via ``Runner.state_shardings()``)."""
+    if tape is not None and channel is not None:
+        raise ValueError("pass at most one of tape= or channel=")
+    if (tape is not None or channel is not None) and g is None:
+        raise ValueError(
+            "tape=/channel= need an explicit g= (the tape is indexed by "
+            "the graph's edge list, not the mesh torus)"
+        )
+    if channel is not None:
+        tape = channel.sample(g, cfg.iters)
+    if aged_duals and tape is None:
+        raise ValueError("aged_duals=True needs a tape= or channel=")
     torus = g is None
-    if not torus:
+    if not torus and tape is None:
         sizes = [mesh.shape[ax] for ax in agent_axes]
         torus = (
             all(s >= 2 for s in sizes)
@@ -61,6 +76,7 @@ def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph], *,
         stats, g, cfg,
         executor="sharded" if torus else "sharded_graph",
         mesh=mesh, agent_axes=agent_axes,
+        tape=tape, aged_duals=aged_duals,
     )
     if checkpoint_dir is not None:
         from repro.checkpoint import run_checkpointed
@@ -84,6 +100,9 @@ def dmtl_fit_from_stats(
     n: "jax.Array | None" = None,
     t2: "jax.Array | None" = None,
     g: Optional[Graph] = None,
+    tape=None,
+    channel=None,
+    aged_duals: bool = False,
     checkpoint_dir=None,
     checkpoint_every: int = 0,
     resume: bool = False,
@@ -103,6 +122,10 @@ def dmtl_fit_from_stats(
     unchanged but those diagnostics are offset by the (constant) ||T||^2
     term.  ``g`` selects a non-torus consensus topology (compiled to a
     ppermute edge schedule); None keeps the mesh ring/torus.
+    ``tape=`` (an EventTape / AdversaryTape) or ``channel=`` (a
+    ChannelModel sampled over cfg.iters) replays a lossy network in-mesh
+    via the exchange-layer tape driver — requires an explicit ``g``;
+    ``aged_duals=True`` ships duals through the lossy channel too.
     ``checkpoint_dir=``/``checkpoint_every=``/``resume=`` make the run
     preemption-safe (see ``repro.checkpoint.run_checkpointed``).
     """
@@ -111,7 +134,8 @@ def dmtl_fit_from_stats(
         n=0.0 if n is None else n, t2=0.0 if t2 is None else t2,
     )
     return _dispatch_sharded(
-        stats, mesh, agent_axes, cfg, g, checkpoint_dir=checkpoint_dir,
+        stats, mesh, agent_axes, cfg, g, tape=tape, channel=channel,
+        aged_duals=aged_duals, checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every, resume=resume,
     )
 
@@ -124,6 +148,9 @@ def dmtl_elm_fit_sharded(
     cfg: DMTLELMConfig,
     *,
     g: Optional[Graph] = None,
+    tape=None,
+    channel=None,
+    aged_duals: bool = False,
     checkpoint_dir=None,
     checkpoint_every: int = 0,
     resume: bool = False,
@@ -134,11 +161,14 @@ def dmtl_elm_fit_sharded(
     same way. ``m`` must equal the product of the agent-axis sizes.  ``g``
     selects a non-torus consensus topology (compiled to a ppermute edge
     schedule by ``engine.fit_sharded_graph``); None keeps the ring/torus.
-    ``checkpoint_dir=``/``checkpoint_every=``/``resume=`` make the run
-    preemption-safe (see ``repro.checkpoint.run_checkpointed``).
+    ``tape=`` or ``channel=`` replays a lossy / Byzantine network in-mesh
+    (requires an explicit ``g``); ``aged_duals=True`` ages the shipped
+    duals too.  ``checkpoint_dir=``/``checkpoint_every=``/``resume=`` make
+    the run preemption-safe (see ``repro.checkpoint.run_checkpointed``).
     """
     stats = engine.sufficient_stats(H, T, precision=cfg.stats_precision)
     return _dispatch_sharded(
-        stats, mesh, agent_axes, cfg, g, checkpoint_dir=checkpoint_dir,
+        stats, mesh, agent_axes, cfg, g, tape=tape, channel=channel,
+        aged_duals=aged_duals, checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every, resume=resume,
     )

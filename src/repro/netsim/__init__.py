@@ -7,7 +7,8 @@ the update math:
 
 * ``channels.ChannelModel`` — per-edge delay distribution (deterministic /
   geometric / heavy-tail), i.i.d. drop probability, per-agent straggler
-  model; sampled ONCE on the host.
+  model; sampled ONCE on the host.  ``channels.from_trace`` fits the
+  delay family + scale (and drop rate) to a measured latency-trace CSV.
 * ``events.EventTape``     — the sampled run as fixed-shape per-tick arrays
   (message ages, active mask) with validated invariants, so the simulation
   is jittable and reproducible.
@@ -29,7 +30,12 @@ from repro.netsim.adversary import (
     AdversaryTape,
     zero_adversary_tape,
 )
-from repro.netsim.channels import DELAY_KINDS, ChannelModel
+from repro.netsim.channels import (
+    DELAY_KINDS,
+    TRACE_QUANTILES,
+    ChannelModel,
+    from_trace,
+)
 from repro.netsim.events import (
     EventTape,
     ages_from_arrivals,
@@ -42,7 +48,7 @@ from repro.netsim.frontier import gap_target, iters_to_target, tape_summary
 
 __all__ = [
     "ATTACK_KINDS", "AdversaryModel", "AdversaryTape", "zero_adversary_tape",
-    "DELAY_KINDS", "ChannelModel",
+    "DELAY_KINDS", "TRACE_QUANTILES", "ChannelModel", "from_trace",
     "EventTape", "ages_from_arrivals", "constant_tape", "validate_tape",
     "zero_delay_tape",
     "fit_async",

@@ -103,6 +103,44 @@ def zero_adversary_tape(
     )
 
 
+def _mask_nonmember_arrivals(
+    age: np.ndarray, member: np.ndarray, g: Graph
+) -> np.ndarray:
+    """Flush a departed sender's in-flight traffic from the age table.
+
+    The base channel tape is sampled before membership, so its arrival
+    schedule can deliver a message published before a leave AFTER the
+    sender departed — and the receiver would then replay that view once
+    the sender rejoins.  Real churn flushes in-flight traffic: a delivery
+    only lands if the sender is a member at BOTH the publish tick and the
+    arrival tick; a masked delivery falls back to the last validly held
+    view (``U^0`` at worst), the same fallback rule as a drop.  Forward
+    pass over the reduced age table; preserves all EventTape invariants.
+    """
+    iters = age.shape[0]
+    if iters == 0:
+        return age
+    src = np.asarray([s for s, _ in g.edges])
+    dst = np.asarray([e for _, e in g.edges])
+    sender = np.stack([dst, src])  # dir 0: e -> s, dir 1: s -> e
+    mem = np.asarray(member) > 0.0
+    out = np.empty_like(age)
+    held = np.full((2, g.n_edges), -1, np.int64)  # valid held publish tick
+    raw_prev = np.full((2, g.n_edges), -1, np.int64)
+    for k in range(iters):
+        raw = k - age[k].astype(np.int64)  # freshest delivered publish
+        fresh = raw > raw_prev             # a delivery landed this tick
+        ok = (
+            fresh
+            & mem[k][sender]                        # member at arrival
+            & mem[np.clip(raw, 0, None), sender]    # member at publish
+        )
+        held = np.where(ok, raw, held)
+        raw_prev = raw
+        out[k] = (k - held).astype(age.dtype)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class AdversaryModel:
     """Who misbehaves and how (see module docs).
@@ -227,8 +265,15 @@ class AdversaryModel:
         attack = np.where(member > 0, attack, 0).astype(np.int32)
         active = np.asarray(base.active, np.float32) * member
 
+        # ... nor does its in-flight traffic survive a leave: re-age the
+        # channel's arrival schedule so nothing published by or arriving
+        # from a non-member is ever delivered (leave-with-inflight fix)
+        age = np.asarray(base.age, np.int32)
+        if (member == 0.0).any():
+            age = _mask_nonmember_arrivals(age, member, g)
+
         tape = AdversaryTape(
-            age=np.asarray(base.age, np.int32),
+            age=age,
             active=active,
             attack=attack,
             noise=noise,

@@ -92,6 +92,11 @@ class ChannelModel:
         z = 1.0 + rng.pareto(self.alpha, shape)
         return np.floor(self.scale * (z - 1.0)).astype(np.int64)
 
+    def quantiles(self, qs, n: int = 20000, seed: int = 0) -> np.ndarray:
+        """Empirical extra-delay quantiles of this channel (host draws)."""
+        rng = np.random.default_rng(seed)
+        return np.quantile(self._extra_delays(rng, (n,)), qs)
+
     def sample(self, g: Graph, iters: int) -> EventTape:
         """Roll ``iters`` rounds of this channel on ``g`` into an EventTape.
 
@@ -131,3 +136,89 @@ class ChannelModel:
         tape = EventTape(age=age, active=active)
         validate_tape(tape, g, iters)
         return tape
+
+
+TRACE_QUANTILES = (0.5, 0.9, 0.99)
+
+_HEAVY_TAIL_ALPHAS = (1.2, 1.5, 2.0, 2.5, 3.0)
+
+
+def from_trace(
+    path,
+    *,
+    round_ms: "float | None" = None,
+    drop: "float | None" = None,
+    straggler_prob: float = 0.0,
+    straggler_mean: float = 3.0,
+    seed: int = 0,
+    n_fit: int = 20000,
+) -> ChannelModel:
+    """Fit a :class:`ChannelModel` delay distribution to a latency trace.
+
+    ``path`` is a CSV of per-message one-way latencies in milliseconds:
+    either a single headerless column or a headered file with a
+    ``latency_ms`` column (other columns are ignored).  Non-finite or
+    non-positive entries are treated as messages that never arrived and
+    estimate the ``drop`` probability (override with ``drop=``).
+
+    The fit discretizes the trace into extra synchronous rounds —
+    ``extra = max(0, ceil(latency / round_ms) - 1)`` with ``round_ms``
+    defaulting to the trace median, so the median message costs the
+    inherent one round — then selects the delay family
+    (deterministic | geometric | heavy_tail) and scale whose sampled
+    extra-delay quantiles at ``TRACE_QUANTILES`` (50/90/99) best match the
+    empirical ones (summed relative error; candidate scales moment-matched
+    to the trace mean, heavy-tail ``alpha`` over a small grid).  The
+    returned model reproduces the trace's delay *distribution*, not its
+    per-message sequence — ``sample`` re-rolls i.i.d. draws from the
+    fitted family, which is exactly what the event-tape machinery wants.
+    """
+    raw = np.genfromtxt(path, delimiter=",", names=True)
+    if raw.dtype.names:
+        col = (
+            "latency_ms" if "latency_ms" in raw.dtype.names
+            else raw.dtype.names[0]
+        )
+        lat = np.atleast_1d(np.asarray(raw[col], np.float64))
+    else:
+        lat = np.asarray(raw, np.float64).ravel()
+    if lat.size == 0:
+        raise ValueError(f"empty latency trace: {path}")
+    delivered = np.isfinite(lat) & (lat > 0.0)
+    est_drop = float(drop if drop is not None else 1.0 - delivered.mean())
+    lat = lat[delivered]
+    if lat.size == 0:
+        raise ValueError(f"no delivered messages in trace: {path}")
+    if round_ms is None:
+        round_ms = float(np.median(lat))
+    if round_ms <= 0:
+        raise ValueError(f"round_ms must be > 0, got {round_ms}")
+    extra = np.maximum(np.ceil(lat / round_ms) - 1.0, 0.0)
+    emp_q = np.quantile(extra, TRACE_QUANTILES)
+    mean_extra = float(extra.mean())
+
+    common = dict(
+        drop=est_drop, straggler_prob=straggler_prob,
+        straggler_mean=straggler_mean, seed=seed,
+    )
+    candidates = [
+        ChannelModel(
+            delay="deterministic", scale=float(np.round(mean_extra)),
+            **common,
+        ),
+        ChannelModel(delay="geometric", scale=mean_extra, **common),
+    ]
+    for alpha in _HEAVY_TAIL_ALPHAS:
+        # E[floor(scale * (Z - 1))] <~ scale / (alpha - 1) for Z~Pareto(alpha)
+        candidates.append(
+            ChannelModel(
+                delay="heavy_tail", scale=mean_extra * (alpha - 1.0),
+                alpha=alpha, **common,
+            )
+        )
+
+    def _score(cm: ChannelModel) -> float:
+        q = cm.quantiles(TRACE_QUANTILES, n=n_fit, seed=seed)
+        return float(np.sum(np.abs(q - emp_q) / np.maximum(emp_q, 1.0)))
+
+    return min(candidates, key=_score)

@@ -151,6 +151,38 @@ def validate_tape(
                 "an absent agent cannot compute: active must be 0 wherever "
                 "member is 0"
             )
+        # leave-with-inflight: a delivery must never land from a
+        # non-member.  The held publish tick is k - age[k]; a strict
+        # increase marks a fresh delivery, which requires the sender to be
+        # a member at BOTH the publish tick and the arrival tick (churn
+        # flushes in-flight traffic; it is never replayed on rejoin).
+        # Publish ticks before a resumed slice (start > 0) are the prefix
+        # run's responsibility, as is row 0's across-boundary freshness.
+        src = np.asarray([s for s, _ in g.edges])
+        dst = np.asarray([e for _, e in g.edges])
+        sender = np.stack([dst, src])  # dir 0: e -> s, dir 1: s -> e
+        held = ticks - age             # (n_iters, 2, E); -1 = U^0
+        fresh = np.zeros(held.shape, bool)
+        fresh[1:] = held[1:] > held[:-1]
+        if start == 0:
+            fresh[0] = held[0] >= 0
+        mem = member > 0.0
+        sender_b = np.broadcast_to(sender[None], held.shape)
+        k_idx = np.broadcast_to(
+            np.arange(n_iters)[:, None, None], held.shape
+        )
+        arr_ok = mem[k_idx, sender_b]
+        pub_rel = held - start
+        pub_ok = ~(pub_rel >= 0) | mem[np.clip(pub_rel, 0, None), sender_b]
+        bad = fresh & ~(arr_ok & pub_ok)
+        if bad.any():
+            k, d, j = np.argwhere(bad)[0]
+            raise ValueError(
+                f"delivery from a non-member at tick {start + k} on edge "
+                f"{j} (dir {d}): in-flight messages must be masked when "
+                f"the sender leaves, not replayed (sender "
+                f"{sender[d, j]}, publish tick {held[k, d, j]})"
+            )
 
 
 def zero_delay_tape(iters: int, g: Graph) -> EventTape:

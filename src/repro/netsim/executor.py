@@ -67,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine
+from repro.core import engine, exchange
 from repro.core.engine import (
     AgentState,
     ConsensusConfig,
@@ -115,6 +115,7 @@ def make_async_runner(
     # pass-through under zero attack and full membership.
     is_adv = getattr(tape, "attack", None) is not None
     robust_agg = engine.resolve_aggregator(cfg)
+    offset_j = None
     if is_adv:
         attack_np = np.asarray(tape.attack)
         noise_np = np.asarray(tape.noise)
@@ -128,91 +129,29 @@ def make_async_runner(
             if member_np.shape[0] else member_np
         )
         offset_j = jnp.asarray(offset_np, dtype)
-        scalar_tau = jnp.asarray(cfg.tau).ndim == 0
-        tau0 = jnp.asarray(cfg.tau, dtype)
-    if robust_agg is not None:
-        # padded per-receiver table over the 2E directed deliveries
-        # (rows [0, E) = view0 to src, rows [E, 2E) = view1 to dst)
-        recv = np.concatenate([
-            np.asarray([e[0] for e in g.edges], np.int64),
-            np.asarray([e[1] for e in g.edges], np.int64),
-        ])
-        rows: list[list[int]] = [[] for _ in range(m)]
-        for i, t in enumerate(recv):
-            rows[int(t)].append(i)
-        K_pad = max((len(x) for x in rows), default=1) or 1
-        pad_np = np.zeros((m, K_pad), np.int32)
-        pmask_np = np.zeros((m, K_pad), np.float32)
-        for t, lst in enumerate(rows):
-            pad_np[t, : len(lst)] = lst
-            pmask_np[t, : len(lst)] = 1.0
-        pad_idx = jnp.asarray(pad_np)
-        pad_mask = jnp.asarray(pmask_np, dtype)
-        ones_m1 = jnp.ones((m, 1), dtype)
+    # The tape-driven view gather (ring-buffer age selection, sender-side
+    # attack corruption, membership degree masking, the padded robust
+    # candidate table) is the dense backend of the shared exchange layer.
+    gather = exchange.DenseTapeGather(
+        es.ex, g, cfg, depth, is_adv, es.init.U, offset_j, es.tau_t
+    )
 
     def step(carry, xs):
         U, A, lam, hist, lam_hist = carry
         if is_adv:
             age_k, act_k, code_k, noise_k, member_k, member_prev_k, k = xs
+            ctx = exchange.DenseTapeCtx(age_k, k, code_k, noise_k, member_k)
         else:
             age_k, act_k, k = xs                       # k = ABSOLUTE tick
-        slot0 = jnp.mod(k - age_k[0], depth)           # e -> s views
-        slot1 = jnp.mod(k - age_k[1], depth)           # s -> e views
-        # aged neighbor views per directed edge, summed per receiving agent
-        # in the same s-side/e-side segment order as fit_dense's
-        # neighbor_sum — the zero-delay tape stays bitwise-identical
-        view0 = hist[slot0, dst]                       # (E, L, r)
-        view1 = hist[slot1, src]
-        if is_adv:
-            # corrupt the PUBLISHED view per directed edge, gated by the
-            # sender's attack code at this tick (view0's sender is dst,
-            # view1's sender is src); stale_replay publishes the initial
-            # U^0 forever
-            def corrupt(v, c, sender):
-                cb = c[:, None, None]
-                out = jnp.where(cb == 1, -v, v)
-                out = jnp.where(cb == 2, v + noise_k[sender], out)
-                out = jnp.where(cb == 3, es.init.U[sender], out)
-                return jnp.where(cb == 4, v + offset_j, out)
-
-            view0 = corrupt(view0, code_k[dst], dst)
-            view1 = corrupt(view1, code_k[src], src)
-            # dynamic degree masking: an edge is live iff BOTH endpoints
-            # are members this tick; the scalar-tau proximal weight is
-            # re-resolved against the live degree (exact small-int fp32
-            # counts — bitwise es.deg/es.tau_t under full membership)
-            el = member_k[src] * member_k[dst]         # (E,)
-            elb = el[:, None, None]
-            deg_eff = jax.ops.segment_sum(el, src, m) + jax.ops.segment_sum(
-                el, dst, m
-            )
-            tau_eff = tau0 + deg_eff if scalar_tau else es.tau_t
-            v0, v1 = view0 * elb, view1 * elb
-        else:
-            elb = None
-            deg_eff, tau_eff = es.deg, es.tau_t
-            v0, v1 = view0, view1
-        if robust_agg is None:
-            neigh = jax.ops.segment_sum(v0, src, m) + jax.ops.segment_sum(
-                v1, dst, m
-            )
-            center = (
-                neigh / jnp.maximum(deg_eff, 1.0)[:, None, None]
-                if is_adv else None
-            )
-        else:
-            # candidate set per agent: its delivered (possibly corrupted)
-            # directed-edge views + its own U; dead-edge deliveries are
-            # EXCLUDED via the validity mask, never fed in as zeros
-            W = jnp.concatenate([view0, view1], axis=0)     # (2E, L, r)
-            mv = pad_mask
-            if is_adv:
-                live2 = jnp.concatenate([el, el])
-                mv = mv * live2[pad_idx]
-            V = jnp.concatenate([W[pad_idx], U[:, None]], axis=1)
-            Mv = jnp.concatenate([mv, ones_m1], axis=1)
-            center = robust_agg(V, Mv)
-            neigh = deg_eff[:, None, None] * center
+            ctx = exchange.DenseTapeCtx(age_k, k)
+        # aged (possibly corrupted) neighbor views per directed edge,
+        # reduced per receiving agent in the same s-side/e-side segment
+        # order as fit_dense's neighbor_sum — the zero-delay tape stays
+        # bitwise-identical (see exchange.DenseTapeGather)
+        view0, view1, slot1, el, gv = gather(hist, U, ctx)
+        neigh, center = gv.neigh, gv.center
+        deg_eff, tau_eff = gv.deg_eff, gv.tau_eff
+        elb = el[:, None, None] if is_adv else None
         if aged_duals:
             # the non-owner endpoint sees the dual that rode the s -> e
             # message; the owner reads its own live dual
@@ -220,11 +159,10 @@ def make_async_runner(
             if is_adv:
                 # the shipped dual is corrupted by the same sender (src);
                 # a replayed dual is the ZERO initial dual
-                cb = code_k[src][:, None, None]
-                lv = jnp.where(cb == 1, -lam_view, lam_view)
-                lv = jnp.where(cb == 2, lam_view + noise_k[src], lv)
-                lv = jnp.where(cb == 3, jnp.zeros_like(lam_view), lv)
-                lam_view = jnp.where(cb == 4, lam_view + offset_j, lv)
+                lam_view = exchange.apply_attack(
+                    lam_view, code_k[src][:, None, None], noise_k[src],
+                    jnp.zeros_like(lam_view), offset_j,
+                )
                 ct_lam = jax.ops.segment_sum(
                     lam * elb, src, m
                 ) - jax.ops.segment_sum(lam_view * elb, dst, m)

@@ -313,6 +313,39 @@ _EXECUTOR_SETUPS = {
             mesh=mesh, agent_axes=("agents",))
         """
     ),
+    # in-mesh tape replay: the sharded_graph tape driver's ring-buffer
+    # RunState leaves (hist, and lam_hist below) must survive the npz
+    # round-trip and resume bitwise
+    "sharded_tape": textwrap.dedent(
+        """
+        from repro.netsim.channels import ChannelModel
+        mesh = jax.make_mesh((m,), ("agents",))
+        tape = ChannelModel(delay="geometric", scale=1.0, drop=0.1,
+                            seed=3).sample(g, cfg.iters)
+        runner = engine.make_runner(
+            stats, g, cfg, executor="sharded_graph",
+            mesh=mesh, agent_axes=("agents",), tape=tape)
+        """
+    ),
+    "sharded_tape_aged": textwrap.dedent(
+        """
+        import dataclasses
+        from repro.netsim.adversary import AdversaryModel
+        from repro.netsim.channels import ChannelModel
+        cfg = dataclasses.replace(cfg, aggregator="coordinate_median")
+        mesh = jax.make_mesh((m,), ("agents",))
+        base = ChannelModel(delay="geometric", scale=1.0, drop=0.1,
+                            seed=5).sample(g, cfg.iters)
+        tape = AdversaryModel(
+            n_byzantine=1, attack_rate=0.5,
+            kinds=("sign_flip", "gaussian_noise"),
+            churn=((m - 1, 2, 5),), seed=6,
+        ).sample(g, cfg.iters, L=6, r=cfg.r, base=base)
+        runner = engine.make_runner(
+            stats, g, cfg, executor="sharded_graph",
+            mesh=mesh, agent_axes=("agents",), tape=tape, aged_duals=True)
+        """
+    ),
     "async": textwrap.dedent(
         """
         from repro.netsim.channels import ChannelModel

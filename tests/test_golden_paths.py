@@ -1,0 +1,230 @@
+"""sha256 golden oracle: the no-tape (and fixed-tape) executor paths must
+stay BITWISE-identical across refactors of the exchange layer.
+
+``tests/data/exchange_golden.json`` holds sha256 digests of the final
+state leaves (U, A, lam) and the objective/consensus trajectories for a
+fixed battery of configs across all five executors, captured at the
+pre-exchange-refactor HEAD (PR 8).  The tests recompute the same runs and
+compare digests — any associativity change, op reorder, or silently
+altered default in the refactored gather/reduce machinery fails here with
+the config name attached.
+
+Valid because CI and the dev container pin the same jax/jaxlib wheels on
+the same CPU backend; regenerate with
+
+    PYTHONPATH=src python tests/test_golden_paths.py --write
+
+ONLY when a numerics change is intended and documented.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+
+GOLDEN_PATH = Path(__file__).parent / "data" / "exchange_golden.json"
+
+_SEED = 3
+_M, _N, _L, _D, _R = 8, 24, 8, 3, 2
+_ITERS = 20
+
+
+def _h(x) -> str:
+    import jax
+
+    arr = np.ascontiguousarray(np.asarray(jax.device_get(x)))
+    return hashlib.sha256(arr.tobytes()).hexdigest()
+
+
+def _state_hashes(state, diags) -> dict:
+    return {
+        "U": _h(state.U),
+        "A": _h(state.A),
+        "lam": _h(state.lam),
+        "objective": _h(diags["objective"]),
+        "consensus": _h(diags["consensus"]),
+    }
+
+
+def single_process_hashes() -> dict:
+    """The 1-device battery: dense / colored / southwell / async paths."""
+    import jax
+
+    from repro.core import engine
+    from repro.core.graph import expander, ring
+    from repro.data.synthetic import paper_uniform
+    from repro.netsim import AdversaryModel, ChannelModel
+
+    H, T = paper_uniform(
+        jax.random.PRNGKey(_SEED), m=_M, N=_N, L=_L, d=_D
+    )
+    stats = engine.sufficient_stats(H, T)
+    g_ring, g_exp = ring(_M), expander(_M, 3, seed=0)
+    cfg = engine.ConsensusConfig(
+        r=_R, tau=2.0, zeta=1.0, delta=10.0, iters=_ITERS
+    )
+    out = {}
+
+    state, diags = engine.fit_dense(stats, g_ring, cfg)
+    out["dense/ring8"] = _state_hashes(state, diags)
+
+    cfg_syl = dataclasses.replace(cfg, u_solver="sylvester")
+    state, diags = engine.fit_dense(stats, g_exp, cfg_syl)
+    out["dense/expander8_sylvester"] = _state_hashes(state, diags)
+
+    state, diags = engine.fit_colored(stats, g_exp, cfg, staleness=2)
+    out["colored/expander8_stale2"] = _state_hashes(state, diags)
+
+    state, diags = engine.fit_colored(
+        stats, g_ring, cfg, order="gauss_southwell"
+    )
+    out["colored/ring8_southwell"] = _state_hashes(state, diags)
+
+    cfg_med = dataclasses.replace(cfg, aggregator="coordinate_median")
+    state, diags = engine.fit_dense(stats, g_exp, cfg_med)
+    out["dense/expander8_median"] = _state_hashes(state, diags)
+
+    ch = ChannelModel(
+        delay="geometric", scale=1.5, drop=0.2, straggler_prob=0.2, seed=5
+    )
+    tape = ch.sample(g_exp, _ITERS)
+    for aged in (False, True):
+        state, diags = engine.fit_async(
+            stats, g_exp, cfg, tape, aged_duals=aged
+        )
+        key = "async/expander8_geo" + ("_ageddual" if aged else "")
+        out[key] = _state_hashes(state, diags)
+
+    # no churn: the leave-with-inflight arrival-masking fix cannot alter
+    # this tape, so the digest survives the satellite bugfix
+    adv = AdversaryModel(
+        n_byzantine=2, attack_rate=0.5,
+        kinds=("sign_flip", "gaussian_noise"), seed=7,
+    ).sample(g_exp, _ITERS, L=_L, r=_R, base=tape)
+    state, diags = engine.fit_async(stats, g_exp, cfg, adv)
+    out["async/expander8_adv_mean"] = _state_hashes(state, diags)
+    state, diags = engine.fit_async(stats, g_exp, cfg_med, adv)
+    out["async/expander8_adv_median"] = _state_hashes(state, diags)
+
+    return out
+
+
+_SHARDED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import hashlib, json
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import engine
+    from repro.core.graph import expander, ring
+    from repro.data.synthetic import paper_uniform
+
+    def h(x):
+        arr = np.ascontiguousarray(np.asarray(jax.device_get(x)))
+        return hashlib.sha256(arr.tobytes()).hexdigest()
+
+    def pack(state, diags):
+        return {"U": h(state.U), "A": h(state.A), "lam": h(state.lam),
+                "objective": h(diags["objective"]),
+                "consensus": h(diags["consensus"])}
+
+    H, T = paper_uniform(jax.random.PRNGKey(%(seed)d), m=%(m)d, N=%(n)d,
+                         L=%(L)d, d=%(d)d)
+    stats = engine.sufficient_stats(H, T)
+    mesh = Mesh(np.array(jax.devices()[:8]), ("agents",))
+    cfg = engine.ConsensusConfig(r=%(r)d, tau=2.0, zeta=1.0, delta=10.0,
+                                 iters=%(iters)d)
+    out = {}
+
+    runner = engine.make_runner(stats, None, cfg, executor="sharded",
+                                mesh=mesh, agent_axes=("agents",))
+    state, diags = runner.run()
+    out["sharded/ring8"] = pack(state, diags)
+
+    g = expander(8, 3, seed=0)
+    runner = engine.make_runner(stats, g, cfg, executor="sharded_graph",
+                                mesh=mesh, agent_axes=("agents",))
+    state, diags = runner.run()
+    out["sharded_graph/expander8"] = pack(state, diags)
+
+    g2 = ring(8)
+    runner = engine.make_runner(stats, g2, cfg, executor="sharded_graph",
+                                mesh=mesh, agent_axes=("agents",),
+                                schedule=g2.chromatic_schedule())
+    state, diags = runner.run()
+    out["sharded_graph/ring8_gs"] = pack(state, diags)
+
+    import dataclasses
+    cfg_med = dataclasses.replace(cfg, aggregator="coordinate_median")
+    runner = engine.make_runner(stats, g, cfg_med, executor="sharded_graph",
+                                mesh=mesh, agent_axes=("agents",))
+    state, diags = runner.run()
+    out["sharded_graph/expander8_median"] = pack(state, diags)
+
+    print("GOLDEN_JSON:" + json.dumps(out))
+    """
+) % {"seed": _SEED, "m": _M, "n": _N, "L": _L, "d": _D, "r": _R,
+     "iters": _ITERS}
+
+
+def sharded_hashes() -> dict:
+    """The 8-emulated-device battery, run in a subprocess so the device
+    count pins before jax initializes (the test_sharded_dmtl idiom)."""
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"sharded golden subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith("GOLDEN_JSON:"):
+            return json.loads(line[len("GOLDEN_JSON:"):])
+    raise AssertionError(f"no GOLDEN_JSON line in output:\n{proc.stdout}")
+
+
+def _compare(got: dict, section: str) -> None:
+    golden = json.loads(GOLDEN_PATH.read_text())[section]
+    mismatches = []
+    for name, leaves in golden.items():
+        for leaf, digest in leaves.items():
+            actual = got.get(name, {}).get(leaf)
+            if actual != digest:
+                mismatches.append(f"{name}:{leaf} {digest[:12]} != "
+                                  f"{str(actual)[:12]}")
+    assert not mismatches, (
+        "golden sha256 drift (bitwise parity with pre-refactor HEAD "
+        "broken):\n  " + "\n  ".join(mismatches)
+    )
+
+
+def test_single_process_paths_match_pre_refactor_head():
+    _compare(single_process_hashes(), "single")
+
+
+def test_sharded_paths_match_pre_refactor_head():
+    _compare(sharded_hashes(), "sharded")
+
+
+if __name__ == "__main__":
+    if "--write" not in sys.argv:
+        raise SystemExit("pass --write to regenerate the golden fixture")
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    data = {"single": single_process_hashes(), "sharded": sharded_hashes()}
+    GOLDEN_PATH.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {GOLDEN_PATH}")

@@ -454,6 +454,106 @@ def test_membership_churn_freezes_departed_and_rejoins_warm():
     assert np.isfinite(np.asarray(got_r.U)).all()
 
 
+def test_leave_with_inflight_messages_are_flushed_not_replayed():
+    """Regression (leave-with-inflight): a departed sender's in-flight
+    traffic must be masked, not delivered during absence or replayed on
+    rejoin.  Deterministic 3-extra-rounds channel on ring(4): every
+    publish at tick p arrives at p + 4.  Agent 1 leaves [5, 9): its
+    publish-1 message (arriving at tick 5, mid-absence) and publishes
+    2..8 (in-flight across or during the absence) are all flushed; the
+    receivers hold publish 0 until the first post-rejoin delivery
+    (publish 9, arriving at tick 13)."""
+    g = ring(4)
+    iters = 16
+    base = ChannelModel(delay="deterministic", scale=3.0).sample(g, iters)
+    tape = AdversaryModel(churn=((1, 5, 9),)).sample(
+        g, iters, L=12, r=2, base=base
+    )
+    validate_tape(tape, g, iters)
+    age = np.asarray(tape.age)
+    # edges with sender 1: edge 0 = (0, 1) dir 0 (e -> s), edge 1 = (1, 2)
+    # dir 1 (s -> e)
+    for d, j in ((0, 0), (1, 1)):
+        for k in range(5, 13):
+            # held publish = k - age: pinned at publish 0 through the
+            # absence and the flushed in-flight window
+            assert k - age[k, d, j] == 0, (d, j, k, age[k, d, j])
+        assert 13 - age[13, d, j] == 9, age[13, d, j]   # post-rejoin publish
+    # the PRE-FIX tape (raw channel ages, same membership) is rejected
+    with pytest.raises(ValueError, match="non-member"):
+        validate_tape(
+            tape._replace(age=np.asarray(base.age, np.int32)), g, iters
+        )
+    # and the fixed tape still replays through both executors finitely
+    stats = _problem(m=4)
+    cfg = ConsensusConfig(r=2, iters=iters, tau=2.0, zeta=1.0)
+    state, diag = fit_async(stats, g, cfg, tape)
+    assert np.isfinite(np.asarray(state.U)).all()
+    assert np.isfinite(np.asarray(diag["objective"])).all()
+
+
+def test_from_trace_roundtrip_recovers_channel_family():
+    """Satellite: quantile-fit a ChannelModel from a latency trace CSV.
+
+    Round trip: draw per-message latencies FROM a known model, write the
+    CSV, refit — the fitted family, scale, and drop rate must come back
+    (family exactly; scale/drop within sampling noise)."""
+    import os
+    import tempfile
+
+    from repro.netsim import from_trace
+    from repro.netsim.channels import TRACE_QUANTILES
+
+    rng = np.random.default_rng(11)
+    n, round_ms = 4000, 50.0
+    for true in (
+        ChannelModel(delay="geometric", scale=2.0, drop=0.1),
+        ChannelModel(delay="deterministic", scale=1.0, drop=0.0),
+    ):
+        extra = true._extra_delays(rng, (n,))
+        lat = round_ms * (extra + rng.uniform(0.05, 0.95, n))
+        dropped = rng.uniform(size=n) < true.drop
+        lines = ["latency_ms"] + [
+            "inf" if dd else f"{v:.3f}" for v, dd in zip(lat, dropped)
+        ]
+        fd, path = tempfile.mkstemp(suffix=".csv")
+        with os.fdopen(fd, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        try:
+            fitted = from_trace(path, round_ms=round_ms)
+        finally:
+            os.unlink(path)
+        assert fitted.delay == true.delay, (true, fitted)
+        assert abs(fitted.drop - true.drop) < 0.03, (true, fitted)
+        # the fitted quantiles track the trace quantiles
+        emp = np.quantile(np.maximum(np.ceil(lat / round_ms) - 1, 0)[
+            ~dropped], TRACE_QUANTILES)
+        got = fitted.quantiles(TRACE_QUANTILES, seed=3)
+        assert np.all(np.abs(got - emp) <= np.maximum(0.3 * emp, 1.0)), (
+            emp, got
+        )
+
+
+def test_from_trace_committed_wan_trace():
+    """The committed synthetic WAN trace (40ms base + Pareto(1.5) queueing,
+    5% drop) fits back to the heavy-tail family, and the fitted model
+    samples a valid tape."""
+    from pathlib import Path
+
+    from repro.netsim import from_trace
+
+    path = (
+        Path(__file__).resolve().parents[1]
+        / "experiments" / "traces" / "wan_pareto_40ms.csv"
+    )
+    cm = from_trace(path)
+    assert cm.delay == "heavy_tail"
+    assert 0.03 < cm.drop < 0.09
+    g = ring(5)
+    tape = cm.sample(g, 12)
+    validate_tape(tape, g, 12)
+
+
 def test_async_convergence_degrades_gracefully_with_delay():
     """The frontier's qualitative shape on a ring: more delay can only slow
     the gap-closing iteration count (within the sampled-band), and even a
