@@ -5,7 +5,8 @@ For every topology the synchronous Jacobian run (``fit_dense``) sets the
 yardstick — its iteration-100 objective plus 0.1% of the initial gap (the
 ``run_sweeps`` convention) — and each (delay scale × drop rate) cell of the
 sampled ``ChannelModel`` grid reports how many simulated rounds the async
-run needs to close that gap (``-1`` = DNF at the horizon).  Topologies
+run needs to close that gap (``-1`` = DNF, with a machine-readable
+``dnf_reason`` column from ``repro.obs.health.classify_run``).  Topologies
 cover the mesh-native ring, the paper's star and Fig. 2(a) graphs, and the
 new log-diameter overlays (``expander``/``hypercube``) the Liu et al. 2017
 line motivates: the frontier shows how much delay/drop budget each
@@ -43,6 +44,7 @@ from repro.core import (
 from repro.core.engine import fit_async
 from repro.data.synthetic import paper_uniform
 from repro.netsim import ChannelModel, gap_target, iters_to_target, tape_summary
+from repro.obs.health import classify_run
 
 from benchmarks.common import emit, timed, write_csv
 
@@ -95,10 +97,14 @@ def run():
                 obj_a = np.asarray(diag_a["objective"])
                 it_a = iters_to_target(obj_a, target)
                 cons = float(np.asarray(diag_a["consensus"])[-1])
+                # the -1 DNF sentinel gets a machine-readable reason:
+                # "" (reached) / "nan" / "objective_divergence" /
+                # "consensus_stall" / "horizon" (repro.obs.health)
+                why = classify_run(diag_a, it_a >= 0)
                 rows.append([
                     name, g.m, g.n_edges, dist, scale, drop, straggle,
                     int(aged), summ["mean_age"], summ["max_age"],
-                    summ["active_frac"], target, base_iters, it_a,
+                    summ["active_frac"], target, base_iters, it_a, why,
                     float(obj_a[-1]), cons,
                 ])
                 emit(
@@ -113,7 +119,8 @@ def run():
               ["topology", "m", "edges", "delay_dist", "delay_scale",
                "drop", "straggler_prob", "aged_duals", "mean_age",
                "max_age", "active_frac", "target_obj", "sync_iters",
-               "async_iters", "final_obj", "final_consensus"], rows)
+               "async_iters", "dnf_reason", "final_obj",
+               "final_consensus"], rows)
 
 
 _MESH_SCRIPT = textwrap.dedent(

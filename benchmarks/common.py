@@ -1,27 +1,19 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+``timed`` now lives in ``repro.obs.trace`` (the obs layer's spans share
+its clock); it is re-exported here so every bench suite keeps importing
+it from ``benchmarks.common`` unchanged.
+"""
 
 from __future__ import annotations
 
 import csv
 import io
-import time
 from pathlib import Path
 
-import jax
+from repro.obs.trace import timed  # noqa: F401  (re-export)
 
 OUT_DIR = Path("experiments/benchmarks")
-
-
-def timed(fn, *args, repeats: int = 1, **kwargs):
-    """Run fn once for compile, then time `repeats` executions."""
-    out = fn(*args, **kwargs)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        out = fn(*args, **kwargs)
-        jax.block_until_ready(out)
-    dt = (time.perf_counter() - t0) / repeats
-    return out, dt
 
 
 def write_csv(name: str, header, rows):

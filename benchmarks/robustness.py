@@ -6,8 +6,10 @@ For every topology the clean synchronous Jacobian run (``fit_dense``) sets
 the yardstick — its iteration-``target_at`` objective plus 0.1% of the
 initial gap (the ``run_sweeps`` convention) — and each (attack kind ×
 attack rate × n_byzantine × aggregator) cell reports how many simulated
-rounds the attacked run needs to close that gap (``-1`` = DNF at the
-horizon, including runs the attack blows up to NaN).  The SAME sampled
+rounds the attacked run needs to close that gap (``-1`` = DNF, with a
+machine-readable ``dnf_reason`` column from
+``repro.obs.health.classify_run`` — a run the attack blows up to NaN and
+one it merely stalls are different frontier facts).  The SAME sampled
 adversary tape is replayed under every aggregator, so a row pair differs
 ONLY in the defense: the frontier is the committed evidence that the
 robust aggregators (``trimmed_mean`` / ``coordinate_median`` /
@@ -46,6 +48,7 @@ from repro.core import DMTLELMConfig, expander, fit_dense, ring, star, \
 from repro.core.engine import fit_async
 from repro.data.synthetic import paper_uniform
 from repro.netsim import AdversaryModel, gap_target, iters_to_target
+from repro.obs.health import classify_run
 
 from benchmarks.common import OUT_DIR, emit, timed, write_csv
 
@@ -135,10 +138,14 @@ def run():
                 obj_a = np.asarray(diag_a["objective"])
                 it_a = iters_to_target(obj_a, target)
                 cons = float(np.asarray(diag_a["consensus"])[-1])
+                # machine-readable DNF reason for the -1 sentinel: an
+                # attack that NaNs the run and one that merely stalls it
+                # are different frontier facts (repro.obs.health)
+                why = classify_run(diag_a, it_a >= 0)
                 rows.append([
                     name, g.m, g.n_edges, agg, kind, n_byz, rate,
                     int(bool(churn)), member_frac, target, sync_iters,
-                    it_a, float(obj_a[-1]), cons,
+                    it_a, why, float(obj_a[-1]), cons,
                 ])
                 cell_tag = (f"{kind}_r{rate}_b{n_byz}"
                             + ("_churn" if churn else ""))
@@ -149,8 +156,8 @@ def run():
     write_csv("robustness_frontier",
               ["topology", "m", "edges", "aggregator", "attack_kind",
                "n_byzantine", "attack_rate", "churn", "member_frac",
-               "target_obj", "sync_iters", "iters_to_target", "final_obj",
-               "final_consensus"], rows)
+               "target_obj", "sync_iters", "iters_to_target", "dnf_reason",
+               "final_obj", "final_consensus"], rows)
     _append_history(summary)
 
 

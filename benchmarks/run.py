@@ -27,6 +27,9 @@ experiments/benchmarks/.
   robustness_mesh  mesh Byzantine cells: same adversary tape on fit_async
             vs the in-mesh tape driver per aggregator →
             mesh_robustness.csv + a dated BENCH_history entry
+  obs       observability overhead: telemetry-on vs -off fits per
+            executor + the span-traced run (target < 5% on dense) →
+            obs_overhead.csv + a dated BENCH_history entry
   roofline  aggregated dry-run roofline table (deliverable g) + the
             analytic Gram-engine roofline (tri vs dense vs two-matmul)
   kernels   Pallas-kernel correctness probes, op timings (labeled
@@ -43,7 +46,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         asynchrony, communication, consensus, convergence, generalization,
-        kernels, robustness, roofline, topology,
+        kernels, observability, robustness, roofline, topology,
     )
 
     suites = [
@@ -60,6 +63,7 @@ def main() -> None:
         ("async_mesh", asynchrony.run_mesh),
         ("robustness", robustness.run),
         ("robustness_mesh", robustness.run_mesh),
+        ("obs", observability.run),
         ("kernels", kernels.run),
         ("roofline", roofline.run),
     ]

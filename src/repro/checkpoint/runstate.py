@@ -56,6 +56,8 @@ from repro.checkpoint.checkpoint import (
     read_meta,
     save_checkpoint,
 )
+from repro.obs import trace as obs_trace
+from repro.obs.health import HealthConfig, check_health
 
 _EXIT_ENV = "REPRO_CHECKPOINT_EXIT_AFTER_SAVE"
 
@@ -128,7 +130,8 @@ def _concat_diags(parts: list) -> dict:
 
 def run_checkpointed(runner, *, checkpoint_dir: str | Path,
                      checkpoint_every: int = 0, resume: bool = False,
-                     metadata: Optional[dict] = None):
+                     metadata: Optional[dict] = None,
+                     health: "HealthConfig | bool | None" = None):
     """Drive ``runner`` to ``cfg.iters`` with periodic checkpoints.
 
     ``checkpoint_every=k`` saves after every k-iteration segment (0 = one
@@ -138,6 +141,16 @@ def run_checkpointed(runner, *, checkpoint_dir: str | Path,
     ``(state, diags)`` where ``diags`` is the FULL trajectory over
     ``[0, cfg.iters)`` — bitwise identical to the uninterrupted
     ``runner.run()`` by the engine's segment property.
+
+    ``health=`` arms the post-segment run-health monitor
+    (``repro.obs.health.check_health``; ``True`` uses the default
+    :class:`HealthConfig`): an unhealthy trajectory (NaN/inf objective,
+    objective divergence, consensus stall) stops the run EARLY at the
+    segment boundary — the final snapshot carries the machine-readable
+    ``dnf_reason`` / ``dnf_at_iter`` in its metadata, and the returned
+    diagnostics cover only the iterations actually run.  Health checks
+    never perturb the computation itself, so a healthy monitored run is
+    bitwise the unmonitored one.
     """
     total = int(runner.cfg.iters)
     every = int(checkpoint_every) if checkpoint_every else total
@@ -145,6 +158,9 @@ def run_checkpointed(runner, *, checkpoint_dir: str | Path,
         raise ValueError(
             f"checkpoint_every must be >= 0, got {checkpoint_every}"
         )
+    hcfg = None
+    if health is not None and health is not False:
+        hcfg = HealthConfig() if health is True else health
     meta = dict(metadata or {})
     meta.setdefault("executor", runner.executor)
     meta.setdefault("iters", total)
@@ -162,10 +178,11 @@ def run_checkpointed(runner, *, checkpoint_dir: str | Path,
                 f"executor {saved_exec!r}, cannot resume with "
                 f"{runner.executor!r}"
             )
-        state, prev, _ = load_run_checkpoint(
-            checkpoint_dir, runner.init_state(),
-            shardings=runner.state_shardings(),
-        )
+        with obs_trace.span("restore", dir=str(checkpoint_dir)):
+            state, prev, _ = load_run_checkpoint(
+                checkpoint_dir, runner.init_state(),
+                shardings=runner.state_shardings(),
+            )
         if prev:
             parts.append(prev)
     if state is None:
@@ -177,11 +194,25 @@ def run_checkpointed(runner, *, checkpoint_dir: str | Path,
         state, diags = runner.run_segment(state, min(every, total - done))
         _append_diags(parts, diags)
         done = int(jax.device_get(state.k))
-        save_run_checkpoint(
-            checkpoint_dir, state, _concat_diags(parts), metadata=meta
-        )
+        verdict = None
+        if hcfg is not None:
+            verdict = check_health(_concat_diags(parts), hcfg)
+            if not verdict["healthy"]:
+                # stamp BEFORE the save so the final snapshot carries the
+                # DNF verdict for any later resume/report to read
+                meta = {
+                    **meta,
+                    "dnf_reason": verdict["dnf_reason"],
+                    "dnf_at_iter": verdict["at_iter"],
+                }
+        with obs_trace.span("snapshot", step=done):
+            save_run_checkpoint(
+                checkpoint_dir, state, _concat_diags(parts), metadata=meta
+            )
         if exit_after is not None and done >= int(exit_after):
             os._exit(0)   # crash injection: die AT a checkpoint boundary
+        if verdict is not None and not verdict["healthy"]:
+            break
     return state, _concat_diags(parts)
 
 

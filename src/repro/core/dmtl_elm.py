@@ -32,12 +32,17 @@ Solver choice (cfg.u_solver — the ``engine.U_SOLVERS`` registry):
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import engine
 from repro.core.engine import ConsensusConfig, DenseState
 from repro.core.graph import Graph
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
 
 # Public names kept for API compatibility: the config and stacked-state types
 # now live in the engine.
@@ -121,6 +126,9 @@ def fit(
     checkpoint_dir=None,
     checkpoint_every: int = 0,
     resume: bool = False,
+    telemetry: bool = False,
+    trace_dir=None,
+    health=None,
 ):
     """One entry point, five executors over the SAME ``agent_update`` body.
 
@@ -176,6 +184,20 @@ def fit(
     diagnostics trajectory bitwise identical to the uninterrupted run —
     the engine's segment property, which holds for all five executors and
     both dual modes.
+
+    Observability (``repro.obs``): ``telemetry=True`` sets
+    ``cfg.telemetry`` — the per-iteration comm/aggregator counters ride
+    the diagnostics dict (see the engine docstring's "Telemetry
+    extension"); ``trace_dir=`` activates host-side span tracing around
+    the stats pass, runner compile, and every segment, then writes
+    ``trace.json`` (Chrome trace format — load it in Perfetto),
+    ``spans.jsonl``, and a run report (``report.md`` / ``report.json``)
+    under that directory; ``health=`` (``True`` or a
+    ``repro.obs.health.HealthConfig``) arms the post-segment run-health
+    monitor — it requires ``checkpoint_dir=`` because the check runs at
+    checkpoint segment boundaries, stops a NaN/diverging/stalled run
+    early, and stamps a machine-readable ``dnf_reason`` into the final
+    snapshot's metadata.
 
     dense/colored/async return ``(DMTLELMState, diagnostics)``; sharded
     returns the engine's ``(U, A, diagnostics)`` sharded-output contract.
@@ -266,6 +288,11 @@ def fit(
         raise ValueError(
             f"checkpoint_every must be >= 0, got {checkpoint_every}"
         )
+    if health is not None and health is not False and checkpoint_dir is None:
+        raise ValueError(
+            "health= monitoring runs at checkpoint segment boundaries; "
+            "pass checkpoint_dir= (and checkpoint_every=) to arm it"
+        )
     use_graph_path = False
     if executor == "sharded":
         if mesh is None or agent_axes is None:
@@ -291,27 +318,46 @@ def fit(
             or any(s < 2 for s in sizes)
             or not engine.graph_matches_torus(g, sizes)
         )
-    stats = engine.produce_stats(
-        H, T, producer=cfg.stats_producer, feature_map=feature_map,
-        precision=cfg.stats_precision,
-    )
+    if telemetry:
+        cfg = dataclasses.replace(cfg, telemetry=True)
+    tracer = None
+    trace_ctx = contextlib.nullcontext()
+    if trace_dir is not None:
+        tracer = obs_trace.Tracer()
+        trace_ctx = obs_trace.use(tracer)
     exec_name = executor
     if executor == "sharded":
         exec_name = "sharded_graph" if use_graph_path else "sharded"
-    runner = engine.make_runner(
-        stats, g, cfg, executor=exec_name, mesh=mesh, agent_axes=agent_axes,
-        schedule=schedule, staleness=staleness, order=order, tape=tape,
-        aged_duals=aged_duals,
-    )
-    if checkpoint_dir is not None:
-        from repro.checkpoint import run_checkpointed
-
-        state, diags = run_checkpointed(
-            runner, checkpoint_dir=checkpoint_dir,
-            checkpoint_every=checkpoint_every, resume=resume,
+    with trace_ctx:
+        stats = engine.produce_stats(
+            H, T, producer=cfg.stats_producer, feature_map=feature_map,
+            precision=cfg.stats_precision,
         )
-    else:
-        state, diags = runner.run()
+        runner = engine.make_runner(
+            stats, g, cfg, executor=exec_name, mesh=mesh,
+            agent_axes=agent_axes, schedule=schedule, staleness=staleness,
+            order=order, tape=tape, aged_duals=aged_duals,
+        )
+        if checkpoint_dir is not None:
+            from repro.checkpoint import run_checkpointed
+
+            state, diags = run_checkpointed(
+                runner, checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, resume=resume,
+                health=health,
+            )
+        else:
+            state, diags = runner.run()
+    if tracer is not None:
+        tracer.export(trace_dir)
+        obs_report.write(
+            trace_dir, diags, tracer.spans,
+            meta={
+                "executor": exec_name, "m": g.m, "n_edges": g.n_edges,
+                "iters": cfg.iters, "aggregator": cfg.aggregator,
+                "telemetry": bool(cfg.telemetry),
+            },
+        )
     if executor == "sharded":
         return state.U, state.A, diags
     return DenseState(state.U, state.A, state.lam), diags

@@ -173,6 +173,31 @@ paths.  (``fit_async`` additionally reports ``tape_cursor``, the absolute
 tape tick each row was computed at, so a resumed run can be audited
 against its tape position.)
 
+Telemetry extension (``cfg.telemetry=True``; the observability layer,
+``repro.obs``): every executor additionally reports, per iteration,
+
+  resid_max       max |C U| over live edges (worst-agent consensus)
+  msgs_delivered  fresh deliveries this tick (age == 1, live edges)
+  msgs_stale      stale-served deliveries (age > 1, live edges)
+  msgs_dropped    deliveries masked out (dead membership / idle rounds)
+  agg_rejected    robust-aggregation rejection count — candidates flagged
+                  as distance outliers by ``exchange.aggregator_audit``
+                  (identically 0.0 for the mean aggregator and on clean
+                  federations; the Byzantine-detection signal, verifiable
+                  against ``AdversaryTape.attack`` ground truth)
+  comm_floats     the analytic floats-per-iteration model of the
+                  executor's message schedule
+                  (``repro.obs.counters.modeled_floats_per_iter``)
+
+The fresh-view executors (dense / colored / sharded / sharded_graph
+without a tape) report the static schedule (all deliveries fresh); the
+tape paths count from the replayed ``age``/``member`` rows, and the two
+tape drivers agree on the same tape.  Zero-overhead guarantee: the gate
+is a Python-level ``if cfg.telemetry`` at trace time, so with telemetry
+OFF the diag key set, every value, and the sha256 golden-path hashes are
+byte-identical to the pre-telemetry engine; host-side span tracing
+(``obs.Tracer``) is likewise a no-op unless a tracer is installed.
+
 Checkpointable runtime — the segmented step core under every executor:
 
 Each ``fit_*`` is a thin wrapper over ONE shared, explicitly serializable
@@ -237,6 +262,8 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core import exchange
 from repro.core.graph import Graph
+from repro.obs import trace as obs_trace
+from repro.obs.counters import modeled_floats_per_iter
 from repro.core.solvers import (
     kron_ridge_solve,
     sum_sylvester_cg,
@@ -387,16 +414,29 @@ def produce_stats(
                 "precision='int8' is the unfused (materialized) stream; "
                 "the fused producer supports fp32/bf16"
             )
-        return sufficient_stats_fused(batch, feature_map, T,
-                                      use_pallas=use_pallas,
-                                      precision=precision)
-    if feature_map is not None:
+    elif feature_map is not None:
         raise ValueError(
             "feature_map= only applies to producer='fused', got "
             f"producer={producer!r}"
         )
-    return sufficient_stats(batch, T, use_pallas=use_pallas,
-                            precision=precision, quant_seed=quant_seed)
+
+    def _dispatch():
+        if producer == "fused":
+            return sufficient_stats_fused(batch, feature_map, T,
+                                          use_pallas=use_pallas,
+                                          precision=precision)
+        return sufficient_stats(batch, T, use_pallas=use_pallas,
+                                precision=precision, quant_seed=quant_seed)
+
+    tr = obs_trace.current()
+    if tr is None:
+        return _dispatch()
+    # span durations should reflect the stats pass itself, not dispatch
+    # latency — block inside the span (tracing-on only)
+    with tr.span("stats", producer=producer, precision=precision):
+        out = _dispatch()
+        jax.block_until_ready(out)
+    return out
 
 
 def init_stats(m: int, L: int, d: int, dtype=jnp.float32) -> SufficientStats:
@@ -610,6 +650,13 @@ class ConsensusConfig:
     # untouched.  Mask-aware: departed/absent neighbors are excluded from
     # the candidate set rather than averaged in as zeros.
     aggregator: str = "mean"
+    # Device-side telemetry counters (the observability layer, repro.obs):
+    # False (default) keeps every executor's diag dict and traced
+    # computation EXACTLY as before — the gate is a Python-level branch at
+    # trace time, so the sha256 golden paths are byte-identical.  True
+    # extends the per-iteration diagnostics with the comm/aggregator
+    # counters documented in ``_iteration_diag``.
+    telemetry: bool = False
 
 
 def _u_solve_kron(G, M, rhs, c, precomp=None):
@@ -947,9 +994,20 @@ def _iteration_diag(stats, cfg, U, A, lam_new, resid_new, gamma, primal) -> dict
       primal_sq   sum of squared edge residuals (consensus, unnormalized)
 
     ``gamma``/``primal`` are the per-edge (E,) outputs of :func:`dual_step`.
+
+    ``cfg.telemetry=True`` extends the dict with the observability keys
+    (module docstring "Telemetry extension"): this helper contributes
+    ``resid_max`` (the max-abs edge residual — the worst single consensus
+    violation, vs ``consensus``'s RMS); the message counters
+    (``msgs_delivered`` / ``msgs_stale`` / ``msgs_dropped``), the
+    ``agg_rejected`` aggregator audit, and the analytic ``comm_floats``
+    model are schedule-specific and added by each executor.  Gating is a
+    Python-level branch at trace time: with telemetry off the returned
+    dict is byte-identical to the pre-telemetry contract (the
+    zero-overhead guarantee the golden sha256 battery pins).
     """
     obj = objective_from_stats(stats, U, A, cfg.mu1, cfg.mu2)
-    return {
+    diag = {
         "objective": obj,
         "lagrangian": obj
         + jnp.sum(lam_new * resid_new)
@@ -959,6 +1017,9 @@ def _iteration_diag(stats, cfg, U, A, lam_new, resid_new, gamma, primal) -> dict
         "gamma_min": jnp.min(gamma),
         "primal_sq": jnp.sum(primal),
     }
+    if cfg.telemetry:
+        diag["resid_max"] = jnp.max(jnp.abs(resid_new))
+    return diag
 
 
 # --------------------------------------------------------------------------
@@ -1049,7 +1110,15 @@ class Runner:
                 f"segment [{done}, {done + n}) runs past cfg.iters="
                 f"{self.cfg.iters}"
             )
-        return self.segment_fn(state, n)
+        tr = obs_trace.current()
+        if tr is None:
+            return self.segment_fn(state, n)
+        # span durations should reflect device completion, not dispatch —
+        # block inside the span (tracing-on only)
+        with tr.span("segment", executor=self.executor, start=done, iters=n):
+            out = self.segment_fn(state, n)
+            jax.block_until_ready(out)
+        return out
 
     def run(self, state: "RunState | None" = None):
         """Drive to ``cfg.iters`` from ``state`` (or a fresh init_state)."""
@@ -1087,6 +1156,17 @@ def _make_dense_runner(
         diag = _iteration_diag(
             stats, cfg, U_new, A_new, lam_new, resid_new, gamma, primal
         )
+        if cfg.telemetry:
+            dtype = U.dtype
+            # synchronous Jacobian delivery: both endpoints of every edge
+            # receive the fresh U each iteration; nothing is stale/dropped
+            diag["msgs_delivered"] = jnp.asarray(2.0 * g.n_edges, dtype)
+            diag["msgs_stale"] = jnp.zeros((), dtype)
+            diag["msgs_dropped"] = jnp.zeros((), dtype)
+            diag["agg_rejected"] = (
+                es.ex.audit(U) if es.ex.agg is not None
+                else jnp.zeros((), dtype)
+            )
         return DenseState(U_new, A_new, lam_new), diag
 
     def init_fn():
@@ -1102,6 +1182,11 @@ def _make_dense_runner(
         final, diags = jax.lax.scan(
             step, DenseState(state.U, state.A, state.lam), None, length=n
         )
+        if cfg.telemetry:
+            model = modeled_floats_per_iter(
+                "dense", L=stats.G.shape[-1], r=cfg.r, n_edges=g.n_edges
+            )
+            diags["comm_floats"] = jnp.full((n,), float(model), stats.G.dtype)
         return state._replace(
             U=final.U, A=final.A, lam=final.lam, k=state.k + n
         ), diags
@@ -1343,6 +1428,22 @@ def _make_colored_runner(
         diag = _iteration_diag(
             stats, cfg, U, A, lam_new, resid_new, gamma, primal
         )
+        if cfg.telemetry:
+            dtype = U.dtype
+            # staleness<=1 phases read current-round views (live U or the
+            # previous iterate — both count as fresh deliveries, matching
+            # the tape executor's age==1 accounting); staleness>1 serves
+            # k-round-old snapshots, i.e. every message arrives stale
+            fresh = 2.0 * g.n_edges if staleness <= 1 else 0.0
+            diag["msgs_delivered"] = jnp.asarray(fresh, dtype)
+            diag["msgs_stale"] = jnp.asarray(
+                2.0 * g.n_edges - fresh, dtype)
+            diag["msgs_dropped"] = jnp.zeros((), dtype)
+            audit_view = U_start if staleness == 0 else hist[0]
+            diag["agg_rejected"] = (
+                es.ex.audit(audit_view) if es.ex.agg is not None
+                else jnp.zeros((), dtype)
+            )
         if staleness > 0:
             hist = jnp.concatenate([hist[1:], U[None]], axis=0)
         return (U, A, lam_new, hist), diag
@@ -1360,6 +1461,11 @@ def _make_colored_runner(
         (U, A, lam, hist), diags = jax.lax.scan(
             step, (state.U, state.A, state.lam, state.hist), None, length=n
         )
+        if cfg.telemetry:
+            model = modeled_floats_per_iter(
+                "colored", L=stats.G.shape[-1], r=cfg.r, n_edges=g.n_edges
+            )
+            diags["comm_floats"] = jnp.full((n,), float(model), stats.G.dtype)
         return state._replace(
             U=U, A=A, lam=lam, hist=hist, k=state.k + n
         ), diags
@@ -1442,6 +1548,16 @@ def _make_southwell_runner(
         diag = _iteration_diag(
             stats, cfg, U, A, lam_new, resid_new, gamma, primal
         )
+        if cfg.telemetry:
+            dtype = U.dtype
+            # every phase regathers from the live U: all fresh deliveries
+            diag["msgs_delivered"] = jnp.asarray(2.0 * g.n_edges, dtype)
+            diag["msgs_stale"] = jnp.zeros((), dtype)
+            diag["msgs_dropped"] = jnp.zeros((), dtype)
+            diag["agg_rejected"] = (
+                es.ex.audit(U_start) if es.ex.agg is not None
+                else jnp.zeros((), dtype)
+            )
         return (U, A, lam_new), diag
 
     def init_fn():
@@ -1454,6 +1570,11 @@ def _make_southwell_runner(
         (U, A, lam), diags = jax.lax.scan(
             step, (state.U, state.A, state.lam), None, length=n
         )
+        if cfg.telemetry:
+            model = modeled_floats_per_iter(
+                "colored", L=stats.G.shape[-1], r=cfg.r, n_edges=g.n_edges
+            )
+            diags["comm_floats"] = jnp.full((n,), float(model), stats.G.dtype)
         return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags
 
     return Runner("colored", cfg, init_fn, segment_fn)
@@ -1570,7 +1691,7 @@ def _assemble_sharded_diags(diags: dict, n_edges: int, lr_size: int) -> dict:
     primal = diags["primal_sq"].sum(axis=1)
     gamma = diags["gamma_sum"].sum(axis=1) / n_edges
     gamma_min = diags["gamma_min"].min(axis=1)
-    return {
+    out = {
         "objective": obj,
         "lagrangian": obj + lag_pen,
         "consensus": jnp.sqrt(primal / (n_edges * lr_size)),
@@ -1578,6 +1699,15 @@ def _assemble_sharded_diags(diags: dict, n_edges: int, lr_size: int) -> dict:
         "gamma_min": gamma_min,
         "primal_sq": primal,
     }
+    # telemetry columns (cfg.telemetry runs only): counts sum across
+    # shards, the worst residual is the max over shards
+    if "resid_max" in diags:
+        out["resid_max"] = diags["resid_max"].max(axis=1)
+    for key in ("agg_rejected", "msgs_delivered", "msgs_stale",
+                "msgs_dropped"):
+        if key in diags:
+            out[key] = diags[key].sum(axis=1)
+    return out
 
 
 def _ring_recv_from_next(x, axis_name):
@@ -1659,6 +1789,15 @@ def ring_iteration(
         # is live), center rescaled back to the degree-weighted sum
         neigh = exchange.stack_ring_candidates(views, U, deg, robust_agg,
                                                dtype)
+    agg_rejected = jnp.zeros((), dtype)
+    if cfg.telemetry and robust_agg is not None:
+        # neigh = deg * agg(V, Mv) above, so neigh/deg is the exact robust
+        # center the aggregation used
+        V = jnp.stack(list(views) + [U], axis=0)
+        Mv = jnp.ones((V.shape[0],), dtype)
+        agg_rejected = jnp.sum(
+            exchange.aggregator_audit(V, Mv, neigh / deg)
+        )
 
     # --- the shared per-agent body ---------------------------------------
     msgs = NeighborMsgs(neigh, ct_lam, deg, tau_t, zeta_t)
@@ -1675,6 +1814,7 @@ def ring_iteration(
     gamma_sum = jnp.zeros((), dtype)
     gamma_min = jnp.asarray(jnp.inf, dtype)
     lag_pen = jnp.zeros((), dtype)
+    resid_max = jnp.zeros((), dtype)
     for ax_i, ax in enumerate(agent_axes):
         u_next_new = _ring_recv_from_next(U_new, ax)
         resid_new = U_new - u_next_new                  # \hat C_i U^{k+1}
@@ -1690,6 +1830,11 @@ def ring_iteration(
         lag_pen = lag_pen + own * (
             jnp.sum(lam_ax * resid_new) + 0.5 * cfg.rho * jnp.sum(resid_new**2)
         )
+        if cfg.telemetry:
+            resid_max = jnp.maximum(
+                resid_max,
+                jnp.where(own > 0, jnp.max(jnp.abs(resid_new)), 0.0),
+            )
     lam_new = jnp.stack(lam_new)
 
     diag = {
@@ -1698,6 +1843,14 @@ def ring_iteration(
         "gamma_min": gamma_min,
         "lag_pen": lag_pen,
     }
+    if cfg.telemetry:
+        diag["resid_max"] = resid_max
+        diag["agg_rejected"] = agg_rejected
+        # every ring view arrives fresh each iteration (synchronous
+        # ppermute): deg deliveries per shard, nothing stale or dropped
+        diag["msgs_delivered"] = deg
+        diag["msgs_stale"] = jnp.zeros((), dtype)
+        diag["msgs_dropped"] = jnp.zeros((), dtype)
     return AgentState(U_new, A_new, lam_new), diag
 
 
@@ -1780,6 +1933,11 @@ def _make_sharded_runner(
         diags = _assemble_sharded_diags(
             diags, len(torus_edges(sizes)), L * cfg.r
         )
+        if cfg.telemetry:
+            model = modeled_floats_per_iter(
+                "sharded", L=L, r=cfg.r, m=m, n_axes=n_axes
+            )
+            diags["comm_floats"] = jnp.full((n,), float(model), dtype)
         return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags
 
     return Runner("sharded", cfg, init_fn, segment_fn, shardings_fn)
@@ -1985,6 +2143,15 @@ def _make_sharded_graph_runner(
             ct_lam = sgx.ship_ct_lam(lam, slots, own)
             u_start_nb = sgx.exchange(U_start)  # also resid_old for duals
             nb = u_start_nb
+            agg_rejected = jnp.zeros((), dtype)
+            if cfg.telemetry and robust_agg is not None:
+                # reduce_views returns deg_t * agg(V, Mv), so dividing the
+                # degree back out recovers the exact robust center audited
+                neigh0 = sgx.reduce_views(u_start_nb, U_start, deg_t, rmask)
+                agg_rejected = sgx.audit_views(
+                    u_start_nb, U_start, rmask,
+                    neigh0 / jnp.maximum(deg_t, 1.0),
+                )
             for p in range(n_phases):
                 if p > 0:
                     nb = sgx.exchange(U)        # live U: Gauss-Seidel phases
@@ -2005,6 +2172,7 @@ def _make_sharded_graph_runner(
             gamma_sum = jnp.zeros((), dtype)
             gamma_min = jnp.asarray(jnp.inf, dtype)
             lag_pen = jnp.zeros((), dtype)
+            resid_max = jnp.zeros((), dtype)
             for rr in range(n_rounds):
                 resid_new = U - u_new_nb[rr]            # C_i U^{k+1} on src
                 resid_old = U_start - u_start_nb[rr]    # C_i U^k on src
@@ -2023,6 +2191,11 @@ def _make_sharded_graph_runner(
                     jnp.sum(lam_upd * resid_new)
                     + 0.5 * cfg.rho * jnp.sum(resid_new**2)
                 )
+                if cfg.telemetry:
+                    resid_max = jnp.maximum(
+                        resid_max,
+                        jnp.where(o > 0, jnp.max(jnp.abs(resid_new)), 0.0),
+                    )
             diag = {
                 "obj": _local_objective(stats_t, U, A, cfg, m),
                 "lag_pen": lag_pen,
@@ -2030,6 +2203,14 @@ def _make_sharded_graph_runner(
                 "gamma_sum": gamma_sum,
                 "gamma_min": gamma_min,
             }
+            if cfg.telemetry:
+                diag["resid_max"] = resid_max
+                diag["agg_rejected"] = agg_rejected
+                # every scheduled round delivers a fresh view (synchronous
+                # compiled schedule): rmask counts this shard's receptions
+                diag["msgs_delivered"] = jnp.sum(rmask)
+                diag["msgs_stale"] = jnp.zeros((), dtype)
+                diag["msgs_dropped"] = jnp.zeros((), dtype)
             return AgentState(U, A, lam), diag
 
         final, diags = jax.lax.scan(
@@ -2051,6 +2232,12 @@ def _make_sharded_graph_runner(
         lam_hist_blk = None
         if aged_duals:
             lam_hist_blk = ops[idx]
+            idx += 1
+        rmask_t = None
+        if cfg.telemetry:
+            # (rounds,) schedule mask of this shard — distinguishes rounds
+            # never scheduled from scheduled-but-dead (dropped) receptions
+            rmask_t = ops[idx][0]
             idx += 1
         age_b, live_b, act_b = ops[idx:idx + 3]
         idx += 3
@@ -2087,6 +2274,7 @@ def _make_sharded_graph_runner(
                 offset=offset_c, init_u=init_u,
             )
             deg_eff = jnp.sum(live_row)         # live degree (exact fp32)
+            agg_rejected = jnp.zeros((), dtype)
             if robust_agg is None:
                 # round-order sum; `* live_row[rr]` is an exact bitwise
                 # pass-through (x * 1.0) on a zero-adversary tape
@@ -2100,6 +2288,10 @@ def _make_sharded_graph_runner(
                 Mv = jnp.concatenate([live_row, jnp.ones((1,), dtype)])
                 center = robust_agg(V, Mv)
                 neigh = deg_eff * center
+                if cfg.telemetry:
+                    agg_rejected = jnp.sum(
+                        exchange.aggregator_audit(V, Mv, center)
+                    )
             tau_eff = (
                 tau0 + deg_eff if (is_adv and scalar_tau) else tau_t
             )
@@ -2140,6 +2332,7 @@ def _make_sharded_graph_runner(
             gamma_sum = jnp.zeros((), dtype)
             gamma_min = jnp.asarray(jnp.inf, dtype)
             lag_pen = jnp.zeros((), dtype)
+            resid_max = jnp.zeros((), dtype)
             for rr in range(n_rounds):
                 resid_new = (U_new - nb_new[rr]) * live_row[rr]
                 resid_old = (U_base - nb_old[rr]) * live_row[rr]
@@ -2160,6 +2353,11 @@ def _make_sharded_graph_runner(
                     jnp.sum(lam_upd * resid_new)
                     + 0.5 * cfg.rho * jnp.sum(resid_new**2)
                 )
+                if cfg.telemetry:
+                    resid_max = jnp.maximum(
+                        resid_max,
+                        jnp.where(o > 0, jnp.max(jnp.abs(resid_new)), 0.0),
+                    )
             hist = hist.at[jnp.mod(k, depth)].set(U_new)
             if aged_duals:
                 lam_hist = lam_hist.at[jnp.mod(k, depth)].set(lam)
@@ -2170,6 +2368,16 @@ def _make_sharded_graph_runner(
                 "gamma_sum": gamma_sum,
                 "gamma_min": gamma_min,
             }
+            if cfg.telemetry:
+                fresh = (age_row == 1).astype(dtype)
+                diag["resid_max"] = resid_max
+                diag["agg_rejected"] = agg_rejected
+                # live receptions split by age (age==1 is a fresh current-
+                # round view, matching fit_async's accounting); scheduled
+                # rounds whose edge is dead this tick count as dropped
+                diag["msgs_delivered"] = jnp.sum(live_row * fresh)
+                diag["msgs_stale"] = jnp.sum(live_row * (1.0 - fresh))
+                diag["msgs_dropped"] = jnp.sum(rmask_t - live_row)
             carry = (U_new, A_new, lam, hist)
             if aged_duals:
                 carry = carry + (lam_hist,)
@@ -2229,6 +2437,11 @@ def _make_sharded_graph_runner(
                 state.U, state.A, state.lam
             )
             diags = _assemble_sharded_diags(diags, g.n_edges, L * cfg.r)
+            if cfg.telemetry:
+                model = modeled_floats_per_iter(
+                    "sharded_graph", L=L, r=cfg.r, n_edges=g.n_edges
+                )
+                diags["comm_floats"] = jnp.full((n,), float(model), dtype)
             return state._replace(U=U, A=A, lam=lam, k=state.k + n), diags
 
         k0 = int(jax.device_get(state.k))
@@ -2246,6 +2459,9 @@ def _make_sharded_graph_runner(
         specs = [spec_batched] * 13
         if aged_duals:
             ops.append(state.lam_hist)
+            specs.append(spec_batched)
+        if cfg.telemetry:
+            ops.append(rmask_all)
             specs.append(spec_batched)
         # per-tick rows sliced [k0, k0 + n) host-side and threaded with
         # the ABSOLUTE tick, so ring-buffer slots (k - age) mod depth are
@@ -2282,6 +2498,11 @@ def _make_sharded_graph_runner(
             lam_hist = None
         diags = _assemble_sharded_diags(diags, g.n_edges, L * cfg.r)
         diags["tape_cursor"] = jnp.arange(k0, k0 + n, dtype=jnp.int32)
+        if cfg.telemetry:
+            model = modeled_floats_per_iter(
+                "sharded_graph", L=L, r=cfg.r, n_edges=g.n_edges
+            )
+            diags["comm_floats"] = jnp.full((n,), float(model), dtype)
         return RunState(
             U=U, A=A, lam=lam, k=state.k + n, hist=hist,
             lam_hist=lam_hist,
@@ -2355,6 +2576,26 @@ def make_runner(
     """
     if cfg is None:
         raise ValueError("make_runner requires a ConsensusConfig")
+    tr = obs_trace.current()
+    if tr is not None:
+        with tr.span("compile", executor=executor):
+            return _dispatch_runner(
+                stats, g, cfg, executor=executor, mesh=mesh,
+                agent_axes=agent_axes, schedule=schedule,
+                staleness=staleness, order=order, tape=tape,
+                aged_duals=aged_duals,
+            )
+    return _dispatch_runner(
+        stats, g, cfg, executor=executor, mesh=mesh, agent_axes=agent_axes,
+        schedule=schedule, staleness=staleness, order=order, tape=tape,
+        aged_duals=aged_duals,
+    )
+
+
+def _dispatch_runner(
+    stats, g, cfg, *, executor, mesh, agent_axes, schedule, staleness,
+    order, tape, aged_duals,
+) -> Runner:
     if executor == "dense":
         return _make_dense_runner(stats, g, cfg)
     if executor == "colored":

@@ -133,6 +133,37 @@ def stack_ring_candidates(views, U, deg, agg, dtype):
     return deg * agg(V, Mv)
 
 
+def aggregator_audit(V, M, center):
+    """Telemetry: per-candidate Byzantine-rejection flags of one robust
+    reduce (the ``agg_rejected`` counter's definition, shared by every
+    executor).
+
+    A candidate is flagged *rejected* when its Frobenius distance to the
+    robust ``center`` is a distance outlier among the valid neighbor
+    candidates: more than 10x the masked median distance AND above an
+    absolute floor of ``1e-6 * (1 + ||center||_F)``.  The trailing
+    candidate (every table builder appends own U last) is excluded —
+    the audit is about *messages*, not the local iterate.  Both gates
+    make a clean federation audit to an exact zero: identical early-tick
+    candidates have distance 0 (fails ``> 10 * median``), and a
+    converged spread sits under the absolute floor.  ``V`` is
+    ``(..., K, L, r)``, ``M`` ``(..., K)``; returns {0,1} flags of shape
+    ``(..., K)`` in ``V.dtype`` for the caller to sum.
+    """
+    d = jnp.sqrt(jnp.sum((V - center[..., None, :, :]) ** 2, axis=(-2, -1)))
+    K = V.shape[-3]
+    valid = (M > 0) & (jnp.arange(K) < K - 1)
+    big = jnp.asarray(jnp.finfo(d.dtype).max, d.dtype)
+    ds = jnp.sort(jnp.where(valid, d, big), axis=-1)
+    n = jnp.maximum(jnp.sum(valid, axis=-1).astype(jnp.int32), 1)
+    lo = jnp.take_along_axis(ds, ((n - 1) // 2)[..., None], axis=-1)[..., 0]
+    hi = jnp.take_along_axis(ds, (n // 2)[..., None], axis=-1)[..., 0]
+    med = 0.5 * (lo + hi)
+    floor = 1e-6 * (1.0 + jnp.sqrt(jnp.sum(center**2, axis=(-2, -1))))
+    rej = valid & (d > 10.0 * med[..., None]) & (d > floor[..., None])
+    return rej.astype(V.dtype)
+
+
 class DenseExchange:
     """Backend 1: edge-list gathers for the single-program executors.
 
@@ -175,6 +206,13 @@ class DenseExchange:
         return jax.ops.segment_sum(
             lam, self.src, self.m
         ) - jax.ops.segment_sum(lam, self.dst, self.m)
+
+    def audit(self, U):
+        """Telemetry (robust path only): rebuild this round's candidate
+        table and count :func:`aggregator_audit` rejections — a scalar."""
+        V = jnp.concatenate([U[self.nbr_idx], U[:, None]], axis=1)
+        Mv = jnp.concatenate([self.nbr_mask, self.ones_m1], axis=1)
+        return jnp.sum(aggregator_audit(V, Mv, self.agg(V, Mv)))
 
     def gather_views(self, published, duals, round_ctx=None) -> ExchangeViews:
         """The exchange contract, fresh-view form (``round_ctx=None``):
@@ -340,6 +378,15 @@ class ShardedGraphExchange:
         V = jnp.stack(list(nb) + [U], axis=0)       # (rounds + 1, L, r)
         Mv = jnp.concatenate([rmask, jnp.ones((1,), self.dtype)])
         return deg_t * self.agg(V, Mv)
+
+    def audit_views(self, nb, U, rmask, center):
+        """Telemetry (robust path only): shard-local rejection count of
+        one :func:`aggregator_audit` pass over the per-round views + own
+        U — ``rmask`` is the round-live mask (the participation mask on
+        the no-tape path, the tape ``live`` row under replay)."""
+        V = jnp.stack(list(nb) + [U], axis=0)
+        Mv = jnp.concatenate([rmask, jnp.ones((1,), self.dtype)])
+        return jnp.sum(aggregator_audit(V, Mv, center))
 
     def ship_ct_lam(self, lam, slots, own):
         """C_t^T lambda: + the duals this shard owns (unowned slots stay

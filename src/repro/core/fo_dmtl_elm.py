@@ -26,12 +26,14 @@ def fo_dmtl_elm_fit(
     H: jax.Array, T: jax.Array, g: Graph, cfg: DMTLELMConfig, **executor_kw
 ) -> tuple[DMTLELMState, dict]:
     """Algorithm 3 on any executor: forwards ``executor=`` / ``schedule=`` /
-    ``staleness=`` / ``mesh=`` / ``agent_axes=`` — and the checkpointable
+    ``staleness=`` / ``mesh=`` / ``agent_axes=`` — the checkpointable
     execution kwargs ``checkpoint_dir=`` / ``checkpoint_every=`` /
-    ``resume=`` — to :func:`dmtl_elm.fit` (default: the dense Jacobian
-    path, as before).  FO runs checkpoint/resume bitwise exactly like the
-    second-order path: the first-order branch lives inside the shared
-    ``agent_update`` body, below the segmented ``RunState`` core."""
+    ``resume=`` — and the observability kwargs ``telemetry=`` /
+    ``trace_dir=`` / ``health=`` (``repro.obs``) — to :func:`dmtl_elm.fit`
+    (default: the dense Jacobian path, as before).  FO runs
+    checkpoint/resume bitwise exactly like the second-order path: the
+    first-order branch lives inside the shared ``agent_update`` body,
+    below the segmented ``RunState`` core."""
     cfg_fo = dataclasses.replace(cfg, first_order=True)
     if executor_kw:
         return fit(H, T, g, cfg_fo, **executor_kw)

@@ -30,6 +30,8 @@ exchange).
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 from typing import Optional, Sequence
 
 import jax
@@ -40,12 +42,15 @@ from repro.core.engine import AgentState as ShardedDMTLState  # noqa: F401
 from repro.core.engine import ConsensusConfig as DMTLELMConfig
 from repro.core.engine import SufficientStats, ring_iteration  # noqa: F401
 from repro.core.graph import Graph
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
 
 
 def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph], *,
                       tape=None, channel=None, aged_duals: bool = False,
                       checkpoint_dir=None, checkpoint_every: int = 0,
-                      resume: bool = False):
+                      resume: bool = False, telemetry: bool = False,
+                      trace_dir=None, health=None):
     """Torus fast path when ``g`` is None or matches the mesh torus (up to
     edge orientation); the compiled edge-schedule executor otherwise.
     ``tape=`` / ``channel=`` force the compiled path and replay the lossy
@@ -53,7 +58,9 @@ def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph], *,
     required then — the tape is indexed by g's edge list.
     ``checkpoint_dir=`` drives the run through
     ``repro.checkpoint.run_checkpointed`` (periodic resumable snapshots,
-    restored onto the mesh via ``Runner.state_shardings()``)."""
+    restored onto the mesh via ``Runner.state_shardings()``).
+    ``telemetry=`` / ``trace_dir=`` / ``health=`` arm the observability
+    layer exactly as in ``repro.core.dmtl_elm.fit``."""
     if tape is not None and channel is not None:
         raise ValueError("pass at most one of tape= or channel=")
     if (tape is not None or channel is not None) and g is None:
@@ -65,6 +72,11 @@ def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph], *,
         tape = channel.sample(g, cfg.iters)
     if aged_duals and tape is None:
         raise ValueError("aged_duals=True needs a tape= or channel=")
+    if health is not None and health is not False and checkpoint_dir is None:
+        raise ValueError(
+            "health= monitoring runs at checkpoint segment boundaries; "
+            "pass checkpoint_dir= (and checkpoint_every=) to arm it"
+        )
     torus = g is None
     if not torus and tape is None:
         sizes = [mesh.shape[ax] for ax in agent_axes]
@@ -72,21 +84,41 @@ def _dispatch_sharded(stats, mesh, agent_axes, cfg, g: Optional[Graph], *,
             all(s >= 2 for s in sizes)
             and engine.graph_matches_torus(g, sizes)
         )
-    runner = engine.make_runner(
-        stats, g, cfg,
-        executor="sharded" if torus else "sharded_graph",
-        mesh=mesh, agent_axes=agent_axes,
-        tape=tape, aged_duals=aged_duals,
-    )
-    if checkpoint_dir is not None:
-        from repro.checkpoint import run_checkpointed
-
-        state, diags = run_checkpointed(
-            runner, checkpoint_dir=checkpoint_dir,
-            checkpoint_every=checkpoint_every, resume=resume,
+    if telemetry:
+        cfg = dataclasses.replace(cfg, telemetry=True)
+    tracer = None
+    trace_ctx = contextlib.nullcontext()
+    if trace_dir is not None:
+        tracer = obs_trace.Tracer()
+        trace_ctx = obs_trace.use(tracer)
+    exec_name = "sharded" if torus else "sharded_graph"
+    with trace_ctx:
+        runner = engine.make_runner(
+            stats, g, cfg,
+            executor=exec_name,
+            mesh=mesh, agent_axes=agent_axes,
+            tape=tape, aged_duals=aged_duals,
         )
-    else:
-        state, diags = runner.run()
+        if checkpoint_dir is not None:
+            from repro.checkpoint import run_checkpointed
+
+            state, diags = run_checkpointed(
+                runner, checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, resume=resume,
+                health=health,
+            )
+        else:
+            state, diags = runner.run()
+    if tracer is not None:
+        tracer.export(trace_dir)
+        obs_report.write(
+            trace_dir, diags, tracer.spans,
+            meta={
+                "executor": exec_name, "m": stats.G.shape[0],
+                "iters": cfg.iters, "aggregator": cfg.aggregator,
+                "telemetry": bool(cfg.telemetry),
+            },
+        )
     return state.U, state.A, diags
 
 
@@ -106,6 +138,9 @@ def dmtl_fit_from_stats(
     checkpoint_dir=None,
     checkpoint_every: int = 0,
     resume: bool = False,
+    telemetry: bool = False,
+    trace_dir=None,
+    health=None,
 ):
     """ADMM over precomputed per-agent Gram stats.
 
@@ -127,7 +162,9 @@ def dmtl_fit_from_stats(
     via the exchange-layer tape driver — requires an explicit ``g``;
     ``aged_duals=True`` ships duals through the lossy channel too.
     ``checkpoint_dir=``/``checkpoint_every=``/``resume=`` make the run
-    preemption-safe (see ``repro.checkpoint.run_checkpointed``).
+    preemption-safe (see ``repro.checkpoint.run_checkpointed``);
+    ``telemetry=``/``trace_dir=``/``health=`` arm the observability layer
+    (``repro.obs``; same semantics as ``repro.core.dmtl_elm.fit``).
     """
     stats = SufficientStats(
         G=G_all, R=HtT_all,
@@ -137,6 +174,7 @@ def dmtl_fit_from_stats(
         stats, mesh, agent_axes, cfg, g, tape=tape, channel=channel,
         aged_duals=aged_duals, checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every, resume=resume,
+        telemetry=telemetry, trace_dir=trace_dir, health=health,
     )
 
 
@@ -154,6 +192,9 @@ def dmtl_elm_fit_sharded(
     checkpoint_dir=None,
     checkpoint_every: int = 0,
     resume: bool = False,
+    telemetry: bool = False,
+    trace_dir=None,
+    health=None,
 ):
     """Driver: H (m, N, L), T (m, N, d) sharded over agent axes; scan ADMM.
 
@@ -164,11 +205,14 @@ def dmtl_elm_fit_sharded(
     ``tape=`` or ``channel=`` replays a lossy / Byzantine network in-mesh
     (requires an explicit ``g``); ``aged_duals=True`` ages the shipped
     duals too.  ``checkpoint_dir=``/``checkpoint_every=``/``resume=`` make
-    the run preemption-safe (see ``repro.checkpoint.run_checkpointed``).
+    the run preemption-safe (see ``repro.checkpoint.run_checkpointed``);
+    ``telemetry=``/``trace_dir=``/``health=`` arm the observability layer
+    (``repro.obs``; same semantics as ``repro.core.dmtl_elm.fit``).
     """
     stats = engine.sufficient_stats(H, T, precision=cfg.stats_precision)
     return _dispatch_sharded(
         stats, mesh, agent_axes, cfg, g, tape=tape, channel=channel,
         aged_duals=aged_duals, checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every, resume=resume,
+        telemetry=telemetry, trace_dir=trace_dir, health=health,
     )

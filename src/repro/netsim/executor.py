@@ -80,6 +80,7 @@ from repro.core.engine import (
 )
 from repro.core.graph import Graph
 from repro.netsim.events import EventTape, validate_tape
+from repro.obs.counters import modeled_floats_per_iter
 
 
 def make_async_runner(
@@ -206,6 +207,25 @@ def make_async_runner(
             stats, cfg, U_new, A_new, lam_new, resid_new, gamma, primal
         )
         diag["tape_cursor"] = k
+        if cfg.telemetry:
+            # per-directed-edge delivery accounting straight off the tape
+            # row: age==1 is a fresh (current-round) view, age>1 a stale
+            # ring-buffer serve; dead edges (membership churn) are drops
+            fresh = (age_k == 1).astype(dtype)
+            if is_adv:
+                lv = el[None, :]
+                diag["msgs_delivered"] = jnp.sum(fresh * lv)
+                diag["msgs_stale"] = jnp.sum((1.0 - fresh) * lv)
+                diag["msgs_dropped"] = 2.0 * jnp.sum(1.0 - el)
+            else:
+                diag["msgs_delivered"] = jnp.sum(fresh)
+                diag["msgs_stale"] = jnp.sum(1.0 - fresh)
+                diag["msgs_dropped"] = jnp.zeros((), dtype)
+            diag["agg_rejected"] = (
+                jnp.sum(exchange.aggregator_audit(gv.table, gv.mask,
+                                                  gv.center))
+                if robust_agg is not None else jnp.zeros((), dtype)
+            )
         return (U_new, A_new, lam_new, hist, lam_hist), diag
 
     def init_fn():
@@ -272,6 +292,11 @@ def make_async_runner(
             )
         carry0 = (state.U, state.A, state.lam, state.hist, state.lam_hist)
         (U, A, lam, hist, lam_hist), diags = jax.lax.scan(step, carry0, xs)
+        if cfg.telemetry:
+            model = modeled_floats_per_iter(
+                "async", L=stats.G.shape[-1], r=cfg.r, n_edges=E
+            )
+            diags["comm_floats"] = jnp.full((n,), float(model), dtype)
         return RunState(
             U=U, A=A, lam=lam, k=state.k + n, hist=hist, lam_hist=lam_hist,
         ), diags

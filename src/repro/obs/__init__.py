@@ -1,0 +1,32 @@
+"""Observability layer: span tracing, health monitors, comm counters,
+and run reports (see ``repro.obs.trace`` for the design contract).
+
+Deliberately free of ``repro.core`` imports so the checkpoint runtime and
+the bench drivers can use it without import cycles.
+"""
+
+from repro.obs.counters import modeled_floats_per_iter
+from repro.obs.health import HealthConfig, check_health, classify_run
+from repro.obs.trace import (
+    Tracer,
+    current,
+    span,
+    timed,
+    use,
+    validate_trace,
+)
+from repro.obs import report
+
+__all__ = [
+    "HealthConfig",
+    "Tracer",
+    "check_health",
+    "classify_run",
+    "current",
+    "modeled_floats_per_iter",
+    "report",
+    "span",
+    "timed",
+    "use",
+    "validate_trace",
+]

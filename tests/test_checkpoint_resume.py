@@ -346,6 +346,34 @@ _EXECUTOR_SETUPS = {
             mesh=mesh, agent_axes=("agents",), tape=tape, aged_duals=True)
         """
     ),
+    # telemetry diag extension (cfg.telemetry): the counter keys ride the
+    # same ``diags/<key>`` serialization as the base keys, so a killed
+    # telemetry-on run must resume bitwise INCLUDING the counters — and
+    # set(dg) == set(odg) below pins that no key is lost across a resume
+    "dense_telemetry": textwrap.dedent(
+        """
+        import dataclasses
+        cfg = dataclasses.replace(cfg, telemetry=True)
+        runner = engine.make_runner(stats, g, cfg, executor="dense")
+        """
+    ),
+    # telemetry on the in-mesh tape driver adds a per-round mask op to the
+    # scan inputs and the audit reduction to the robust branch — the
+    # heaviest telemetry path, resumed mid-tape
+    "sharded_tape_telemetry": textwrap.dedent(
+        """
+        import dataclasses
+        from repro.netsim.channels import ChannelModel
+        cfg = dataclasses.replace(cfg, telemetry=True,
+                                  aggregator="coordinate_median")
+        mesh = jax.make_mesh((m,), ("agents",))
+        tape = ChannelModel(delay="geometric", scale=1.0, drop=0.1,
+                            seed=3).sample(g, cfg.iters)
+        runner = engine.make_runner(
+            stats, g, cfg, executor="sharded_graph",
+            mesh=mesh, agent_axes=("agents",), tape=tape)
+        """
+    ),
     "async": textwrap.dedent(
         """
         from repro.netsim.channels import ChannelModel
